@@ -1,0 +1,101 @@
+"""Paper Figures 1–3: relative confidence-bound width vs. scan progress,
+for 1/2/4/8 partitions, single vs. multiple estimators, across the three
+aggregation tasks (Q6 agg low/high selectivity, Q1 group-by small/large,
+join group-by).
+
+The paper plots width vs. *time* at fixed per-node data (scale-up); on one
+CPU we plot width vs. scanned fraction with partitions processing in
+parallel rounds — the shape of the curves and the parallelism effect
+(more partitions ⇒ more result tuples found per round at the same
+per-partition progress) reproduce Figs. 1–3.  Output: CSV rows
+
+    task,estimator,partitions,round,frac_scanned,rel_width
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine, gla, randomize
+from repro.data import tpch
+
+ROWS = 1_000_000
+ROUNDS = 10
+CHUNK = 1024
+
+
+def _shards(parts, seed=7):
+    cols = tpch.generate_lineitem(ROWS, seed=seed)
+    parts_ = randomize.randomize_global(
+        {k: jnp.asarray(v) for k, v in cols.items()}, jax.random.key(seed),
+        parts)
+    # pad the chunk count to a multiple of ROUNDS so every configuration
+    # yields the same number of snapshot rounds
+    n_chunks = -(-ROWS // parts // CHUNK)
+    return randomize.pack_partitions(
+        parts_, chunk_len=CHUNK, min_chunks=-(-n_chunks // ROUNDS) * ROUNDS)
+
+
+def _tasks():
+    supp, valid = tpch.supplier_nation_table()
+    return {
+        "agg_low": dict(maker=lambda est: gla.make_sum_gla(
+            tpch.q6_func, tpch.q6_cond(tpch.Q6_LOW_WINDOW),
+            d_total=float(ROWS), estimator=est)),
+        "agg_high": dict(maker=lambda est: gla.make_sum_gla(
+            tpch.q6_func, tpch.q6_cond(tpch.Q6_HIGH_WINDOW),
+            d_total=float(ROWS), estimator=est)),
+        "groupby_small": dict(maker=lambda est: gla.make_groupby_gla(
+            tpch.q1_func, tpch.q1_cond, tpch.q1_group_small, num_groups=4,
+            d_total=float(ROWS), estimator=est, num_aggs=4), group=2),
+        "groupby_large": dict(maker=lambda est: gla.make_groupby_gla(
+            tpch.q1_func, tpch.q1_cond, tpch.q1_group_large, num_groups=1000,
+            d_total=float(ROWS), estimator=est, num_aggs=4), group=123),
+        "join_groupby": dict(maker=lambda est: gla.make_join_groupby_gla(
+            tpch.q1_func, tpch.q6_cond(tpch.Q6_LOW_WINDOW),
+            lambda c: c["suppkey"], supp, valid, num_groups=tpch.NUM_NATIONS,
+            d_total=float(ROWS), estimator=est, num_aggs=4), group=7),
+    }
+
+
+def rel_width(est, task_info):
+    lo = np.asarray(est.lower, np.float64)
+    hi = np.asarray(est.upper, np.float64)
+    mid = np.asarray(est.estimate, np.float64)
+    if lo.ndim == 3:                      # [R, G, A] group-by: pick group, agg 3
+        g = task_info.get("group", 0)
+        lo, hi, mid = lo[:, g, -1], hi[:, g, -1], mid[:, g, -1]
+    elif lo.ndim == 2:
+        lo, hi, mid = lo[:, 0], hi[:, 0], mid[:, 0]
+    return (hi - lo) / np.maximum(np.abs(mid), 1e-12)
+
+
+def run(tasks=None, out=sys.stdout):
+    names = tasks or list(_tasks().keys())
+    infos = _tasks()
+    print("task,estimator,partitions,round,frac_scanned,rel_width", file=out)
+    for task in names:
+        info = infos[task]
+        for parts in (1, 2, 4, 8):
+            shards = _shards(parts)
+            C = shards["_mask"].shape[1]
+            rounds = ROUNDS
+            while C % rounds:
+                rounds -= 1
+            for est_kind in ("single", "multiple"):
+                g = info["maker"](est_kind)
+                res = engine.run_query(g, shards, rounds=rounds, emit="round")
+                w = rel_width(res.estimates, info)
+                scanned = np.asarray(res.snapshots.scanned if hasattr(
+                    res.snapshots, "scanned") else res.snapshots.base.scanned)
+                for r in range(rounds):
+                    print(f"{task},{est_kind},{parts},{r},"
+                          f"{float(scanned[r]) / ROWS:.4f},{w[r]:.6f}",
+                          file=out)
+
+
+if __name__ == "__main__":
+    run(tasks=sys.argv[1:] or None)

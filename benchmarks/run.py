@@ -1,0 +1,85 @@
+"""Benchmark driver — one section per paper table/figure.
+
+    python -m benchmarks.run            # everything (CSV to stdout)
+    python -m benchmarks.run quick      # skip the heavier sweeps
+
+Sections:
+  * kernels      — jitted hot-loop throughput (chunk/group aggregation)
+  * overhead     — paper Table 2 (estimation overhead incl. synchronized)
+  * convergence  — paper Figs. 1–3 (relative CI width curves)
+  * roofline     — §Roofline table from the dry-run artifacts (if present)
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _bench(fn, repeats=5):
+    fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6
+
+
+def kernels_section():
+    """Throughput of the aggregation hot loops (pure-jnp reference path on
+    CPU; the Pallas kernels target TPU and are validated in tests)."""
+    from repro.kernels import ref
+    print("name,us_per_call,derived")
+    n = 1 << 20
+    rng = np.random.default_rng(0)
+    vals = jnp.asarray(rng.normal(size=n), jnp.float32)
+    w = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
+    m = jnp.ones(n, jnp.float32)
+    f = jax.jit(ref.chunk_agg_ref)
+    us = _bench(lambda: jax.block_until_ready(f(vals, w, m)))
+    print(f"kernel_chunk_agg_1M,{us:.0f},GBps={n * 12 / us / 1e3:.2f}")
+    gids = jnp.asarray(rng.integers(0, 1000, n), jnp.int32)
+    va = jnp.asarray(rng.normal(size=(n, 4)), jnp.float32)
+    g = jax.jit(lambda v, w_, i: ref.group_agg_ref(v, w_, i, 1000))
+    us = _bench(lambda: jax.block_until_ready(g(va, w, gids)))
+    print(f"kernel_group_agg_1Mx4_1000g,{us:.0f},GBps={n * 20 / us / 1e3:.2f}")
+
+
+def main():
+    quick = len(sys.argv) > 1 and sys.argv[1] == "quick"
+    print("# === kernels ===")
+    kernels_section()
+
+    print("# === overhead (paper Table 2) ===")
+    from benchmarks import overhead
+    overhead.run()
+
+    print("# === convergence (paper Figs 1-3) ===")
+    from benchmarks import convergence
+    tasks = ["agg_low", "agg_high"] if quick else None
+    convergence.run(tasks=tasks)
+
+    print("# === roofline (dry-run artifacts) ===")
+    try:
+        from benchmarks import roofline
+        rows = roofline.analyze("single")
+        if not rows:
+            print("no dry-run artifacts; run: python -m repro.launch.dryrun --all")
+        print("name,us_per_call,derived")
+        for r in rows:
+            if r["status"] != "OK":
+                continue
+            dom_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            print(f"roofline_{r['cell']},{dom_s * 1e6:.0f},"
+                  f"bottleneck={r['bottleneck']};"
+                  f"fraction={r['roofline_fraction']:.3f}")
+    except Exception as e:  # artifacts absent in fresh checkouts
+        print(f"roofline skipped: {e}")
+
+
+if __name__ == "__main__":
+    main()

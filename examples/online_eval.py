@@ -1,0 +1,74 @@
+"""On-line aggregation over a *model* computation: dataset-level eval loss
+with anytime confidence bounds (paper query (1) with func = loss).
+
+Trains a small LM for a few steps, then streams a 32K-example eval corpus
+through the OLA engine; the mean loss estimate tightens every round and the
+sweep can stop early at a target precision — the paper's interactive
+exploration, applied to ML evaluation.
+
+    PYTHONPATH=src python examples/online_eval.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import engine, metrics, randomize
+from repro.models import transformer as T
+from repro.training import train_step as TS
+
+SEQ = 32
+EVAL_EXAMPLES = 32_768
+PARTS = 8
+TARGET_REL_WIDTH = 0.01
+
+
+def main():
+    cfg = get_config("smollm_135m").smoke()
+    key = jax.random.key(0)
+    params, opt = TS.init_train_state(cfg, key, dtype=jnp.float32)
+    step = jax.jit(TS.make_train_step(cfg, lr=3e-3))
+    for i in range(5):
+        batch = {"tokens": jax.random.randint(jax.random.key(100 + i),
+                                              (8, SEQ), 0, cfg.vocab_size)}
+        params, opt, m = step(params, opt, batch)
+    print(f"trained 5 steps, loss {float(m['loss']):.3f}")
+
+    # eval corpus as a columnar dataset: one row per example
+    toks = jax.random.randint(jax.random.key(7), (EVAL_EXAMPLES, SEQ),
+                              0, cfg.vocab_size)
+    cols = {f"t{j}": toks[:, j] for j in range(SEQ)}
+
+    def loss_per_example(chunk):
+        tt = jnp.stack([chunk[f"t{j}"] for j in range(SEQ)], axis=1)
+        x, _, _ = T.forward(params, cfg, {"tokens": tt})
+        tgt = jnp.pad(tt[:, 1:], ((0, 0), (0, 1)))
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        logits = (x @ head).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+        nll = (lse - gold)[:, :-1]
+        return jnp.mean(nll, axis=1)
+
+    parts = randomize.randomize_global(cols, jax.random.key(1), PARTS)
+    shards = randomize.pack_partitions(parts, chunk_len=256)
+    g = metrics.make_loss_gla(loss_per_example, d_total=float(EVAL_EXAMPLES))
+    res = engine.run_query(g, shards, rounds=8)
+    mean, lo, hi = metrics.mean_with_bounds(res.estimates)
+    print(f"{'scanned':>8s} {'mean loss':>10s} {'95% CI':>19s} {'rel.w':>7s}")
+    for r in range(len(mean)):
+        frac = float(np.asarray(res.snapshots.scanned)[r]) / EVAL_EXAMPLES
+        w = (hi[r] - lo[r]) / max(abs(mean[r]), 1e-9)
+        marker = "  <-- could stop here" if w <= TARGET_REL_WIDTH else ""
+        print(f"{frac:7.0%} {mean[r]:10.4f} [{lo[r]:8.4f},{hi[r]:8.4f}] "
+              f"{w:7.4f}{marker}")
+
+
+if __name__ == "__main__":
+    main()

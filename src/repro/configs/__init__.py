@@ -1,0 +1,2 @@
+"""Architecture configs.  ``get_config(arch_id)`` resolves any assigned arch."""
+from repro.configs.base import ArchConfig, get_config, list_archs  # noqa: F401

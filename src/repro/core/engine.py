@@ -1,0 +1,413 @@
+"""The PF-OLA execution engine — paper §3.2–§3.4, adapted to SPMD JAX.
+
+Execution model (DESIGN.md §2):
+
+  * a *partition* is the unit of data locality (a GLADE worker node).  In the
+    vmapped path partitions are a leading array axis (used by tests/benchmarks
+    on 1 CPU device); in the sharded path partitions are devices along the
+    ``data`` mesh axis under ``jax.shard_map`` (used by the dry-run and real
+    deployments).  Both paths run the *same* GLA and the same math.
+  * within a partition, chunks are consumed by ``lax.scan`` — the analogue of
+    DataPath work-units pulling chunks.  ``lanes > 1`` keeps several GLA
+    states per partition (the paper's "list of GLA states bounded by the
+    number of work units") and merges them on demand, which makes the
+    associative-decomposability contract *observable* and testable.
+  * a *snapshot* (partial-result request, paper §3.4) is the scan carry
+    emitted at a round boundary.  The state already exists — emission adds no
+    recompute and no extra data pass; this is the zero-overhead property,
+    verified by benchmarks/overhead.py (wall time) and HLO cost analysis.
+  * *stragglers / asynchrony*: a ``schedule`` gives each partition its own
+    cumulative chunk-progress curve.  Async snapshots take each partition at
+    its own progress (valid for the single estimator under global
+    randomization); ``mode="sync"`` truncates every partition to the global
+    minimum progress — the Wu et al. barrier — and, in the sharded path,
+    pays a per-chunk collective, reproducing that estimator's overhead
+    mechanistically.
+  * node failure: ``alive`` masks partitions out of merging; see
+    repro/dist/fault.py for the estimator-level consequences (paper §4.6).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.uda import GLA, Estimate
+
+Pytree = Any
+
+
+class QueryResult(NamedTuple):
+    final: Any                    # gla.terminate(fully merged state)
+    snapshots: Optional[Pytree]   # merged per-round states, leaves [R, ...]
+    estimates: Optional[Estimate]  # per-round Estimate, leaves [R, ...]
+    d_total: jnp.ndarray
+    d_local: jnp.ndarray          # [P]
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _stack_init(gla: GLA, lanes: int) -> Pytree:
+    s = gla.init()
+    if lanes == 1:
+        return s
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (lanes,) + x.shape), s)
+
+
+def _fold_merge(merge, states: Pytree, n: int) -> Pytree:
+    acc = jax.tree.map(lambda x: x[0], states)
+    for i in range(1, n):
+        acc = merge(acc, jax.tree.map(lambda x: x[i], states))
+    return acc
+
+
+def _accumulate_chunk(gla: GLA, states: Pytree, chunk: dict, lanes: int):
+    """Advance lane states by one chunk; return (states, lane-merged view)."""
+    if lanes == 1:
+        st = gla.accumulate(states, chunk)
+        return st, st
+    lc = {k: v.reshape(lanes, -1) for k, v in chunk.items()}
+    st = jax.vmap(gla.accumulate)(states, lc)
+    return st, _fold_merge(gla.merge, st, lanes)
+
+
+def uniform_schedule(num_partitions: int, num_chunks: int, rounds: int) -> np.ndarray:
+    """Cumulative chunk boundaries [P, R+1]; round r covers [b[r], b[r+1])."""
+    b = np.round(np.linspace(0, num_chunks, rounds + 1)).astype(np.int32)
+    return np.broadcast_to(b, (num_partitions, rounds + 1)).copy()
+
+
+def straggler_schedule(
+    num_partitions: int, num_chunks: int, rounds: int, speeds, seed: int = 0
+) -> np.ndarray:
+    """Per-partition progress curves under heterogeneous speeds.
+
+    ``speeds[p]`` is partition p's relative throughput; progress accrues
+    proportionally with small multiplicative jitter, capped at num_chunks.
+    Every partition eventually finishes (last round = full scan) so the query
+    completes — stragglers only delay, as in the paper's asynchronous model.
+    """
+    rng = np.random.default_rng(seed)
+    speeds = np.asarray(speeds, np.float64)
+    base = num_chunks / speeds.max()
+    sched = np.zeros((num_partitions, rounds + 1), np.int32)
+    for p in range(num_partitions):
+        jitter = rng.uniform(0.85, 1.15, rounds)
+        inc = speeds[p] * base / rounds * jitter
+        cum = np.minimum(np.cumsum(inc), num_chunks)
+        sched[p, 1:] = np.round(cum).astype(np.int32)
+    sched[:, -1] = num_chunks  # completion
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# per-partition scans
+# ---------------------------------------------------------------------------
+
+def _scan_prefix(gla: GLA, cols: dict, lanes: int):
+    """Scan chunks emitting every prefix state (init prepended): [C+1, ...].
+
+    Used when snapshots at *arbitrary* per-partition progress are needed
+    (straggler schedules, sync truncation).  State must be small — the
+    emission cost is O(C · |state|) HBM traffic, nothing else.
+    """
+    init = _stack_init(gla, lanes)
+    init_view = _fold_merge(gla.merge, init, lanes) if lanes > 1 else init
+
+    def body(st, chunk):
+        st, view = _accumulate_chunk(gla, st, chunk, lanes)
+        return st, view
+
+    last, prefixes = lax.scan(body, init, cols)
+    prefixes = jax.tree.map(
+        lambda i, p: jnp.concatenate([i[None], p], axis=0), init_view, prefixes
+    )
+    final_view = jax.tree.map(lambda p: p[-1], prefixes)
+    return final_view, prefixes
+
+
+def _scan_rounds(gla: GLA, cols: dict, lanes: int, rounds: int):
+    """Uniform-schedule fast path: emit state only at round boundaries.
+
+    O(|state|·R) emission — usable for large-state GLAs (1M-group group-by).
+    Requires C % rounds == 0.
+    """
+    C = cols["_mask"].shape[0]
+    assert C % rounds == 0, f"uniform rounds path needs C%R==0, got {C}%{rounds}"
+    per = C // rounds
+    rcols = {k: v.reshape((rounds, per) + v.shape[1:]) for k, v in cols.items()}
+    init = _stack_init(gla, lanes)
+
+    def round_body(st, round_cols):
+        def chunk_body(s, chunk):
+            s, _ = _accumulate_chunk(gla, s, chunk, lanes)
+            return s, None
+        st, _ = lax.scan(chunk_body, st, round_cols)
+        view = _fold_merge(gla.merge, st, lanes) if lanes > 1 else st
+        return st, view
+
+    last, views = lax.scan(round_body, init, rcols)
+    final_view = _fold_merge(gla.merge, last, lanes) if lanes > 1 else last
+    return final_view, views
+
+
+def _scan_rounds_masked(gla: GLA, cols: dict, sched: jnp.ndarray, lanes: int):
+    """Arbitrary-schedule path for large-state GLAs: O(R·C) masked scan.
+
+    Round r re-scans all chunks with liveness mask (lo <= c < hi); correctness
+    from the uda mask contract.  Emission is per-round.
+    """
+    C = cols["_mask"].shape[0]
+    R = sched.shape[0] - 1
+    init = _stack_init(gla, lanes)
+
+    def round_body(st, r):
+        lo, hi = sched[r], sched[r + 1]
+
+        def chunk_body(carry, xs):
+            s = carry
+            c, chunk = xs
+            live = ((c >= lo) & (c < hi)).astype(chunk["_mask"].dtype)
+            chunk = dict(chunk)
+            chunk["_mask"] = chunk["_mask"] * live
+            s, _ = _accumulate_chunk(gla, s, chunk, lanes)
+            return s, None
+
+        st, _ = lax.scan(chunk_body, st, (jnp.arange(C), cols))
+        view = _fold_merge(gla.merge, st, lanes) if lanes > 1 else st
+        return st, view
+
+    last, views = lax.scan(round_body, init, jnp.arange(R))
+    final_view = _fold_merge(gla.merge, last, lanes) if lanes > 1 else last
+    return final_view, views
+
+
+# ---------------------------------------------------------------------------
+# vmapped (partition-simulation) path
+# ---------------------------------------------------------------------------
+
+def _merge_over_partitions(gla: GLA, states: Pytree, alive: jnp.ndarray, merge):
+    """Merge states with leading partition axis [P, ...] under an alive mask."""
+    P = alive.shape[0]
+    if gla.merge_is_additive:
+        w = alive.astype(jnp.float32)
+        return jax.tree.map(
+            lambda x: jnp.tensordot(w.astype(x.dtype), x, axes=(0, 0)), states
+        )
+    if not bool(jnp.all(alive)):
+        raise NotImplementedError("alive masks need merge_is_additive")
+    return _fold_merge(merge, states, P)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("gla", "mode", "emit", "lanes", "snapshots", "confidence")
+)
+def _run_vmapped(gla: GLA, shards: dict, sched: jnp.ndarray, alive: jnp.ndarray,
+                 *, mode: str, emit: str, lanes: int, snapshots: bool,
+                 confidence: float):
+    P, C, L = shards["_mask"].shape
+    R = sched.shape[1] - 1
+    d_local = jnp.sum(shards["_mask"], axis=(1, 2))
+    d_total = jnp.sum(d_local)
+
+    if emit == "chunk":
+        finals, prefixes = jax.vmap(lambda c: _scan_prefix(gla, c, lanes))(shards)
+        if snapshots:
+            if mode == "sync":
+                idx = jnp.broadcast_to(jnp.min(sched[:, 1:], axis=0), (P, R))
+            else:
+                idx = sched[:, 1:]
+            round_states = jax.vmap(
+                lambda pref, ix: jax.tree.map(lambda x: x[ix], pref)
+            )(prefixes, idx)  # [P, R, ...]
+        else:
+            round_states = None
+    elif emit == "round":
+        finals, round_states = jax.vmap(
+            lambda c: _scan_rounds(gla, c, lanes, R)
+        )(shards)
+        if mode == "sync":
+            raise NotImplementedError("sync mode requires emit='chunk'")
+    elif emit == "round_masked":
+        finals, round_states = jax.vmap(
+            lambda c, s: _scan_rounds_masked(gla, c, s, lanes)
+        )(shards, sched)
+    else:
+        raise ValueError(f"unknown emit: {emit}")
+
+    # Final result: plain Merge across partitions, then Terminate.
+    merged_final = _merge_over_partitions(gla, finals, alive, gla.merge)
+    final = gla.terminate(merged_final)
+
+    if not snapshots or round_states is None:
+        return QueryResult(final, None, None, d_total, d_local)
+
+    # EstimatorTerminate per (partition, round) with the partition's |D_i|,
+    # then EstimatorMerge across partitions (paper §3.1: intra- then inter-).
+    def et(p_states, dl):
+        return jax.vmap(lambda s: gla.estimator_terminate(s, {"d_local": dl}))(p_states)
+
+    terminated = jax.vmap(et)(round_states, d_local)          # [P, R, ...]
+    merged = _merge_over_partitions(gla, terminated, alive, gla.estimator_merge)
+
+    estimates = None
+    if gla.estimate is not None:
+        estimates = jax.vmap(
+            lambda s: gla.estimate(s, confidence, {"d_total": d_total})
+        )(merged)
+
+    return QueryResult(final, merged, estimates, d_total, d_local)
+
+
+# ---------------------------------------------------------------------------
+# sharded (shard_map over the mesh data axis) path
+# ---------------------------------------------------------------------------
+
+def _run_sharded(gla: GLA, shards: dict, sched: jnp.ndarray, alive: jnp.ndarray,
+                 *, mesh, axis_name: str, mode: str, emit: str, lanes: int,
+                 snapshots: bool, confidence: float, sync_cost_model: bool = True):
+    """Same math as _run_vmapped with partitions = devices on ``axis_name``.
+
+    GLA states must be additive (all shipped GLAs are) so the cross-device
+    EstimatorMerge is a single psum — the efficient aggregation-tree path.
+    In ``mode="sync"`` a per-chunk psum of the progress counter models the
+    Wu et al. per-item serialization; its cost is visible in wall time and in
+    the HLO collective count (benchmarks/overhead.py).
+    """
+    assert gla.merge_is_additive, "sharded path requires additive merges"
+    P = shards["_mask"].shape[0]
+    R = sched.shape[1] - 1
+
+    def worker(cols, sched_p, alive_p):
+        cols = jax.tree.map(lambda x: x[0], cols)      # [1, C, L] -> [C, L]
+        sched_p = sched_p[0]
+        alive_p = alive_p[0].astype(jnp.float32)
+        d_local = jnp.sum(cols["_mask"]) * alive_p
+        d_total = lax.psum(d_local, axis_name)
+
+        if mode == "sync" and sync_cost_model:
+            # Per-chunk progress coordination: the barrier the paper's
+            # synchronized competitor needs.  The psum'd counter feeds the
+            # next iteration's carry so it cannot be DCE'd.
+            def body(carry, chunk):
+                st, prog = carry
+                st, view = _accumulate_chunk(gla, st, chunk, lanes)
+                prog = lax.psum(prog + 1.0, axis_name) / P
+                return (st, prog), view
+            init = (_stack_init(gla, lanes), jnp.zeros(()))
+            (last, _), prefixes = lax.scan(body, init, cols)
+            init_view = _stack_init(gla, lanes)
+            if lanes > 1:
+                init_view = _fold_merge(gla.merge, init_view, lanes)
+                last = _fold_merge(gla.merge, last, lanes)
+            prefixes = jax.tree.map(
+                lambda i, p: jnp.concatenate([i[None], p], 0), init_view, prefixes)
+            final_view = last
+        elif emit == "chunk":
+            final_view, prefixes = _scan_prefix(gla, cols, lanes)
+        elif emit == "round":
+            final_view, round_states = _scan_rounds(gla, cols, lanes, R)
+            prefixes = None
+        else:
+            raise ValueError(emit)
+
+        if emit == "chunk" or mode == "sync":
+            if mode == "sync":
+                gmin = lax.pmin(sched_p[1:], axis_name)
+                idx = gmin
+            else:
+                idx = sched_p[1:]
+            round_states = jax.tree.map(lambda x: x[idx], prefixes)
+
+        # weight by aliveness, then psum == EstimatorMerge over the tree
+        def wz(x):
+            return x * alive_p.astype(x.dtype)
+
+        merged_final = lax.psum(jax.tree.map(wz, final_view), axis_name)
+        if snapshots:
+            term = jax.vmap(
+                lambda s: gla.estimator_terminate(s, {"d_local": d_local})
+            )(round_states)
+            merged_rounds = lax.psum(jax.tree.map(wz, term), axis_name)
+        else:
+            merged_rounds = None
+        return merged_final, merged_rounds, d_total, d_local[None]
+
+    from jax.sharding import PartitionSpec as PS
+    pspec = PS(axis_name)
+    out_specs = (PS(), PS(), PS(), PS(axis_name))
+    fn = jax.shard_map(
+        worker, mesh=mesh,
+        in_specs=(pspec, pspec, pspec),
+        out_specs=out_specs,
+        check_vma=False,  # carry starts replicated (gla.init) and becomes
+                          # device-varying after the first accumulate
+    )
+    sched_arr = jnp.asarray(sched)
+    merged_final, merged_rounds, d_total, d_local = fn(shards, sched_arr, alive)
+    final = gla.terminate(merged_final)
+    estimates = None
+    if snapshots and gla.estimate is not None:
+        estimates = jax.vmap(
+            lambda s: gla.estimate(s, confidence, {"d_total": d_total})
+        )(merged_rounds)
+    return QueryResult(final, merged_rounds, estimates, d_total, d_local)
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def run_query(
+    gla: GLA,
+    shards: dict,
+    *,
+    rounds: int = 8,
+    schedule: Optional[np.ndarray] = None,
+    confidence: float = 0.95,
+    mode: str = "async",
+    emit: str = "chunk",
+    lanes: int = 1,
+    snapshots: bool = True,
+    alive: Optional[np.ndarray] = None,
+    mesh=None,
+    axis_name: str = "data",
+) -> QueryResult:
+    """Execute a GLA query with on-line estimation.
+
+    Args:
+      gla: the UDA bundle (repro.core.gla constructors or custom).
+      shards: columnar dict, leaves [P, C, L], must include "_mask".
+      rounds: number of snapshot points (ignored if ``schedule`` given).
+      schedule: cumulative chunk boundaries [P, R+1] (engine.*_schedule).
+      mode: "async" (paper's estimator) or "sync" (Wu et al. barrier).
+      emit: "chunk" (prefix states; small-state GLAs, any schedule),
+            "round" (uniform schedule fast path, large states), or
+            "round_masked" (any schedule, large states, O(R·C)).
+      lanes: parallel GLA states per partition (DataPath work-unit analogue).
+      snapshots: False = non-interactive mode (overhead baseline).
+      alive: bool [P] — node-failure mask (paper §4.6).
+      mesh: if given, run under shard_map with partitions on ``axis_name``.
+    """
+    P, C, L = shards["_mask"].shape
+    if schedule is None:
+        schedule = uniform_schedule(P, C, rounds)
+    sched = jnp.asarray(schedule, jnp.int32)
+    alive_arr = jnp.ones((P,), bool) if alive is None else jnp.asarray(alive, bool)
+
+    if mesh is None:
+        return _run_vmapped(
+            gla, shards, sched, alive_arr, mode=mode, emit=emit, lanes=lanes,
+            snapshots=snapshots, confidence=confidence,
+        )
+    return _run_sharded(
+        gla, shards, sched, alive_arr, mesh=mesh, axis_name=axis_name,
+        mode=mode, emit=emit, lanes=lanes, snapshots=snapshots,
+        confidence=confidence,
+    )

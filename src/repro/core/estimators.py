@@ -1,0 +1,183 @@
+"""Sampling estimators for parallel on-line aggregation — paper §4.
+
+Implements the generic sampling-without-replacement estimator (Eq. 2) with its
+unbiased variance estimator (Eq. 4), and the three parallel estimation models
+compared in the paper:
+
+  * ``single``       — the paper's contribution (§4.3.2): one estimator over
+                       the union of per-partition samples; valid at *unequal*
+                       per-partition sample fractions because the data is
+                       globally randomized.  No synchronization.
+  * ``multiple``     — stratified sampling (§4.3.3, Luo et al. SIGMOD'02):
+                       one estimator per partition, summed;
+                       EstimatorTerminate/EstimatorMerge required.
+  * ``synchronized`` — Wu et al. VLDB'09: the single-estimator formula but
+                       only valid when every partition has sampled the same
+                       fraction; the engine enforces a per-round barrier and
+                       truncates to the minimum progress.
+
+Erratum note (DESIGN.md §1): paper Algorithm 1 increments ``count`` inside
+``if cond(d)``; Eq. (2)/(4) require |S| = number of *scanned* items.  We track
+``scanned`` (= |S|) for every live item and restrict sum/sumSq to predicate
+matches, i.e. we estimate sum over D of func(d)*1[cond(d)].  At full scan the
+variance term (|D|-|S|) vanishes and the bounds collapse on the exact answer
+— property-tested.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.uda import Estimate
+
+# z-quantile via the inverse normal CDF.  jax.scipy.special.ndtri is the
+# canonical primitive (scipy is not installed in this environment).
+_ndtri = jax.scipy.special.ndtri
+
+
+class SumState(NamedTuple):
+    """State of the generic sampling estimator (corrected paper Alg. 1).
+
+    sum     = sum of func(d) over scanned, predicate-matching items
+    sumsq   = sum of func(d)^2 over scanned, predicate-matching items
+    scanned = |S|, number of scanned (live) items — predicate-independent
+    matched = number of scanned items matching the predicate (diagnostic; also
+              the COUNT aggregate when func == 1)
+    """
+
+    sum: jnp.ndarray
+    sumsq: jnp.ndarray
+    scanned: jnp.ndarray
+    matched: jnp.ndarray
+
+
+def sum_state_zero(dtype=jnp.float32) -> SumState:
+    z = jnp.zeros((), dtype)
+    return SumState(z, z, z, z)
+
+
+def sum_state_accumulate(state: SumState, vals, live) -> SumState:
+    """Fold a chunk of func-values with a liveness*predicate weight.
+
+    ``vals``: func(d) per item (already multiplied by nothing);
+    ``live``: 1.0 for scanned items, ``match``: weight in [0,1] — the caller
+    passes live = chunk mask, and vals pre-multiplied by the predicate.
+    """
+    raise NotImplementedError("use sum_accumulate_masked")
+
+
+def sum_accumulate_masked(state: SumState, func_vals, cond, mask) -> SumState:
+    """Accumulate one chunk: func_vals [n], cond [n] in {0,1}, mask [n] in {0,1}."""
+    w = (cond * mask).astype(state.sum.dtype)
+    m = mask.astype(state.sum.dtype)
+    v = func_vals.astype(state.sum.dtype)
+    return SumState(
+        sum=state.sum + jnp.sum(v * w),
+        sumsq=state.sumsq + jnp.sum(v * v * w),
+        scanned=state.scanned + jnp.sum(m),
+        matched=state.matched + jnp.sum(w),
+    )
+
+
+def sum_state_merge(a: SumState, b: SumState) -> SumState:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def zq(confidence):
+    """Two-sided z quantile: P(|Z| <= zq) = confidence."""
+    conf = jnp.asarray(confidence, jnp.float32)
+    return _ndtri((1.0 + conf) / 2.0)
+
+
+def horvitz_estimate(sum_, scanned, d_total):
+    """Paper Eq. (2): X = |D|/|S| * sum_{s in S, cond} func(s)."""
+    safe_s = jnp.maximum(scanned, 1.0)
+    return d_total / safe_s * sum_
+
+
+def variance_estimate(sum_, sumsq, scanned, d_total):
+    """Paper Eq. (4) — unbiased estimator of Var(X) from the sample.
+
+    Est = |D|(|D|-|S|) / (|S|^2 (|S|-1)) * (|S| * sumsq - sum^2)
+    """
+    s = scanned
+    safe = jnp.maximum(s, 2.0)  # needs |S| >= 2; engine masks earlier rounds
+    num = d_total * jnp.maximum(d_total - s, 0.0)
+    den = safe * safe * (safe - 1.0)
+    est = num / den * jnp.maximum(s * sumsq - sum_ * sum_, 0.0)
+    # With fewer than 2 scanned items the variance is undefined -> +inf width.
+    return jnp.where(s >= 2.0, est, jnp.inf)
+
+
+def normal_bounds(est, var, confidence):
+    half = zq(confidence) * jnp.sqrt(var)
+    return est - half, est + half
+
+
+# --------------------------------------------------------------------------
+# The three estimation models, expressed over SumState pytrees.
+# --------------------------------------------------------------------------
+
+def single_estimate(state: SumState, confidence, *, d_total) -> Estimate:
+    """Paper Alg. 1 (GLASum-SingleEstimator), corrected per the erratum note.
+
+    Valid at arbitrary per-partition progress given global randomization.
+    The state passed here is the *merged* state across partitions.
+    """
+    est = horvitz_estimate(state.sum, state.scanned, d_total)
+    var = variance_estimate(state.sum, state.sumsq, state.scanned, d_total)
+    lo, hi = normal_bounds(est, var, confidence)
+    return Estimate(est, lo, hi, info={"var": var, "frac": state.scanned / d_total})
+
+
+class MultState(NamedTuple):
+    """State for the multiple-estimators (stratified) model — paper Alg. 2.
+
+    base fields accumulate locally; (est, estvar) are produced by
+    EstimatorTerminate at each node and summed by EstimatorMerge.
+    """
+
+    base: SumState
+    est: jnp.ndarray
+    estvar: jnp.ndarray
+
+
+def mult_state_zero(dtype=jnp.float32) -> MultState:
+    z = jnp.zeros((), dtype)
+    return MultState(sum_state_zero(dtype), z, z)
+
+
+def mult_estimator_terminate(state: MultState, *, d_local) -> MultState:
+    """Paper Alg. 2 EstimatorTerminate: local estimator for partition i.
+
+    est_i    = |D_i|/count * sum
+    estvar_i = |D_i|(|D_i|-count)/(count^2(count-1)) * (count*sumSq - sum^2)
+    """
+    b = state.base
+    est = horvitz_estimate(b.sum, b.scanned, d_local)
+    var = variance_estimate(b.sum, b.sumsq, b.scanned, d_local)
+    return MultState(b, est, var)
+
+
+def mult_estimator_merge(a: MultState, b: MultState) -> MultState:
+    """Paper Alg. 2 EstimatorMerge: sum the local estimators and variances."""
+    return MultState(
+        base=sum_state_merge(a.base, b.base),
+        est=a.est + b.est,
+        estvar=a.estvar + b.estvar,
+    )
+
+
+def mult_estimate(state: MultState, confidence) -> Estimate:
+    lo, hi = normal_bounds(state.est, state.estvar, confidence)
+    return Estimate(state.est, lo, hi, info={"var": state.estvar})
+
+
+def synchronized_estimate(state: SumState, confidence, *, d_total) -> Estimate:
+    """Wu et al. synchronized estimator: same formula as `single`, but the
+    engine guarantees equal sample fractions by truncating every partition to
+    the global minimum progress (the barrier) before merging into ``state``.
+    """
+    return single_estimate(state, confidence, d_total=d_total)

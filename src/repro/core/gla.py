@@ -1,0 +1,269 @@
+"""Concrete GLAs — paper Algorithms 1–4.
+
+Constructors return :class:`repro.core.uda.GLA` bundles for the three
+aggregation problems of paper §4, each in the three estimation models:
+
+  * :func:`make_sum_gla`          — §4.3  single-table SUM/COUNT (Algs. 1, 2)
+  * :func:`make_groupby_gla`      — §4.4  group-by aggregation (Alg. 3)
+  * :func:`make_join_groupby_gla` — §4.5  join group-by with replicated
+                                    dimension table (Alg. 4)
+
+Queries are expressed as ``func(chunk) -> [n] or [n, A]`` (A simultaneous
+aggregates, like TPC-H Q1's four SUMs) and ``cond(chunk) -> [n] in {0,1}``.
+Group-by adds ``group(chunk) -> [n] int ids in [0, num_groups)``.
+
+TPU adaptation (DESIGN.md §3): the per-group scatter is a
+``jax.ops.segment_sum`` here (lowers to one-hot matmul / sorted segment ops on
+TPU); the Pallas hot-path kernel in ``repro/kernels`` implements the identical
+contraction with explicit VMEM tiling and is allclose-checked against these
+reference semantics.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import estimators as E
+from repro.core.uda import GLA, Chunk, Estimate
+
+
+def _as_2d(vals: jnp.ndarray) -> jnp.ndarray:
+    """[n] -> [n, 1]; [n, A] stays."""
+    return vals[:, None] if vals.ndim == 1 else vals
+
+
+# ---------------------------------------------------------------------------
+# Paper Alg. 1 / Alg. 2 — GLASum, single / multiple / synchronized
+# ---------------------------------------------------------------------------
+
+def make_sum_gla(
+    func: Callable[[Chunk], jnp.ndarray],
+    cond: Callable[[Chunk], jnp.ndarray],
+    *,
+    d_total: float,
+    estimator: str = "single",
+    dtype=jnp.float32,
+    num_aggs: int = 1,
+) -> GLA:
+    """SUM(func(d)) WHERE cond(d) — paper query (1).
+
+    ``estimator``: "single" (Alg. 1), "multiple" (Alg. 2), "synchronized"
+    (Wu et al.; same state as single — the barrier lives in the engine), or
+    "none" (plain aggregate, the no-estimation overhead baseline).
+    """
+    A = num_aggs
+
+    def zero_sum():
+        z = jnp.zeros((A,), dtype)
+        s = jnp.zeros((), dtype)
+        return E.SumState(sum=z, sumsq=z, scanned=s, matched=s)
+
+    def acc_sum(state: E.SumState, chunk: Chunk) -> E.SumState:
+        vals = _as_2d(func(chunk)).astype(dtype)              # [n, A]
+        w = (cond(chunk) * chunk["_mask"]).astype(dtype)      # [n]
+        m = chunk["_mask"].astype(dtype)
+        return E.SumState(
+            sum=state.sum + vals.T @ w,
+            sumsq=state.sumsq + (vals * vals).T @ w,
+            scanned=state.scanned + jnp.sum(m),
+            matched=state.matched + jnp.sum(w),
+        )
+
+    def merge(a, b):
+        return jax.tree.map(jnp.add, a, b)
+
+    def terminate(state):
+        s = state.sum if A > 1 else state.sum[0]
+        return s
+
+    if estimator in ("single", "synchronized", "none"):
+
+        def estimate(state: E.SumState, confidence, ctx=None) -> Estimate:
+            est = E.horvitz_estimate(state.sum, state.scanned, d_total)
+            var = E.variance_estimate(state.sum, state.sumsq, state.scanned, d_total)
+            lo, hi = E.normal_bounds(est, var, confidence)
+            sq = (lambda x: x) if A > 1 else (lambda x: x[0])
+            return Estimate(sq(est), sq(lo), sq(hi),
+                            info={"var": sq(var), "frac": state.scanned / d_total})
+
+        return GLA(
+            init=zero_sum, accumulate=acc_sum, merge=merge, terminate=terminate,
+            estimate=None if estimator == "none" else estimate,
+            merge_is_additive=True, name=f"sum-{estimator}",
+        )
+
+    if estimator == "multiple":
+
+        def zero_mult():
+            z = jnp.zeros((A,), dtype)
+            return E.MultState(base=zero_sum(), est=z, estvar=z)
+
+        def acc_mult(state: E.MultState, chunk: Chunk) -> E.MultState:
+            return E.MultState(acc_sum(state.base, chunk), state.est, state.estvar)
+
+        def merge_mult(a: E.MultState, b: E.MultState) -> E.MultState:
+            # Merging *local* (pre-EstimatorTerminate) states: base adds,
+            # est/estvar are not yet meaningful — keep additive for engine
+            # uniformity (they are zero until estimator_terminate).
+            return jax.tree.map(jnp.add, a, b)
+
+        def est_term(state: E.MultState, ctx) -> E.MultState:
+            """Alg. 2 EstimatorTerminate — needs |D_i| from the engine ctx."""
+            b = state.base
+            d_local = ctx["d_local"]
+            est = E.horvitz_estimate(b.sum, b.scanned, d_local)
+            var = E.variance_estimate(b.sum, b.sumsq, b.scanned, d_local)
+            return E.MultState(b, est, var)
+
+        def estimate(state: E.MultState, confidence, ctx=None) -> Estimate:
+            lo, hi = E.normal_bounds(state.est, state.estvar, confidence)
+            sq = (lambda x: x) if A > 1 else (lambda x: x[0])
+            return Estimate(sq(state.est), sq(lo), sq(hi),
+                            info={"var": sq(state.estvar)})
+
+        return GLA(
+            init=zero_mult, accumulate=acc_mult, merge=merge_mult,
+            terminate=lambda s: terminate(s.base),
+            estimator_terminate=est_term, estimator_merge=merge_mult,
+            estimate=estimate, merge_is_additive=True, name="sum-multiple",
+        )
+
+    raise ValueError(f"unknown estimator model: {estimator!r}")
+
+
+# ---------------------------------------------------------------------------
+# Paper Alg. 3 — GLAGroupBy (composite GLA: a GLASum per group)
+# ---------------------------------------------------------------------------
+
+def make_groupby_gla(
+    func: Callable[[Chunk], jnp.ndarray],
+    cond: Callable[[Chunk], jnp.ndarray],
+    group: Callable[[Chunk], jnp.ndarray],
+    *,
+    num_groups: int,
+    d_total: float,
+    estimator: str = "single",
+    dtype=jnp.float32,
+    num_aggs: int = 1,
+) -> GLA:
+    """GROUP BY gAtts SUM(func(d)) WHERE cond(d) — paper query (5).
+
+    State is the dense composite of per-group GLASum states ("GLA
+    composition", paper §4.4): sums/sumsqs/matched are [G, A]/[G]; ``scanned``
+    is global (each group's predicate is cond ∧ group==g over the same scan).
+    The per-item scatter is a segment_sum → one-hot MXU contraction on TPU.
+    """
+    G, A = num_groups, num_aggs
+
+    def zero():
+        return E.SumState(
+            sum=jnp.zeros((G, A), dtype), sumsq=jnp.zeros((G, A), dtype),
+            scanned=jnp.zeros((), dtype), matched=jnp.zeros((G,), dtype),
+        )
+
+    def acc(state: E.SumState, chunk: Chunk) -> E.SumState:
+        vals = _as_2d(func(chunk)).astype(dtype)             # [n, A]
+        w = (cond(chunk) * chunk["_mask"]).astype(dtype)     # [n]
+        gids = group(chunk).astype(jnp.int32)                # [n]
+        vw = vals * w[:, None]
+        return E.SumState(
+            sum=state.sum + jax.ops.segment_sum(vw, gids, num_segments=G),
+            sumsq=state.sumsq + jax.ops.segment_sum(vals * vw, gids, num_segments=G),
+            scanned=state.scanned + jnp.sum(chunk["_mask"].astype(dtype)),
+            matched=state.matched + jax.ops.segment_sum(w, gids, num_segments=G),
+        )
+
+    def merge(a, b):
+        return jax.tree.map(jnp.add, a, b)
+
+    if estimator in ("single", "synchronized", "none"):
+
+        def estimate(state: E.SumState, confidence, ctx=None) -> Estimate:
+            est = E.horvitz_estimate(state.sum, state.scanned, d_total)   # [G, A]
+            var = E.variance_estimate(state.sum, state.sumsq, state.scanned, d_total)
+            lo, hi = E.normal_bounds(est, var, confidence)
+            return Estimate(est, lo, hi, info={"var": var, "matched": state.matched})
+
+        return GLA(
+            init=zero, accumulate=acc, merge=merge,
+            terminate=lambda s: s.sum,
+            estimate=None if estimator == "none" else estimate,
+            merge_is_additive=True, name=f"groupby-{estimator}",
+        )
+
+    if estimator == "multiple":
+
+        def zero_mult():
+            z = jnp.zeros((G, A), dtype)
+            return E.MultState(base=zero(), est=z, estvar=z)
+
+        def acc_mult(state, chunk):
+            return E.MultState(acc(state.base, chunk), state.est, state.estvar)
+
+        def est_term(state: E.MultState, ctx) -> E.MultState:
+            b = state.base
+            d_local = ctx["d_local"]
+            est = E.horvitz_estimate(b.sum, b.scanned, d_local)
+            var = E.variance_estimate(b.sum, b.sumsq, b.scanned, d_local)
+            return E.MultState(b, est, var)
+
+        def estimate(state: E.MultState, confidence, ctx=None) -> Estimate:
+            lo, hi = E.normal_bounds(state.est, state.estvar, confidence)
+            return Estimate(state.est, lo, hi, info={"var": state.estvar})
+
+        return GLA(
+            init=zero_mult, accumulate=acc_mult,
+            merge=lambda a, b: jax.tree.map(jnp.add, a, b),
+            terminate=lambda s: s.base.sum,
+            estimator_terminate=est_term,
+            estimate=estimate, merge_is_additive=True, name="groupby-multiple",
+        )
+
+    raise ValueError(f"unknown estimator model: {estimator!r}")
+
+
+# ---------------------------------------------------------------------------
+# Paper Alg. 4 — GLAJoin (replicated in-memory dimension table)
+# ---------------------------------------------------------------------------
+
+def make_join_groupby_gla(
+    func: Callable[[Chunk], jnp.ndarray],
+    cond: Callable[[Chunk], jnp.ndarray],
+    join_key: Callable[[Chunk], jnp.ndarray],
+    dim_group: jnp.ndarray,
+    dim_valid: jnp.ndarray,
+    *,
+    num_groups: int,
+    d_total: float,
+    estimator: str = "single",
+    dtype=jnp.float32,
+    num_aggs: int = 1,
+) -> GLA:
+    """Join group-by — paper query (6), M replicated and hashed in memory.
+
+    ``dim_group[k]`` is the group id the dimension row with key ``k`` maps to
+    (e.g. supplier -> nation), ``dim_valid[k]`` its cond_M(M.sAtts) predicate.
+    Per the paper, H is built by the user application during Init (query
+    setup) and shipped with the query — here it is a replicated closure
+    constant.  Accumulate = hash-probe (gather) + GLAGroupBy accumulate.
+    """
+    dim_group = jnp.asarray(dim_group, jnp.int32)
+    dim_valid = jnp.asarray(dim_valid)
+
+    def joined_group(chunk: Chunk) -> jnp.ndarray:
+        keys = join_key(chunk).astype(jnp.int32)
+        return dim_group[keys]
+
+    def joined_cond(chunk: Chunk) -> jnp.ndarray:
+        keys = join_key(chunk).astype(jnp.int32)
+        return cond(chunk) * dim_valid[keys].astype(cond(chunk).dtype)
+
+    inner = make_groupby_gla(
+        func, joined_cond, joined_group,
+        num_groups=num_groups, d_total=d_total, estimator=estimator,
+        dtype=dtype, num_aggs=num_aggs,
+    )
+    return inner.with_(name=f"join-{estimator}")

@@ -1,0 +1,91 @@
+"""On-line aggregation over model computations — the PF-OLA ↔ LM bridge.
+
+The paper's query (1) is  SUM(func(d)) WHERE cond(d).  Substituting
+``func(d) = loss(params, d)`` makes *dataset-level evaluation* an on-line
+aggregation problem: stream eval batches through the model, keep the
+(sum, sumSq, count) GLA state, and report an anytime estimate of the
+full-corpus loss with confidence bounds — stopping early once the bounds
+are tight.  ``cond`` becomes a data-selection predicate (domain, length
+bucket, ...), and per-group statistics are the paper's query (5).
+
+These constructors return standard GLAs executed by repro.core.engine —
+the estimation machinery is identical to the TPC-H path; only ``func``
+changed.  That is the paper's expressiveness claim, demonstrated on a
+neural workload.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import estimators as E
+from repro.core.gla import make_groupby_gla, make_sum_gla
+from repro.core.uda import GLA, Chunk
+
+
+def make_loss_gla(
+    loss_per_example: Callable[[Chunk], jnp.ndarray],
+    *,
+    d_total: float,
+    cond: Optional[Callable[[Chunk], jnp.ndarray]] = None,
+    estimator: str = "single",
+    dtype=jnp.float32,
+) -> GLA:
+    """GLA whose func is a per-example model loss.
+
+    ``loss_per_example(chunk) -> [n]`` runs the model forward on the chunk's
+    examples (the chunk carries token arrays).  The mean loss over the
+    predicate-selected subset is SUM/COUNT — both estimated simultaneously
+    by stacking two aggregates (func and the constant-1 function), exactly
+    the paper's AVERAGE construction (§4.3).
+    """
+    ones = lambda chunk: jnp.ones_like(loss_per_example(chunk))
+
+    def func2(chunk):
+        lpe = loss_per_example(chunk)
+        return jnp.stack([lpe, jnp.ones_like(lpe)], axis=-1)
+
+    c = cond if cond is not None else (
+        lambda chunk: jnp.ones_like(chunk["_mask"]))
+    return make_sum_gla(func2, c, d_total=d_total, estimator=estimator,
+                        dtype=dtype, num_aggs=2).with_(name="loss-gla")
+
+
+def mean_with_bounds(est) -> tuple:
+    """Turn the 2-agg (sum, count) Estimate into a mean ± half-width.
+
+    Ratio-estimator bounds via first-order delta method: the count estimate
+    is near-exact relative to the loss spread, so half-width(mean) ≈
+    half-width(sum)/count_estimate.  Exact at full scan (variance 0).
+    """
+    import numpy as np
+    est_sum, est_cnt = np.asarray(est.estimate).T
+    lo_sum = np.asarray(est.lower).T[0]
+    hi_sum = np.asarray(est.upper).T[0]
+    cnt = np.maximum(est_cnt, 1.0)
+    mean = est_sum / cnt
+    half = (hi_sum - lo_sum) / 2.0 / cnt
+    return mean, mean - half, mean + half
+
+
+def make_groupwise_loss_gla(
+    loss_per_example: Callable[[Chunk], jnp.ndarray],
+    group: Callable[[Chunk], jnp.ndarray],
+    *,
+    num_groups: int,
+    d_total: float,
+    estimator: str = "single",
+) -> GLA:
+    """Per-domain / per-bucket loss statistics with simultaneous bounds —
+    paper query (5) with func = loss."""
+
+    def func2(chunk):
+        lpe = loss_per_example(chunk)
+        return jnp.stack([lpe, jnp.ones_like(lpe)], axis=-1)
+
+    cond = lambda chunk: jnp.ones_like(chunk["_mask"])
+    return make_groupby_gla(func2, cond, group, num_groups=num_groups,
+                            d_total=d_total, estimator=estimator,
+                            num_aggs=2).with_(name="groupwise-loss-gla")

@@ -1,0 +1,105 @@
+"""Extended UDA (User-Defined Aggregate) interface — paper Table 1.
+
+A GLA (Generalized Linear Aggregate) is an associative-decomposable UDA: the
+order in which ``accumulate`` and ``merge`` are invoked does not change the
+final result.  In JAX a GLA is a bundle of *pure functions* over a pytree
+state; the engine (``repro.core.engine``) owns every parallel-execution
+detail, exactly as in the paper.
+
+Interface mapping (paper Table 1 → this module):
+
+    Init                -> GLA.init()
+    Accumulate(Item d)  -> GLA.accumulate(state, chunk)    [chunk-vectorized]
+    Merge(in1,in2,out)  -> GLA.merge(s1, s2) -> s
+    Terminate           -> GLA.terminate(state)
+    Serialize           -> repro.checkpoint.serialize_state(state)
+    Deserialize         -> repro.checkpoint.deserialize_state(buf, like=state)
+    EstimatorTerminate  -> GLA.estimator_terminate(state)  [intra-node]
+    EstimatorMerge      -> GLA.estimator_merge(s1, s2)     [inter-node]
+    Estimate            -> GLA.estimate(state, confidence) -> Estimate
+
+``accumulate`` is vectorized over a *chunk* — a dict of equal-length column
+arrays.  Every chunk carries a ``_mask`` column (float/bool, 1 = live item);
+masked items MUST NOT contribute to the state.  This is how the engine
+implements ragged tails and per-partition straggler schedules without
+dynamic shapes.
+
+Whenever a method is missing, it does not change the UDA state (paper §3.1):
+``estimator_terminate`` defaults to identity and ``estimator_merge`` defaults
+to ``merge``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+Chunk = dict  # column name -> [chunk_len] array; always includes "_mask"
+State = Any  # arbitrary pytree
+
+
+class Estimate(NamedTuple):
+    """Result of GLA.estimate — estimator with confidence bounds."""
+
+    estimate: Any
+    lower: Any
+    upper: Any
+    # Auxiliary diagnostics (variance estimate, sample fraction, ...)
+    info: Any = None
+
+
+def _identity(state: State, ctx: Optional[dict] = None) -> State:
+    """Default EstimatorTerminate: the state is its own partial aggregate.
+
+    ``ctx`` carries per-partition execution facts the engine knows and the
+    GLA cannot (paper §4.6 "dataset information"): ``d_local`` = |D_i| of the
+    partition this state was accumulated on, ``d_total`` = |D|.
+    """
+    return state
+
+
+@dataclasses.dataclass(frozen=True)
+class GLA:
+    """An associative-decomposable UDA with the extended (estimation) interface.
+
+    Attributes:
+      init: () -> state.
+      accumulate: (state, chunk) -> state.  Chunk-vectorized; must honor
+        ``chunk["_mask"]``.
+      merge: (s1, s2) -> s.  Must be associative and commutative — this is
+        the GLA contract that makes asynchronous tree/ring aggregation legal,
+        and it is property-tested in tests/test_estimators.py.
+      terminate: (state) -> final result.
+      estimator_terminate: intra-node partial-aggregate finalization
+        (paper §3.1 third extension).  Identity by default.
+      estimator_merge: inter-node partial-aggregate merge.  Defaults to
+        ``merge``.
+      estimate: (state, confidence) -> Estimate, or None for GLAs with no
+        estimation model attached.
+      merge_is_additive: True when ``merge`` is elementwise addition over all
+        state leaves.  The engine then lowers cross-device merging to a single
+        ``psum`` (ring all-reduce) instead of gather+fold — the efficient path
+        the paper gets from its aggregation tree.
+    """
+
+    init: Callable[[], State]
+    accumulate: Callable[[State, Chunk], State]
+    merge: Callable[[State, State], State]
+    terminate: Callable[[State], Any]
+    estimator_terminate: Callable[[State, Optional[dict]], State] = _identity
+    estimator_merge: Optional[Callable[[State, State], State]] = None
+    estimate: Optional[Callable[..., Estimate]] = None
+    merge_is_additive: bool = False
+    name: str = "gla"
+
+    def __post_init__(self):
+        if self.estimator_merge is None:
+            object.__setattr__(self, "estimator_merge", self.merge)
+
+    # -- convenience ---------------------------------------------------------
+    def with_(self, **kw) -> "GLA":
+        return dataclasses.replace(self, **kw)
+
+
+def masked(cond: Any, chunk: Chunk) -> Any:
+    """Combine a selection predicate with the chunk liveness mask."""
+    return cond * chunk["_mask"]

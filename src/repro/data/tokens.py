@@ -1,0 +1,38 @@
+"""Synthetic token streams for LM training/serving examples.
+
+Deterministic, cursor-addressable (checkpoint/restart needs to resume the
+stream at an exact position), with a Zipf-ish unigram distribution plus
+short-range repetition structure so small models have something learnable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _zipf_probs(vocab: int, alpha: float = 1.1):
+    r = np.arange(1, vocab + 1, dtype=np.float64)
+    p = r ** (-alpha)
+    return p / p.sum()
+
+
+def token_batches(cfg, batch: int, seq: int, *, start: int = 0, seed: int = 0):
+    """Generator of ({"tokens": [B, S]}, next_cursor) with stable cursors."""
+    probs = _zipf_probs(cfg.vocab_size)
+    cursor = start
+    while True:
+        rng = np.random.default_rng(seed * 1_000_003 + cursor)
+        toks = rng.choice(cfg.vocab_size, size=(batch, seq), p=probs)
+        # inject copy structure: second half repeats the first half shifted
+        half = seq // 2
+        toks[:, half:half * 2] = toks[:, :half]
+        batch_dict = {"tokens": jnp.asarray(toks, jnp.int32)}
+        if cfg.frontend == "vision_stub":
+            frames = rng.normal(size=(batch, cfg.vis_tokens, cfg.d_model))
+            batch_dict["patches"] = jnp.asarray(frames, jnp.float32)
+        if cfg.is_encoder_decoder:
+            fr = rng.normal(size=(batch, cfg.encoder_seq, cfg.d_model))
+            batch_dict["frames"] = jnp.asarray(fr, jnp.float32)
+        cursor += 1
+        yield batch_dict, cursor

@@ -1,0 +1,121 @@
+"""Synthetic TPC-H lineitem-like data — the paper's evaluation workload.
+
+The paper runs over an 8 TB TPC-H instance (48e9 lineitem rows over 8 nodes).
+This container is CPU-only, so the generator reproduces the *distributions*
+TPC-H dbgen uses for the columns the paper's queries touch, scaled by
+``rows``.  Selectivity regimes match the paper:
+
+  * Q6 low-selectivity  — one-year shipdate window  (~2.8e-4 match rate)
+  * Q6 high-selectivity — single-day shipdate       (~7.3e-7 in the paper;
+    here a single day out of 2,526 ⇒ needle-in-haystack at our scale)
+  * Q1 group-by small   — 4 populated (returnflag, linestatus) groups
+  * Q1 group-by large   — group by suppkey (paper: 1M groups; scaled)
+  * join group-by       — lineitem ⋈ supplier ⋈ nation (25 nations),
+    supplier/nation replicated + pre-joined (paper §5.4 strategy)
+
+Column encodings (all numeric, columnar):
+  shipdate  int32  days in [0, 2526)   (1992-01-02 .. 1998-12-01)
+  discount  float32 in {0.00 .. 0.10}  (dbgen: uniform 11 values)
+  quantity  float32 in {1 .. 50}
+  extendedprice float32
+  tax       float32 in {0.00 .. 0.08}
+  rfls      int32 in [0, 4)   returnflag×linestatus combined group
+  suppkey   int32 in [0, num_suppliers)
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+DAYS = 2526  # dbgen shipdate span
+Q6_LOW_WINDOW = (420, 785)   # ~1 year starting '1993-02-26'
+Q6_HIGH_WINDOW = (420, 421)  # the single day '1993-02-26'
+Q1_WINDOW = (2434, 2526)     # ['1998-09-01','1998-12-01']
+NUM_NATIONS = 25
+
+
+def generate_lineitem(rows: int, *, num_suppliers: int = 1000, seed: int = 7,
+                      dtype=np.float32) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    cols = {
+        "shipdate": rng.integers(0, DAYS, rows, dtype=np.int32),
+        "discount": (rng.integers(0, 11, rows) / 100.0).astype(dtype),
+        "quantity": rng.integers(1, 51, rows).astype(dtype),
+        "extendedprice": (rng.uniform(900.0, 105000.0, rows) / 1000.0).astype(dtype),
+        "tax": (rng.integers(0, 9, rows) / 100.0).astype(dtype),
+        "rfls": rng.integers(0, 4, rows, dtype=np.int32),
+        "suppkey": rng.integers(0, num_suppliers, rows, dtype=np.int32),
+    }
+    return cols
+
+
+def supplier_nation_table(num_suppliers: int = 1000, seed: int = 11):
+    """Replicated dimension side: suppkey -> nationkey, plus validity.
+
+    Mirrors the paper's strategy: supplier ⋈ nation pre-joined in memory,
+    hashed on suppkey (paper §5.4).
+    """
+    rng = np.random.default_rng(seed)
+    supp_nation = rng.integers(0, NUM_NATIONS, num_suppliers).astype(np.int32)
+    valid = np.ones(num_suppliers, np.float32)
+    return supp_nation, valid
+
+
+# --- query pieces -----------------------------------------------------------
+
+def q6_func(chunk):
+    return chunk["extendedprice"] * chunk["discount"]
+
+
+def q6_cond(window):
+    lo, hi = window
+
+    def cond(chunk):
+        sd = chunk["shipdate"]
+        return (
+            (sd >= lo) & (sd < hi)
+            & (chunk["discount"] >= 0.02 - 1e-6) & (chunk["discount"] <= 0.03 + 1e-6)
+            & (chunk["quantity"] == 1.0)
+        ).astype(jnp.float32)
+
+    return cond
+
+
+def q1_func(chunk):
+    """The four Q1 SUM aggregates, stacked [n, 4]."""
+    ep, dc, tx = chunk["extendedprice"], chunk["discount"], chunk["tax"]
+    return jnp.stack(
+        [chunk["quantity"], ep, ep * (1 - dc), ep * (1 - dc) * (1 + tx)], axis=-1
+    )
+
+
+def q1_cond(chunk):
+    sd = chunk["shipdate"]
+    return ((sd >= Q1_WINDOW[0]) & (sd < Q1_WINDOW[1])).astype(jnp.float32)
+
+
+def q1_group_small(chunk):
+    return chunk["rfls"]
+
+
+def q1_group_large(chunk):
+    return chunk["suppkey"]
+
+
+def exact_answer(cols: Dict[str, np.ndarray], func, cond, group=None,
+                 num_groups: int | None = None):
+    """Ground truth on host numpy (the oracle for all correctness tests)."""
+    chunk = {k: jnp.asarray(v) for k, v in cols.items()}
+    chunk["_mask"] = jnp.ones_like(chunk["shipdate"], jnp.float32)
+    vals = np.asarray(func(chunk), np.float64)
+    w = np.asarray(cond(chunk), np.float64)
+    if vals.ndim == 1:
+        vals = vals[:, None]
+    if group is None:
+        return (vals * w[:, None]).sum(axis=0)
+    g = np.asarray(group(chunk))
+    out = np.zeros((num_groups, vals.shape[1]))
+    np.add.at(out, g, vals * w[:, None])
+    return out

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the semantics the kernels must match (assert_allclose in
+tests/test_kernels.py across shape/dtype sweeps).  They are also the
+fallback implementation on backends without Pallas support.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def chunk_agg_ref(vals, weight, mask):
+    """Fused selection+aggregation over a flat chunk — paper Alg. 1 hot loop.
+
+    vals   [N] f32/bf16 — func(d) per item
+    weight [N] — cond(d)·mask in {0,1}
+    mask   [N] — liveness in {0,1}
+    returns [4] f32: (sum, sumsq, scanned, matched)
+    """
+    v = vals.astype(jnp.float32)
+    w = weight.astype(jnp.float32)
+    m = mask.astype(jnp.float32)
+    return jnp.stack(
+        [jnp.sum(v * w), jnp.sum(v * v * w), jnp.sum(m), jnp.sum(w)]
+    )
+
+
+def q6_agg_ref(shipdate, discount, quantity, extendedprice, mask, params):
+    """Fully fused Q6 predicate+func+aggregate (what the kernel fuses).
+
+    params [6]: (date_lo, date_hi, disc_lo, disc_hi, qty_eq, unused)
+    returns [4] f32: (sum, sumsq, scanned, matched)
+    """
+    date_lo, date_hi, disc_lo, disc_hi, qty_eq = [params[i] for i in range(5)]
+    sd = shipdate.astype(jnp.float32)
+    cond = (
+        (sd >= date_lo) & (sd < date_hi)
+        & (discount >= disc_lo) & (discount <= disc_hi)
+        & (quantity == qty_eq)
+    ).astype(jnp.float32)
+    v = (extendedprice * discount).astype(jnp.float32)
+    return chunk_agg_ref(v, cond * mask, mask)
+
+
+def group_agg_ref(vals, weight, gids, num_groups):
+    """Group-by aggregation — paper Alg. 3 hot loop.
+
+    vals [N, A], weight [N], gids [N] int32 in [0, G)
+    returns (sums [G, A], sumsqs [G, A], matched [G]) in f32
+    """
+    v = vals.astype(jnp.float32)
+    w = weight.astype(jnp.float32)
+    vw = v * w[:, None]
+    sums = jax.ops.segment_sum(vw, gids, num_segments=num_groups)
+    sumsqs = jax.ops.segment_sum(v * vw, gids, num_segments=num_groups)
+    matched = jax.ops.segment_sum(w, gids, num_segments=num_groups)
+    return sums, sumsqs, matched

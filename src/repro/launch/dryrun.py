@@ -1,0 +1,254 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This is how the distribution config is proven coherent without hardware:
+
+    with mesh:
+        lowered = jax.jit(step, in_shardings=...).lower(*abstract_inputs)
+        compiled = lowered.compile()
+        compiled.memory_analysis()   # proves it fits
+        compiled.cost_analysis()     # FLOPs/bytes for the roofline
+
+The two XLA_FLAGS lines above MUST stay the first statements in this module
+(before any jax import — jax locks the device count at first init).  Do not
+set the flag anywhere global: smoke tests and benchmarks see 1 CPU device.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all            # every cell, subprocesses
+    python -m repro.launch.dryrun --all --mesh multi
+
+Per-cell JSON results land in experiments/dryrun/, consumed by
+benchmarks/roofline.py and EXPERIMENTS.md.
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.dist import sharding as SH
+from repro.launch import mesh as M
+from repro.launch.shapes import SHAPES, batch_specs, cell_runnable, decode_specs
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\b")
+
+_DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2, "u16": 2, "f8e4m3": 1,
+    "f8e5m2": 1,
+}
+
+
+def parse_collective_bytes(hlo_text: str):
+    """Per-device bytes by collective kind, from post-SPMD optimized HLO."""
+    out = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        dtype, dims, kind = m.groups()
+        nbytes = _DTYPE_BYTES.get(dtype, 4)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        out[kind] = out.get(kind, 0) + n * nbytes
+    return out
+
+
+def _opt_abstract_and_pspecs(cfg, params_abs, spec_tree, mesh):
+    """Optimizer-state abstract values + ZeRO pspecs (DESIGN.md §5)."""
+    from repro.training import optimizer as O
+    opt_abs = jax.eval_shape(lambda p: O.opt_init(p, cfg.optimizer), params_abs)
+    param_ps = SH.param_pspecs(spec_tree, mesh, opt_data_axis="data")
+
+    def generic(x):
+        assign = [None] * len(x.shape)
+        for axis in ("model", "data"):
+            size = SH.mesh_axis_size(mesh, axis)
+            if size <= 1:
+                continue
+            cands = [(d, i) for i, d in enumerate(x.shape)
+                     if assign[i] is None and d % size == 0 and d >= size]
+            if cands:
+                assign[max(cands)[1]] = axis
+        return P(*assign)
+
+    if cfg.optimizer == "adamw":
+        opt_ps = type(opt_abs)(P(), param_ps, param_ps, param_ps)
+    else:
+        vr_ps = jax.tree.map(generic, opt_abs.vr)
+        vc_ps = jax.tree.map(generic, opt_abs.vc)
+        opt_ps = type(opt_abs)(P(), vr_ps, vc_ps)
+    return opt_abs, opt_ps
+
+
+def build_cell(arch: str, shape_name: str, mesh):
+    """Returns (fn, abstract_args, in_shardings) for one cell."""
+    from repro.models import spec as S
+    from repro.models import transformer as T
+    from repro.serving import serve_step as SS
+    from repro.training import train_step as TS
+
+    cfg = get_config(arch)
+    kind = SHAPES[shape_name]["kind"]
+    spec_tree = T.param_specs(cfg, dtype=jnp.bfloat16)
+    params_abs = S.abstract_params(spec_tree)
+    params_sh = SH.param_pspecs(
+        spec_tree, mesh, opt_data_axis="data" if cfg.fsdp else None)
+    daxes = SH.batch_axes(mesh)
+    dsize = 1
+    for a in daxes:
+        dsize *= SH.mesh_axis_size(mesh, a)
+    dspec = daxes if len(daxes) > 1 else daxes[0]
+
+    def bspec(shape):
+        ps = [None] * len(shape)
+        if shape[0] % dsize == 0 and shape[0] >= dsize:
+            ps[0] = dspec
+        return P(*ps)
+
+    if kind == "train":
+        batch_abs = batch_specs(cfg, shape_name)
+        batch_sh = {k: bspec(v.shape) for k, v in batch_abs.items()}
+        opt_abs, opt_ps = _opt_abstract_and_pspecs(cfg, params_abs, spec_tree,
+                                                   mesh)
+        fn = TS.make_train_step(cfg, dp_size=dsize,
+                                batch_axes=daxes if daxes else None)
+        args = (params_abs, opt_abs, batch_abs)
+        shardings = (params_sh, opt_ps, batch_sh)
+        return fn, args, shardings, (0, 1), cfg   # donate params + opt state
+
+    if kind == "prefill":
+        batch_abs = batch_specs(cfg, shape_name)
+        batch_sh = {k: bspec(v.shape) for k, v in batch_abs.items()}
+        fn = SS.make_prefill(cfg, cache_len=SHAPES[shape_name]["seq"])
+        return fn, (params_abs, batch_abs), (params_sh, batch_sh), (), cfg
+
+    # decode
+    cache_abs, token_abs, pos_abs = decode_specs(cfg, shape_name)
+    info = SHAPES[shape_name]
+    cache_sh = SH.cache_pspecs(cache_abs, mesh, batch=info["batch"],
+                               seq_len=info["seq"])
+    token_sh = bspec(token_abs.shape)
+    fn = SS.make_decode(cfg)
+    args = (params_abs, cache_abs, token_abs, pos_abs)
+    shardings = (params_sh, cache_sh, token_sh, P())
+    return fn, args, shardings, (1,), cfg         # donate the cache
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, verbose=True):
+    cfg = get_config(arch)
+    ok, reason = cell_runnable(cfg, shape_name)
+    cell_id = f"{arch}.{shape_name}.{mesh_kind}"
+    if not ok:
+        return {"cell": cell_id, "status": "SKIP", "reason": reason}
+
+    mesh = M.make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    fn, args, shardings, donate, cfg = build_cell(arch, shape_name, mesh)
+    shardings = jax.tree.map(
+        lambda ps: NamedSharding(mesh, ps), shardings,
+        is_leaf=lambda x: isinstance(x, P))
+    jax.set_mesh(mesh)  # ambient mesh: model code reads it for constraints
+    with mesh:
+        jfn = jax.jit(fn, in_shardings=shardings, donate_argnums=donate)
+        lowered = jfn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = parse_collective_bytes(hlo)
+    # loop-aware accounting (XLA's cost_analysis counts while bodies once;
+    # see repro/analysis/hlo_cost.py)
+    from repro.analysis import hlo_cost as HC
+    aware = HC.analyze(hlo)
+    n_chips = mesh.devices.size
+    result = {
+        "cell": cell_id,
+        "status": "OK",
+        "chips": n_chips,
+        "flops_per_device": float(aware["flops"]),
+        "bytes_per_device": float(aware["bytes"]),
+        "collective_bytes_per_device": aware["collective_bytes"],
+        "xla_flops_per_device_loopsonce": float(cost.get("flops", 0.0)),
+        "xla_bytes_per_device_loopsonce": float(
+            cost.get("bytes accessed", 0.0)),
+        "collective_bytes_unscaled": coll,
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "peak_estimate": int(mem.argument_size_in_bytes
+                                 + mem.output_size_in_bytes
+                                 + mem.temp_size_in_bytes
+                                 - mem.alias_size_in_bytes),
+        },
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+    }
+    if verbose:
+        print(json.dumps(result, indent=1))
+        print(f"[memory_analysis] {mem}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+
+    if not args.all:
+        res = run_cell(args.arch, args.shape, args.mesh)
+        out = OUT_DIR / f"{res['cell']}.json"
+        out.write_text(json.dumps(res, indent=1))
+        print(f"wrote {out}")
+        sys.exit(0 if res["status"] in ("OK", "SKIP") else 1)
+
+    # --all: one subprocess per cell (isolates compile memory, resumable)
+    failures = []
+    for arch in list_archs():
+        for shape in SHAPES:
+            cell = f"{arch}.{shape}.{args.mesh}"
+            out = OUT_DIR / f"{cell}.json"
+            if out.exists() and not args.force:
+                print(f"skip (cached): {cell}")
+                continue
+            print(f"=== {cell} ===", flush=True)
+            r = subprocess.run(
+                [sys.executable, "-m", "repro.launch.dryrun",
+                 "--arch", arch, "--shape", shape, "--mesh", args.mesh],
+                cwd=str(Path(__file__).resolve().parents[2]),
+                env={**os.environ, "PYTHONPATH": str(
+                    Path(__file__).resolve().parents[2])},
+            )
+            if r.returncode != 0:
+                failures.append(cell)
+                out.write_text(json.dumps(
+                    {"cell": cell, "status": "FAIL"}, indent=1))
+    print(f"done; failures: {failures}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

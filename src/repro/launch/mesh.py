@@ -1,0 +1,37 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state; the dry-run sets
+XLA_FLAGS before any jax import (repro/launch/dryrun.py) and only then
+builds the mesh.
+
+Topology: TPU v5e pod slices.  Single pod: 16×16 = 256 chips as
+(data=16, model=16).  Multi-pod: 2 pods × 256 = 512 chips as
+(pod=2, data=16, model=16) — gradient/GLA reductions cross pods over DCI on
+the `pod` axis; model parallelism never leaves a pod.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(devices: int = 8, axes=("data",)):
+    """Small mesh over however many (possibly fake) devices exist."""
+    import numpy as np
+    n = len(jax.devices())
+    use = min(devices, n)
+    shape = (use,) if len(axes) == 1 else (use // 2, 2)
+    return jax.make_mesh(shape, axes)
+
+
+# v5e per-chip hardware constants (roofline denominators)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link (aggregate approximation)
+HBM_PER_CHIP = 16 * 1024**3   # bytes

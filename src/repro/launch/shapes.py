@@ -1,0 +1,62 @@
+"""Assigned input-shape cells and abstract input specs (no allocation).
+
+Shape table (assignment):
+    train_4k      seq 4,096   global_batch 256   lowers train_step
+    prefill_32k   seq 32,768  global_batch 32    lowers prefill_step
+    decode_32k    seq 32,768  global_batch 128   lowers decode_step
+    long_500k     seq 524,288 global_batch 1     lowers decode_step;
+                  runs only for sub-quadratic archs (DESIGN.md §5)
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, never allocated.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+SHAPES: Dict[str, dict] = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def cell_runnable(cfg: ArchConfig, shape_name: str):
+    """(runs?, reason-if-skipped)."""
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return False, ("full quadratic attention; 500K-token decode needs "
+                       "sub-quadratic attention (skip noted in DESIGN.md §5)")
+    return True, ""
+
+
+def batch_specs(cfg: ArchConfig, shape_name: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract batch for train/prefill kinds."""
+    info = SHAPES[shape_name]
+    B, S = info["batch"], info["seq"]
+    d = cfg.d_model
+    out = {}
+    s_txt = S
+    if cfg.frontend == "vision_stub":
+        s_txt = S - cfg.vis_tokens
+        out["patches"] = jax.ShapeDtypeStruct((B, cfg.vis_tokens, d), jnp.bfloat16)
+    if cfg.is_encoder_decoder:
+        out["frames"] = jax.ShapeDtypeStruct((B, cfg.encoder_seq, d), jnp.bfloat16)
+    out["tokens"] = jax.ShapeDtypeStruct((B, s_txt), jnp.int32)
+    return out
+
+
+def decode_specs(cfg: ArchConfig, shape_name: str):
+    """(cache_abstract, token, pos) for decode kinds."""
+    from repro.models import transformer as T
+    info = SHAPES[shape_name]
+    B, S = info["batch"], info["seq"]
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, B, S))
+    token = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return cache, token, pos

@@ -1,0 +1,78 @@
+"""Training driver: end-to-end LM training with checkpoint/restart and
+PF-OLA online metrics.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm_135m \
+        --steps 300 --smoke --batch 8 --seq 64 --ckpt-every 100
+
+On hardware this runs the full config under the production mesh (the same
+train_step the dry-run lowers); with --smoke it trains the reduced
+same-family config on CPU — the end-to-end example driver.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs import get_config
+from repro.data.tokens import token_batches
+from repro.training import optimizer as O
+from repro.training import train_step as TS
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_135m")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    key = jax.random.key(0)
+    params, opt = TS.init_train_state(
+        cfg, key, dtype=jnp.float32 if args.smoke else jnp.bfloat16)
+    start, cursor = 0, 0
+    path = Path(args.ckpt_dir) / f"{args.arch}.ckpt"
+    if args.resume and path.exists():
+        params, opt, start, cursor = ckpt.load_train_state(path, params, opt)
+        print(f"resumed from step {start}")
+
+    step_fn = jax.jit(TS.make_train_step(cfg, lr=args.lr))
+    batches = token_batches(cfg, args.batch, args.seq, start=cursor)
+    # loss as a running PF-OLA state: anytime mean + CI over the run
+    s = sq = n = 0.0
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch, cursor = next(batches)
+        params, opt, m = step_fn(params, opt, batch)
+        loss = float(m["loss"])
+        s, sq, n = s + loss, sq + loss * loss, n + 1
+        if (step + 1) % 10 == 0:
+            mean = s / n
+            var = max(sq / n - mean * mean, 0.0) / max(n - 1, 1)
+            half = 1.96 * np.sqrt(var)
+            print(f"step {step + 1:4d} loss {loss:.4f} "
+                  f"run-mean {mean:.4f} ±{half:.4f} "
+                  f"({(time.time() - t0) / (step - start + 1):.2f}s/step)")
+        if (step + 1) % args.ckpt_every == 0:
+            ckpt.save_train_state(path, params, opt, step + 1, cursor)
+            print(f"checkpointed at step {step + 1}")
+    ckpt.save_train_state(path, params, opt, args.steps, cursor)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

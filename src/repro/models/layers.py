@@ -1,0 +1,222 @@
+"""Transformer substrate layers: norms, RoPE, attention, MLP.
+
+Attention is a pure-JAX blockwise ("flash") implementation: an *unrolled*
+loop over query blocks, each with a `lax.scan` over exactly the key/value
+blocks that query block can see (triangle scheduling).  This keeps peak
+activation memory at O(q_block · kv_block) per head instead of O(S²) and —
+because the block ranges are static — performs **zero fully-masked-block
+FLOPs** for causal/chunked/windowed masks, which keeps the HLO FLOP count
+honest for the roofline analysis.
+
+Mask modes:
+  causal  — standard autoregressive
+  chunk   — attend only within the surrounding `window`-sized chunk
+            (Llama-4 style chunked local attention), causal inside
+  window  — sliding window of `window` past positions (RG local attention)
+  full    — bidirectional (encoder / cross attention)
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------- norms
+
+def rms_norm(x, gamma, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+def layer_norm(x, gamma, beta, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * gamma + beta
+
+
+def apply_norm(x, p, kind):
+    if kind == "rms":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+# --------------------------------------------------------------------------- rope
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x [B,S,H,dh] with positions [S], or [B,H,dh] with scalar position."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                          # [dh/2]
+    pos = jnp.asarray(positions, jnp.float32)
+    ang = pos[..., None] * freqs                           # [S, dh/2] | [dh/2]
+    if x.ndim == 4:                                        # [B,S,H,dh]
+        ang = ang.reshape((1,) + ang.shape[:-1] + (1, dh // 2))
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., : dh // 2], x[..., dh // 2:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(scores, cap: Optional[float]):
+    if cap is None:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+# --------------------------------------------------------------------------- flash attention
+
+def _kv_block_range(i, n_kv, qb, kvb, mode, window):
+    """Static kv-block range [lo, hi) visible to query block i."""
+    if mode == "full":
+        return 0, n_kv
+    hi = min(n_kv, -(-((i + 1) * qb) // kvb))  # causal upper bound
+    if mode == "causal":
+        return 0, hi
+    if mode == "window":
+        lo = max(0, (i * qb - window) // kvb)
+        return lo, hi
+    if mode == "chunk":
+        lo = ((i * qb) // window) * (window // kvb)
+        return lo, hi
+    raise ValueError(mode)
+
+
+def flash_attention(q, k, v, *, mode="causal", window=None, cap=None,
+                    q_block=1024, kv_block=1024):
+    """q [B,Sq,H,dh], k/v [B,Sk,K,dh] -> [B,Sq,H,dh].
+
+    Query positions are aligned with key positions (q_offset=0); the decode
+    path (single new token against a cache) is `decode_attention` below.
+    """
+    B, Sq, H, dh = q.shape
+    _, Sk, K, _ = k.shape
+    G = H // K
+
+    def pick(S, target):
+        b = min(target, S)
+        while S % b:
+            b -= 1
+        return b
+
+    if mode in ("window", "chunk") and window is not None and window >= Sk:
+        mode = "causal"      # the window covers the whole sequence
+    if mode in ("window", "chunk"):
+        assert window is not None
+        qb = pick(Sq, min(q_block, window))
+        kvb = pick(Sk, min(kv_block, window))
+        assert window % kvb == 0, (
+            f"window {window} must be a multiple of kv block {kvb}")
+    else:
+        qb = pick(Sq, q_block)
+        kvb = pick(Sk, kv_block)
+    n_q, n_kv = Sq // qb, Sk // kvb
+    scale = 1.0 / math.sqrt(dh)
+    kpos_all = jnp.arange(Sk, dtype=jnp.int32).reshape(n_kv, kvb)
+
+    outs = []
+    for i in range(n_q):
+        lo, hi = _kv_block_range(i, n_kv, qb, kvb, mode, window)
+        qi = q[:, i * qb:(i + 1) * qb].reshape(B, qb, K, G, dh)
+        qpos = i * qb + jnp.arange(qb, dtype=jnp.int32)
+        k_blocks = k[:, lo * kvb:hi * kvb].reshape(B, hi - lo, kvb, K, dh)
+        v_blocks = v[:, lo * kvb:hi * kvb].reshape(B, hi - lo, kvb, K, dh)
+        kp_blocks = kpos_all[lo:hi]
+
+        m0 = jnp.full((B, qb, K, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, qb, K, G), jnp.float32)
+        o0 = jnp.zeros((B, qb, K, G, dh), jnp.float32)
+
+        def step(carry, xs, qi=qi, qpos=qpos):
+            m, l, o = carry
+            kj, vj, kp = xs
+            s = jnp.einsum("bqkgd,btkd->bqkgt", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            s = softcap(s, cap)
+            if mode != "full":
+                msk = kp[None, :] <= qpos[:, None]                      # causal
+                if mode == "window":
+                    msk &= kp[None, :] > (qpos[:, None] - window)
+                elif mode == "chunk":
+                    msk &= (kp[None, :] // window) == (qpos[:, None] // window)
+                s = jnp.where(msk[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            o_new = o * corr[..., None] + jnp.einsum(
+                "bqkgt,btkd->bqkgd", p.astype(vj.dtype), vj,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, o_new), None
+
+        # remat the kv-block body: backward recomputes the [qb,kvb]
+        # score/probability blocks instead of storing them per step —
+        # the flash-attention memory property under reverse-mode
+        (m, l, o), _ = lax.scan(jax.checkpoint(step), (m0, l0, o0), (
+            jnp.moveaxis(k_blocks, 1, 0), jnp.moveaxis(v_blocks, 1, 0), kp_blocks))
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        outs.append(o.reshape(B, qb, H, dh))
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, valid, *, cap=None):
+    """One-token attention against a cache.
+
+    q [B,H,dh]; k/v_cache [B,S,K,dh]; valid [B,S] or [S] bool.
+    Flash-decoding across a sequence-sharded cache comes for free under
+    GSPMD: the softmax/contraction over the sharded S dim lowers to partial
+    reductions + a tiny all-reduce.
+    """
+    B, H, dh = q.shape
+    K = k_cache.shape[2]
+    G = H // K
+    # cache operands cast to the query compute dtype (bf16 on TPU); f32
+    # accumulation via preferred_element_type — no f32 cache copy
+    qh = q.reshape(B, K, G, dh)
+    s = jnp.einsum("bkgd,btkd->bkgt", qh, k_cache.astype(q.dtype),
+                   preferred_element_type=jnp.float32)
+    s = s / math.sqrt(dh)
+    s = softcap(s, cap)
+    if valid.ndim == 1:
+        valid = valid[None, :]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p.astype(q.dtype),
+                   v_cache.astype(q.dtype),
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, H, dh).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- mlp
+
+def mlp_act(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(kind)
+
+
+def mlp(p, x, cfg):
+    """Gated (SwiGLU-style) or plain MLP."""
+    if cfg.mlp_gated:
+        h = mlp_act(x @ p["wi"], cfg.mlp_act) * (x @ p["wg"])
+    else:
+        h = mlp_act(x @ p["wi"], cfg.mlp_act)
+    return h @ p["wo"]

@@ -1,0 +1,130 @@
+"""Mixture-of-Experts layer — grouped capacity dispatch, TPU-native.
+
+Scatter-free-ish design (DESIGN.md §3): tokens are processed in *groups*
+aligned with the data-parallel shards (the GSPMD MoE pattern).  Within a
+group, each (token, slot) pair is ranked inside its chosen expert with a
+sort-free cummax trick, dropped beyond capacity, scattered into a dense
+[groups, E, C, d] buffer, pushed through the expert matmuls on the MXU, and
+gathered back weighted by the router gate.
+
+Sharding: the buffer and expert weights carry logical axis "experts"; the
+rule table (repro/dist/sharding.py) puts "experts" on the `model` mesh axis
+when E divides it (llama4: 128/16 → EP) and otherwise falls back to sharding
+d_ff within the expert (grok: 8 experts → TP-within-expert).  The g axis is
+"batch"-logical → `data`, so dispatch scatters stay device-local and the
+expert einsum induces the canonical all-to-all.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import mlp_act
+
+
+def _ranks_within_expert(eids: jnp.ndarray, num_experts: int) -> jnp.ndarray:
+    """rank[t] = #previous tokens in this group that chose the same expert.
+
+    eids [T] int32.  argsort-based: stable-sort token indices by expert, then
+    positions within equal-expert runs are (iota - run_start).
+    """
+    T = eids.shape[0]
+    order = jnp.argsort(eids, stable=True)                     # [T]
+    e_sorted = eids[order]
+    iota = jnp.arange(T, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), e_sorted[1:] != e_sorted[:-1]])
+    run_start = jax.lax.cummax(jnp.where(is_start, iota, 0))
+    pos_in_run = iota - run_start
+    ranks = jnp.zeros((T,), jnp.int32).at[order].set(pos_in_run)
+    return ranks
+
+
+def _pin_expert_weights(p, cfg):
+    """Force FSDP-sharded expert weights to gather *before* the expert
+    einsums.
+
+    Under FSDP the weights carry a `data` shard on d or f; left alone,
+    GSPMD contracts against the sharded dim and all-reduces the expert
+    *outputs* ([g,E,cap,f] — 5.5 TB/step measured on grok train_4k, §Perf
+    g2) instead of all-gathering the ~0.2 GB weight shard.  Pinning the
+    weights to their model-only sharding at use restores the intended
+    FSDP schedule: gather weights, compute locally, reduce grads.
+    No-op without an ambient mesh.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty or "model" not in mesh.axis_names:
+        return p
+    from jax.sharding import PartitionSpec as PS
+    msize = dict(zip(mesh.axis_names, mesh.axis_sizes))["model"]
+    if cfg.num_experts % msize == 0 and cfg.num_experts >= msize:
+        wi_spec, wo_spec = PS("model", None, None), PS("model", None, None)
+    elif cfg.d_ff % msize == 0:
+        wi_spec, wo_spec = PS(None, None, "model"), PS(None, "model", None)
+    else:
+        wi_spec = wo_spec = PS(None, None, None)
+    out = dict(p)
+    out["wi"] = jax.lax.with_sharding_constraint(p["wi"], wi_spec)
+    if "wg" in p:
+        out["wg"] = jax.lax.with_sharding_constraint(p["wg"], wi_spec)
+    out["wo"] = jax.lax.with_sharding_constraint(p["wo"], wo_spec)
+    return out
+
+
+def moe_mlp(p, x, cfg, *, groups: int):
+    """x [B, S, d] -> [B, S, d] through top-k routed experts.
+
+    p: router [d, E]; wi/wg [E, d, f]; wo [E, f, d].
+    """
+    # NOTE (§Perf g2, REFUTED): pinning FSDP'd expert weights to model-only
+    # sharding before the einsums (forcing a weight gather) was measured
+    # 2.5x WORSE on grok — GSPMD replicated the expert compute 8x instead.
+    # The helper is kept for reference; GSPMD's own schedule (output
+    # all-reduce over the weight-sharded contraction) wins here.
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    g = min(groups, T)
+    while T % g:
+        g -= 1
+    Tg = T // g
+    cap = max(8, int(-(-Tg * k * cfg.expert_capacity_factor // E)))
+    cap = min(cap, Tg)
+
+    xf = x.reshape(g, Tg, d)
+    logits = jnp.einsum("gtd,de->gte", xf, p["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, eidx = jax.lax.top_k(probs, k)                  # [g, Tg, k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # flatten (token, slot) pairs per group
+    e_flat = eidx.reshape(g, Tg * k)
+    ranks = jax.vmap(lambda e: _ranks_within_expert(e, E))(e_flat)
+    keep = (ranks < cap).astype(jnp.float32) * gate_vals.reshape(g, Tg * k)
+
+    # dispatch: dense [g, E, C, d] buffer (device-local scatter: g ~ data)
+    tok_idx = jnp.repeat(jnp.arange(Tg, dtype=jnp.int32), k)   # [Tg*k]
+    x_pairs = jnp.take(xf, tok_idx, axis=1)                    # [g, Tg*k, d]
+    buf = jnp.zeros((g, E, cap, d), x.dtype)
+    gi = jnp.broadcast_to(jnp.arange(g, dtype=jnp.int32)[:, None], e_flat.shape)
+    buf = buf.at[gi, e_flat, jnp.minimum(ranks, cap - 1)].add(
+        x_pairs * (ranks < cap)[..., None].astype(x.dtype))
+
+    # expert MLP on the MXU: [g, E, C, d] x [E, d, f]
+    if cfg.mlp_gated:
+        h = mlp_act(jnp.einsum("gecd,edf->gecf", buf, p["wi"]), cfg.mlp_act)
+        h = h * jnp.einsum("gecd,edf->gecf", buf, p["wg"])
+    else:
+        h = mlp_act(jnp.einsum("gecd,edf->gecf", buf, p["wi"]), cfg.mlp_act)
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["wo"])         # [g, E, C, d]
+
+    # combine: gather each (token, slot)'s expert output, weight by gate
+    out_pairs = out_buf[gi, e_flat, jnp.minimum(ranks, cap - 1)]   # [g, Tg*k, d]
+    out_pairs = out_pairs * keep[..., None].astype(out_pairs.dtype)
+    out = jnp.sum(out_pairs.reshape(g, Tg, k, d), axis=2)
+    # auxiliary load-balance loss ingredients (Switch-style)
+    me = jnp.mean(probs, axis=(0, 1))                              # [E]
+    ce = jnp.mean(
+        jax.nn.one_hot(eidx[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,355 @@
+"""Recurrent temporal-mixing blocks: RG-LRU (Griffin/RecurrentGemma),
+mLSTM and sLSTM (xLSTM).
+
+Each block exposes:
+  *_specs(cfg)                      — ParamSpec tree
+  *_train(p, x, cfg)                — full-sequence forward
+  *_decode(p, x1, state, cfg)       — one-token step, carrying state
+  *_state(cfg, batch)               — zero state (eval_shape-able)
+
+Train-time parallelization:
+  * RG-LRU is a linear diagonal recurrence → `lax.associative_scan` (O(log S)
+    depth, fully parallel — the TPU-appropriate form).
+  * mLSTM/sLSTM baseline is a sequential `lax.scan` over time.  mLSTM has a
+    chunkwise-parallel form (repro/models/mlstm_chunked.py) which is the
+    §Perf hillclimb for the xlstm arch; sLSTM is inherently sequential
+    (recurrent weights inside the nonlinearity — xLSTM paper §2.2).
+
+Cell states are kept in f32 regardless of activation dtype (stability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import apply_norm, mlp
+from repro.models.spec import ParamSpec
+
+
+def _norm_spec(d, kind, dtype):
+    if kind == "rms":
+        return {"scale": ParamSpec((d,), ("embed",), "ones", dtype=dtype)}
+    return {"scale": ParamSpec((d,), ("embed",), "ones", dtype=dtype),
+            "bias": ParamSpec((d,), ("embed",), "zeros", dtype=dtype)}
+
+
+def _blocked_scan(step, carry, xs, block: int):
+    """Two-level time scan: outer over S/block blocks, inner (rematted) over
+    block steps.
+
+    A flat S-step scan stores every per-step carry for the backward pass —
+    for mLSTM that is S × [B,H,dh,dh] f32 (the 93 GB/device peak measured on
+    xlstm train_4k, §Perf iteration x1).  Blocking stores carries only at
+    block boundaries (S/block of them) and recomputes inside the block on
+    the backward pass: memory ÷ block, +1 recompute of cheap elementwise
+    cell math.
+    """
+    S = jax.tree.leaves(xs)[0].shape[0]
+    b = min(block, S)
+    while S % b:
+        b -= 1
+    n = S // b
+    xs_b = jax.tree.map(lambda a: a.reshape((n, b) + a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def outer(carry, xb):
+        return lax.scan(step, carry, xb)
+
+    carry, ys_b = lax.scan(outer, carry, xs_b)
+    ys = jax.tree.map(lambda a: a.reshape((S,) + a.shape[2:]), ys_b)
+    return carry, ys
+
+
+def _causal_conv(u, kernel):
+    """Depthwise causal conv, u [B,S,w], kernel [taps,w]."""
+    taps = kernel.shape[0]
+    pad = jnp.pad(u, ((0, 0), (taps - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for t in range(taps):
+        out = out + pad[:, t: t + u.shape[1]] * kernel[taps - 1 - t]
+    return out
+
+
+def _conv_step(x1, conv_state, kernel):
+    """x1 [B,w]; conv_state [B,taps-1,w] (most recent last).
+
+    Matches _causal_conv: kernel[j] multiplies x[t-j], so the window
+    (oldest..newest) contracts against the reversed kernel.
+    """
+    taps = kernel.shape[0]
+    window = jnp.concatenate([conv_state, x1[:, None]], axis=1)  # [B,taps,w]
+    out = jnp.einsum("btw,tw->bw", window, kernel[::-1])
+    return out, window[:, 1:]
+
+
+# =========================================================================== RG-LRU
+
+def rglru_specs(cfg, dtype):
+    d, w = cfg.d_model, cfg.lru_width or cfg.d_model
+    return {
+        "ln1": _norm_spec(d, cfg.norm, dtype),
+        "w_gate": ParamSpec((d, w), ("embed", "state"), dtype=dtype),
+        "w_rec": ParamSpec((d, w), ("embed", "state"), dtype=dtype),
+        "conv": ParamSpec((4, w), (None, "state"), scale=0.5, dtype=dtype),
+        "ga_w": ParamSpec((w,), ("state",), "zeros", dtype=dtype),
+        "ga_b": ParamSpec((w,), ("state",), "zeros", dtype=dtype),
+        "gx_w": ParamSpec((w,), ("state",), "zeros", dtype=dtype),
+        "gx_b": ParamSpec((w,), ("state",), "zeros", dtype=dtype),
+        "lam": ParamSpec((w,), ("state",), "ones", dtype=jnp.float32),
+        "w_out": ParamSpec((w, d), ("state", "embed"), dtype=dtype),
+    }
+
+
+_LRU_C = 8.0
+
+
+def _rglru_gates(p, u):
+    """u [.., w] conv output -> (log_a, gated_input) in f32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf * p["ga_w"].astype(jnp.float32) + p["ga_b"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf * p["gx_w"].astype(jnp.float32) + p["gx_b"].astype(jnp.float32))
+    log_a = -_LRU_C * r * jax.nn.softplus(p["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+    return a, b
+
+
+def rglru_train(p, x, cfg):
+    h = apply_norm(x, p["ln1"], cfg.norm)
+    g = jax.nn.gelu(h @ p["w_gate"])
+    u = _causal_conv(h @ p["w_rec"], p["conv"])
+    a, b = _rglru_gates(p, u)
+
+    def comb(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, hseq = lax.associative_scan(comb, (a, b), axis=1)
+    out = (g * hseq.astype(x.dtype)) @ p["w_out"]
+    u_in = (apply_norm(x, p["ln1"], cfg.norm) @ p["w_rec"]).astype(jnp.float32)
+    state = {"h": hseq[:, -1], "conv": u_in[:, -3:]}
+    return x + out, state
+
+
+def rglru_state(cfg, batch):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, 3, w), jnp.float32),
+    }
+
+
+def rglru_decode(p, x1, state, cfg):
+    """x1 [B, d] one token."""
+    h = apply_norm(x1, p["ln1"], cfg.norm)
+    g = jax.nn.gelu(h @ p["w_gate"])
+    u_in = (h @ p["w_rec"]).astype(jnp.float32)
+    u, conv_new = _conv_step(u_in, state["conv"], p["conv"].astype(jnp.float32))
+    a, b = _rglru_gates(p, u)
+    h_new = a * state["h"] + b
+    out = (g * h_new.astype(x1.dtype)) @ p["w_out"]
+    return x1 + out, {"h": h_new, "conv": conv_new}
+
+
+# =========================================================================== mLSTM
+
+def _mlstm_dims(cfg):
+    d = cfg.d_model
+    di = 2 * d
+    H = cfg.num_heads
+    dh = di // H
+    return d, di, H, dh
+
+
+def mlstm_specs(cfg, dtype):
+    d, di, H, dh = _mlstm_dims(cfg)
+    return {
+        "ln1": _norm_spec(d, cfg.norm, dtype),
+        "w_up": ParamSpec((d, di), ("embed", "state"), dtype=dtype),
+        "w_z": ParamSpec((d, di), ("embed", "state"), dtype=dtype),
+        "conv": ParamSpec((4, di), (None, "state"), scale=0.5, dtype=dtype),
+        "wq": ParamSpec((di, H, dh), ("state", "heads", None), dtype=dtype),
+        "wk": ParamSpec((di, H, dh), ("state", "heads", None), dtype=dtype),
+        "wv": ParamSpec((di, H, dh), ("state", "heads", None), dtype=dtype),
+        "w_if": ParamSpec((di, 2 * H), ("state", None), scale=0.1, dtype=dtype),
+        "b_if": ParamSpec((2 * H,), (None,), "zeros", dtype=jnp.float32),
+        "w_down": ParamSpec((di, d), ("state", "embed"), dtype=dtype),
+    }
+
+
+def _mlstm_cell_step(C, n, m, q, k, v, logi, logf):
+    """One stabilized mLSTM step.  C [B,H,dh,dh]; n [B,H,dh]; m [B,H]."""
+    m_new = jnp.maximum(logf + m, logi)
+    i_p = jnp.exp(logi - m_new)
+    f_p = jnp.exp(logf + m - m_new)
+    C_new = f_p[..., None, None] * C + i_p[..., None, None] * (
+        v[..., :, None] * k[..., None, :])
+    n_new = f_p[..., None] * n + i_p[..., None] * k
+    num = jnp.einsum("bhde,bhe->bhd", C_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, q)), 1.0)
+    h = num / den[..., None]
+    return C_new, n_new, m_new, h
+
+
+def _mlstm_qkv(p, u):
+    """u [.., di] conv output -> q,k,v,[logi,logf] in f32."""
+    q = jnp.einsum("...i,ihd->...hd", u, p["wq"]).astype(jnp.float32)
+    k = jnp.einsum("...i,ihd->...hd", u, p["wk"]).astype(jnp.float32)
+    v = jnp.einsum("...i,ihd->...hd", u, p["wv"]).astype(jnp.float32)
+    dh = q.shape[-1]
+    k = k / jnp.sqrt(jnp.float32(dh))
+    gates = (u @ p["w_if"]).astype(jnp.float32) + p["b_if"]
+    H = q.shape[-2]
+    logi = gates[..., :H]
+    logf = jax.nn.log_sigmoid(gates[..., H:])
+    return q, k, v, logi, logf
+
+
+def mlstm_train(p, x, cfg):
+    d, di, H, dh = _mlstm_dims(cfg)
+    B, S, _ = x.shape
+    hin = apply_norm(x, p["ln1"], cfg.norm)
+    z = hin @ p["w_z"]
+    u = _causal_conv(hin @ p["w_up"], p["conv"])
+    q, k, v, logi, logf = _mlstm_qkv(p, u)
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, it, ft = xs
+        C, n, m, h = _mlstm_cell_step(C, n, m, qt, kt, vt, it, ft)
+        return (C, n, m), h
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.zeros((B, H), jnp.float32)
+    if cfg.mlstm_form == "chunkwise":
+        from repro.models.mlstm_chunked import mlstm_chunkwise
+        hseq, (Cf, nf, mf) = mlstm_chunkwise(q, k, v, logi, logf, chunk=128)
+        hs = hseq.reshape(B, S, di)
+    else:
+        xs = jax.tree.map(lambda a: jnp.moveaxis(a, 1, 0),
+                          (q, k, v, logi, logf))
+        (Cf, nf, mf), hs = _blocked_scan(step, (C0, n0, m0), xs, block=128)
+        hs = jnp.moveaxis(hs, 0, 1).reshape(B, S, di)  # [B,S,H,dh]->[B,S,di]
+    out = (hs.astype(x.dtype) * jax.nn.silu(z)) @ p["w_down"]
+    u_in = (hin @ p["w_up"]).astype(jnp.float32)
+    state = {"C": Cf, "n": nf, "m": mf, "conv": u_in[:, -3:]}
+    return x + out, state
+
+
+def mlstm_state(cfg, batch):
+    d, di, H, dh = _mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+        "conv": jnp.zeros((batch, 3, di), jnp.float32),
+    }
+
+
+def mlstm_decode(p, x1, state, cfg):
+    hin = apply_norm(x1, p["ln1"], cfg.norm)
+    z = hin @ p["w_z"]
+    u_in = (hin @ p["w_up"]).astype(jnp.float32)
+    u, conv_new = _conv_step(u_in, state["conv"], p["conv"].astype(jnp.float32))
+    q, k, v, logi, logf = _mlstm_qkv(p, u.astype(x1.dtype))
+    C, n, m, h = _mlstm_cell_step(state["C"], state["n"], state["m"],
+                                  q, k, v, logi, logf)
+    di = u.shape[-1]
+    hf = h.reshape(x1.shape[0], di)
+    out = (hf.astype(x1.dtype) * jax.nn.silu(z)) @ p["w_down"]
+    return x1 + out, {"C": C, "n": n, "m": m, "conv": conv_new}
+
+
+# =========================================================================== sLSTM
+
+def _slstm_dims(cfg):
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    fd = -(-int(d * 8 / 3) // 64) * 64
+    return d, H, dh, fd
+
+
+def slstm_specs(cfg, dtype):
+    d, H, dh, fd = _slstm_dims(cfg)
+    gate = lambda: ParamSpec((d, H, dh), ("embed", "heads", None),
+                             scale=0.5, dtype=dtype)
+    rec = lambda: ParamSpec((H, dh, dh), ("heads", None, None),
+                            scale=0.5, dtype=dtype)
+    bias = lambda: ParamSpec((H, dh), ("heads", None), "zeros",
+                             dtype=jnp.float32)
+    return {
+        "ln1": _norm_spec(d, cfg.norm, dtype),
+        "wz": gate(), "wi": gate(), "wf": gate(), "wo": gate(),
+        "rz": rec(), "ri": rec(), "rf": rec(), "ro": rec(),
+        "bz": bias(), "bi": bias(), "bf": bias(), "bo": bias(),
+        "ln2": _norm_spec(d, cfg.norm, dtype),
+        "ffn_wi": ParamSpec((d, 2 * fd), ("embed", "mlp"), dtype=dtype),
+        "ffn_wo": ParamSpec((fd, d), ("mlp", "embed"), dtype=dtype),
+    }
+
+
+def _slstm_step(p, xt, c, n, m, h):
+    """xt [B,d] pre-projected gate inputs; states [B,H,dh] f32."""
+
+    def pre(w, r, b):
+        return (jnp.einsum("bd,dhe->bhe", xt, w).astype(jnp.float32)
+                + jnp.einsum("bhd,hde->bhe", h, r.astype(jnp.float32)) + b)
+
+    z = jnp.tanh(pre(p["wz"], p["rz"], p["bz"]))
+    logi = pre(p["wi"], p["ri"], p["bi"])
+    logf = jax.nn.log_sigmoid(pre(p["wf"], p["rf"], p["bf"]))
+    o = jax.nn.sigmoid(pre(p["wo"], p["ro"], p["bo"]))
+    m_new = jnp.maximum(logf + m, logi)
+    i_p = jnp.exp(logi - m_new)
+    f_p = jnp.exp(logf + m - m_new)
+    c_new = f_p * c + i_p * z
+    n_new = jnp.maximum(f_p * n + i_p, 1e-6)
+    h_new = o * c_new / n_new
+    return c_new, n_new, m_new, h_new
+
+
+def slstm_train(p, x, cfg):
+    d, H, dh, fd = _slstm_dims(cfg)
+    B, S, _ = x.shape
+    hin = apply_norm(x, p["ln1"], cfg.norm)
+
+    def step(carry, xt):
+        c, n, m, h = carry
+        c, n, m, h = _slstm_step(p, xt, c, n, m, h)
+        return (c, n, m, h), h
+
+    z0 = jnp.zeros((B, H, dh), jnp.float32)
+    (cf, nf, mf, hfin), hs = _blocked_scan(step, (z0, z0, z0, z0),
+                                           jnp.moveaxis(hin, 1, 0), block=128)
+    hs = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    x = x + hs
+    # gated FFN (xLSTM post-up-projection block)
+    hf = apply_norm(x, p["ln2"], cfg.norm)
+    u = hf @ p["ffn_wi"]
+    a, b = jnp.split(u, 2, axis=-1)
+    out = x + (jax.nn.gelu(a) * b) @ p["ffn_wo"]
+    state = {"c": cf, "n": nf, "m": mf, "h": hfin}
+    return out, state
+
+
+def slstm_state(cfg, batch):
+    d, H, dh, fd = _slstm_dims(cfg)
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"c": z, "n": z, "m": z, "h": z}
+
+
+def slstm_decode(p, x1, state, cfg):
+    d, H, dh, fd = _slstm_dims(cfg)
+    hin = apply_norm(x1, p["ln1"], cfg.norm)
+    c, n, m, h = _slstm_step(p, hin, state["c"], state["n"], state["m"],
+                             state["h"])
+    x1 = x1 + h.reshape(x1.shape[0], d).astype(x1.dtype)
+    hf = apply_norm(x1, p["ln2"], cfg.norm)
+    u = hf @ p["ffn_wi"]
+    a, b = jnp.split(u, 2, axis=-1)
+    out = x1 + (jax.nn.gelu(a) * b) @ p["ffn_wo"]
+    return out, {"c": c, "n": n, "m": m, "h": h}

@@ -1,0 +1,80 @@
+"""Parameter specification system — one source of truth for shape, logical
+sharding axes, and initialization of every parameter.
+
+A model definition builds a pytree of :class:`ParamSpec`.  From that tree:
+
+  * ``init_params``  — materialize arrays (smoke tests, real training)
+  * ``abstract_params`` — ShapeDtypeStructs (dry-run: no allocation)
+  * ``param_pspecs`` — PartitionSpecs via the sharding rule table
+    (repro/dist/sharding.py), with divisibility fallback to replication.
+
+Logical axis names used across models:
+  "embed"   d_model              "mlp"     d_ff
+  "heads"   attention heads      "kv"      kv heads
+  "head_dim"                     "vocab"   (padded) vocabulary
+  "experts" MoE experts          "layers"  scanned layer stack
+  "state"   recurrent state width
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]  # logical axis per dim (None = no shard)
+    init: str = "normal"  # "normal" | "zeros" | "ones" | "embed"
+    scale: float = 1.0    # stddev multiplier (fan-in handled per init kind)
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_one(spec: ParamSpec, key) -> jnp.ndarray:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "embed":
+        std = spec.scale
+    else:
+        fan_in = spec.shape[0] if len(spec.shape) >= 2 else max(spec.shape[-1], 1)
+        std = spec.scale / np.sqrt(fan_in)
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(spec.dtype)
+
+
+def _tree_with_keys(tree, key):
+    """Deterministic per-leaf key from the tree path."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    return leaves, treedef, keys
+
+
+def init_params(spec_tree, key):
+    leaves, treedef, keys = _tree_with_keys(spec_tree, key)
+    out = [_init_one(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(spec_tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree, is_leaf=is_spec
+    )
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )

@@ -1,0 +1,620 @@
+"""Model assembly: param specs, train forward, prefill, and decode step for
+every assigned architecture family (dense / MoE / enc-dec / VLM / hybrid /
+SSM), driven entirely by ArchConfig.
+
+Layer-stack structure: the config's ``block_pattern`` is cycled over
+``num_layers``.  Full pattern repetitions are *scanned* (params stacked on a
+leading "layers" axis — one trace per group keeps compile time flat in
+depth); leftover tail layers are applied unscanned.  Each block type owns
+its params, its decode-cache layout, and its train/decode apply:
+
+  attn           global causal attention + MLP/MoE
+  attn_chunked   chunked/windowed local attention + MLP/MoE (ring cache)
+  rglru          RG-LRU temporal mixing + MLP
+  mlstm / slstm  xLSTM blocks (self-contained)
+
+Cross-entropy is computed in sequence chunks against the (model-sharded)
+unembedding so the full [B,S,V] logits tensor never materializes — with
+202K vocabularies that tensor would dominate HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import recurrent as R
+from repro.models.layers import (apply_norm, apply_rope, decode_attention,
+                                 flash_attention, mlp)
+from repro.models.moe import moe_mlp
+from repro.models.spec import ParamSpec
+
+MAX_LEARNED_POS = 32768
+
+
+# =========================================================================== specs
+
+def _norm_spec(d, kind, dtype):
+    if kind == "rms":
+        return {"scale": ParamSpec((d,), ("embed",), "ones", dtype=dtype)}
+    return {"scale": ParamSpec((d,), ("embed",), "ones", dtype=dtype),
+            "bias": ParamSpec((d,), ("embed",), "zeros", dtype=dtype)}
+
+
+def _mlp_specs(cfg: ArchConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.num_experts:
+        E = cfg.num_experts
+        s = {
+            "router": ParamSpec((d, E), ("embed", None), dtype=jnp.float32),
+            "wi": ParamSpec((E, d, f), ("experts", "embed", "mlp"), dtype=dtype),
+            "wo": ParamSpec((E, f, d), ("experts", "mlp", "embed"), dtype=dtype),
+        }
+        if cfg.mlp_gated:
+            s["wg"] = ParamSpec((E, d, f), ("experts", "embed", "mlp"), dtype=dtype)
+        return s
+    s = {
+        "wi": ParamSpec((d, f), ("embed", "mlp"), dtype=dtype),
+        "wo": ParamSpec((f, d), ("mlp", "embed"), dtype=dtype),
+    }
+    if cfg.mlp_gated:
+        s["wg"] = ParamSpec((d, f), ("embed", "mlp"), dtype=dtype)
+    return s
+
+
+def _attn_specs(cfg: ArchConfig, dtype, cross: bool = False):
+    d, H, K, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    s = {
+        "ln1": _norm_spec(d, cfg.norm, dtype),
+        "wq": ParamSpec((d, H, dh), ("embed", "heads", None), dtype=dtype),
+        "wk": ParamSpec((d, K, dh), ("embed", "kv", None), dtype=dtype),
+        "wv": ParamSpec((d, K, dh), ("embed", "kv", None), dtype=dtype),
+        "wo": ParamSpec((H, dh, d), ("heads", None, "embed"), dtype=dtype),
+        "ln2": _norm_spec(d, cfg.norm, dtype),
+        "mlp": _mlp_specs(cfg, dtype),
+    }
+    if cfg.qk_norm:
+        s["qn"] = ParamSpec((dh,), (None,), "ones", dtype=dtype)
+        s["kn"] = ParamSpec((dh,), (None,), "ones", dtype=dtype)
+    if cross:
+        s["lnx"] = _norm_spec(d, cfg.norm, dtype)
+        s["xq"] = ParamSpec((d, H, dh), ("embed", "heads", None), dtype=dtype)
+        s["xk"] = ParamSpec((d, K, dh), ("embed", "kv", None), dtype=dtype)
+        s["xv"] = ParamSpec((d, K, dh), ("embed", "kv", None), dtype=dtype)
+        s["xo"] = ParamSpec((H, dh, d), ("heads", None, "embed"), dtype=dtype)
+    return s
+
+
+def _block_specs(cfg: ArchConfig, ltype: str, dtype, cross=False):
+    if ltype in ("attn", "attn_chunked"):
+        return _attn_specs(cfg, dtype, cross=cross)
+    if ltype == "rglru":
+        s = R.rglru_specs(cfg, dtype)
+        s["ln2"] = _norm_spec(cfg.d_model, cfg.norm, dtype)
+        s["mlp"] = _mlp_specs(cfg, dtype)
+        return s
+    if ltype == "mlstm":
+        return R.mlstm_specs(cfg, dtype)
+    if ltype == "slstm":
+        return R.slstm_specs(cfg, dtype)
+    raise ValueError(ltype)
+
+
+def _stack_specs(tree, n: int):
+    return jax.tree.map(
+        lambda s: dataclasses.replace(
+            s, shape=(n,) + s.shape, logical=("layers",) + s.logical),
+        tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _layer_layout(cfg: ArchConfig):
+    """(pattern, n_groups, tail_types)."""
+    pat = cfg.block_pattern
+    n_groups = cfg.num_layers // len(pat)
+    tail = cfg.layer_types()[n_groups * len(pat):]
+    return pat, n_groups, tail
+
+
+def param_specs(cfg: ArchConfig, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    d, V = cfg.d_model, cfg.vocab_padded
+    pat, n_groups, tail = _layer_layout(cfg)
+    cross = cfg.is_encoder_decoder
+    group = {f"b{i}": _block_specs(cfg, lt, dtype, cross=cross)
+             for i, lt in enumerate(pat)}
+    specs: Dict[str, Any] = {
+        "embed": ParamSpec((V, d), ("vocab", "embed"), "embed", scale=0.02,
+                           dtype=dtype),
+        "layers": _stack_specs(group, n_groups) if n_groups else {},
+        "tail": {f"t{i}": _block_specs(cfg, lt, dtype, cross=cross)
+                 for i, lt in enumerate(tail)},
+        "ln_f": _norm_spec(d, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((d, V), ("embed", "vocab"), scale=1.0,
+                                     dtype=dtype)
+    if cfg.pos == "learned":
+        specs["pos_embed"] = ParamSpec((MAX_LEARNED_POS, d), (None, "embed"),
+                                       "embed", scale=0.02, dtype=dtype)
+    if cfg.is_encoder_decoder:
+        enc_block = _attn_specs(cfg, dtype, cross=False)
+        specs["encoder"] = {
+            "pos": ParamSpec((cfg.encoder_seq, d), (None, "embed"), "embed",
+                             scale=0.02, dtype=dtype),
+            "layers": _stack_specs(
+                {"b0": enc_block}, cfg.encoder_layers),
+            "ln_f": _norm_spec(d, cfg.norm, dtype),
+        }
+    return specs
+
+
+# =========================================================================== blocks (train)
+
+def pin_batch_activation(x):
+    """Constrain an activation's leading dim to the data axes, rest
+    replicated.
+
+    With FSDP the *parameters* carry the `data` axis (e.g. the embedding
+    table is [V:model, d:data]); without this pin GSPMD propagates the
+    d:data sharding into the activations and silently *replicates the
+    batch* — measured on grok train_4k as 16× redundant attention compute
+    plus score-sized all-reduces (§Perf iteration g1).  No-op without an
+    ambient mesh.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    daxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if not daxes:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    dsize = 1
+    for a in daxes:
+        dsize *= sizes[a]
+    if x.shape[0] % dsize or x.shape[0] < dsize:
+        return x
+    lead = daxes if len(daxes) > 1 else daxes[0]
+    from jax.sharding import PartitionSpec as PS
+    return lax.with_sharding_constraint(
+        x, PS(lead, *([None] * (x.ndim - 1))))
+
+
+def _pin_replicated_heads(x, cfg):
+    """Force partial-sum reduction at q/k/v granularity when heads cannot
+    shard on the model axis (e.g. llama4's 40 heads on 16).
+
+    With the head count indivisible, the projection weight falls back to
+    d-sharding (row parallel); left alone, GSPMD defers the partial-sum
+    all-reduce *into the attention scores* — an 8x (= kv_block/head_dim)
+    inflation measured at 41 TB/step on llama4 train_4k (§Perf iteration
+    l2).  Constraining q/k/v to model-replicated pins the reduction to the
+    [B,S,H,dh] tensor instead.  No-op without an ambient mesh.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty or "model" not in mesh.axis_names:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    if cfg.num_heads % sizes["model"] == 0:
+        return x
+    daxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    lead = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+    from jax.sharding import PartitionSpec as PS
+    return lax.with_sharding_constraint(
+        x, PS(lead, *([None] * (x.ndim - 1))))
+
+
+def _qkv(p, h, cfg, prefix=""):
+    q = jnp.einsum("bsd,dhe->bshe", h, p[prefix + ("xq" if prefix else "wq")])
+    k = jnp.einsum("bsd,dke->bske", h, p[prefix + ("xk" if prefix else "wk")])
+    v = jnp.einsum("bsd,dke->bske", h, p[prefix + ("xv" if prefix else "wv")])
+    if h.ndim == 3:
+        q = _pin_replicated_heads(q, cfg)
+        k = _pin_replicated_heads(k, cfg)
+        v = _pin_replicated_heads(v, cfg)
+    return q, k, v
+
+
+def _qk_normalize(p, q, k, cfg):
+    if not cfg.qk_norm:
+        return q, k
+    def rn(x, g):
+        x32 = x.astype(jnp.float32)
+        v = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+        return (x32 * lax.rsqrt(v + 1e-6)).astype(x.dtype) * g
+    return rn(q, p["qn"]), rn(k, p["kn"])
+
+
+def _attn_train(p, x, cfg: ArchConfig, ltype, enc_out=None,
+                positions=None, cache_len: int = 0):
+    h = apply_norm(x, p["ln1"], cfg.norm)
+    q, k, v = _qkv(p, h, cfg)
+    q, k = _qk_normalize(p, q, k, cfg)
+    if cfg.pos == "rope":
+        pos = positions if positions is not None else jnp.arange(
+            x.shape[1], dtype=jnp.int32)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    mode = "causal" if ltype == "attn" else "chunk"
+    window = cfg.attn_chunk if ltype == "attn_chunked" else None
+    if ltype == "attn_chunked" and cfg.family == "hybrid":
+        mode = "window"
+        window = cfg.local_window
+    o = flash_attention(q, k, v, mode=mode, window=window,
+                        cap=cfg.logit_softcap)
+    x = x + jnp.einsum("bshe,hed->bsd", o, p["wo"])
+
+    kx = vx = None
+    if enc_out is not None:
+        hx = apply_norm(x, p["lnx"], cfg.norm)
+        qx = jnp.einsum("bsd,dhe->bshe", hx, p["xq"])
+        kx = jnp.einsum("bsd,dke->bske", enc_out, p["xk"])
+        vx = jnp.einsum("bsd,dke->bske", enc_out, p["xv"])
+        ox = flash_attention(qx, kx, vx, mode="full")
+        x = x + jnp.einsum("bshe,hed->bsd", ox, p["xo"])
+
+    h2 = apply_norm(x, p["ln2"], cfg.norm)
+    if cfg.num_experts:
+        out, aux = moe_mlp(p["mlp"], h2, cfg, groups=cfg.moe_groups)
+    else:
+        out, aux = mlp(p["mlp"], h2, cfg), 0.0
+
+    cache = None
+    if cache_len:
+        cache = _kv_to_cache(cfg, ltype, k, v, cache_len)
+        if kx is not None:
+            cache["xk"] = kx.astype(jnp.bfloat16)
+            cache["xv"] = vx.astype(jnp.bfloat16)
+    return x + out, cache, aux
+
+
+def _kv_to_cache(cfg, ltype, k, v, cache_len: int):
+    """Pack full-sequence K/V [B,S,K,dh] into a decode cache of cache_len."""
+    B, S, K, dh = k.shape
+    if ltype == "attn_chunked":
+        W = cfg.local_window if cfg.family == "hybrid" else cfg.attn_chunk
+        W = min(W, cache_len)
+        take = min(W, S)
+        kw = k[:, -take:]
+        vw = v[:, -take:]
+        kpos = jnp.arange(S - take, S, dtype=jnp.int32)
+        if take < W:
+            pad = W - take
+            kw = jnp.pad(kw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vw = jnp.pad(vw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            kpos = jnp.concatenate([kpos, jnp.full((pad,), -1, jnp.int32)])
+        # ring layout: slot = pos % W
+        slots = jnp.where(kpos >= 0, kpos % W, jnp.arange(W) * 0 + jnp.arange(W))
+        kr = jnp.zeros_like(kw).at[:, slots].set(kw)
+        vr = jnp.zeros_like(vw).at[:, slots].set(vw)
+        pr = jnp.full((W,), -1, jnp.int32).at[slots].set(kpos)
+        return {"k": kr.astype(jnp.bfloat16), "v": vr.astype(jnp.bfloat16),
+                "kpos": pr}
+    assert S <= cache_len, (
+        f"prefill length {S} (incl. any frontend prefix) exceeds cache_len "
+        f"{cache_len}")
+    pad = cache_len - S
+    kf = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vf = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = _quant(kf)
+        vq, vs = _quant(vf)
+        return {"k": kq, "v": vq, "ks": ks, "vs": vs}
+    return {"k": kf.astype(jnp.bfloat16), "v": vf.astype(jnp.bfloat16)}
+
+
+def _block_train(p, x, cfg, ltype, enc_out=None, cache_len: int = 0):
+    """returns (x, cache_entry_or_None, aux_loss)."""
+    if ltype in ("attn", "attn_chunked"):
+        return _attn_train(p, x, cfg, ltype, enc_out, cache_len=cache_len)
+    if ltype == "rglru":
+        x, st = R.rglru_train(p, x, cfg)
+        h2 = apply_norm(x, p["ln2"], cfg.norm)
+        return x + mlp(p["mlp"], h2, cfg), (st if cache_len else None), 0.0
+    if ltype == "mlstm":
+        x, st = R.mlstm_train(p, x, cfg)
+        return x, (st if cache_len else None), 0.0
+    if ltype == "slstm":
+        x, st = R.slstm_train(p, x, cfg)
+        return x, (st if cache_len else None), 0.0
+    raise ValueError(ltype)
+
+
+def _remat_wrap(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        # save every dot output: backward never recomputes matmuls, hence
+        # never replays their TP collectives (trade: saved-activation HBM)
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_saveable)
+    return jax.checkpoint(fn)
+
+
+# =========================================================================== forward (train)
+
+def _embed_tokens(params, cfg, tokens):
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def _encoder_forward(params, cfg, frames):
+    p = params["encoder"]
+    x = frames + p["pos"][None, : frames.shape[1]]
+
+    # encoder attention is bidirectional (mode="full")
+    def enc_block(x, gp):
+        pp = gp["b0"]
+        h = apply_norm(x, pp["ln1"], cfg.norm)
+        q, k, v = _qkv(pp, h, cfg)
+        o = flash_attention(q, k, v, mode="full")
+        x = x + jnp.einsum("bshe,hed->bsd", o, pp["wo"])
+        h2 = apply_norm(x, pp["ln2"], cfg.norm)
+        return x + mlp(pp["mlp"], h2, cfg), None
+
+    x, _ = lax.scan(_remat_wrap(enc_block, cfg.remat), x, p["layers"])
+    return apply_norm(x, p["ln_f"], cfg.norm)
+
+
+def forward(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],
+            cache_len: int = 0):
+    """Full-sequence forward -> final hidden states [B, S, d] (+ aux, caches).
+
+    batch: tokens [B, S_txt]; optional "frames" [B,Tenc,d] (audio stub),
+    "patches" [B,P,d] (vision stub).  With ``cache_len`` > 0 this is the
+    *prefill* path: per-layer decode caches (KV packed/quantized to
+    ``cache_len`` slots, recurrent final states) are assembled and returned
+    in the same structure `init_cache` produces.
+    """
+    tokens = batch["tokens"]
+    x = pin_batch_activation(_embed_tokens(params, cfg, tokens))
+    enc_out = None
+    if cfg.frontend == "vision_stub" and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+    if cfg.is_encoder_decoder:
+        enc_out = _encoder_forward(params, cfg, batch["frames"])
+    if cfg.pos == "learned":
+        x = x + params["pos_embed"][None, : x.shape[1]]
+
+    pat, n_groups, tail = _layer_layout(cfg)
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def group_fn(carry, gp):
+        x, aux = carry
+        caches = {}
+        for i, lt in enumerate(pat):
+            x, c, a = _block_train(gp[f"b{i}"], x, cfg, lt, enc_out,
+                                   cache_len=cache_len)
+            x = pin_batch_activation(x)
+            aux = aux + a
+            if cache_len:
+                caches[f"b{i}"] = c
+        return (x, aux), (caches if cache_len else None)
+
+    carry = (x, aux0)
+    ys = None
+    if n_groups:
+        carry, ys = lax.scan(_remat_wrap(group_fn, cfg.remat), carry,
+                             params["layers"])
+    x, aux = carry
+    tail_caches = {}
+    for i, lt in enumerate(tail):
+        x, c, a = _block_train(params["tail"][f"t{i}"], x, cfg, lt, enc_out,
+                               cache_len=cache_len)
+        aux = aux + a
+        if cache_len:
+            tail_caches[f"t{i}"] = c
+    x = apply_norm(x, params["ln_f"], cfg.norm)
+    cache = {"layers": ys or {}, "tail": tail_caches} if cache_len else None
+    return x, aux, cache
+
+
+def unembed(params, cfg, x):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head
+
+
+def xent_loss(params, cfg: ArchConfig, x, targets, mask, seq_chunk=1024):
+    """Chunked softmax cross-entropy: never materializes [B,S,V].
+
+    x [B,S,d]; targets/mask [B,S].
+    """
+    B, S, d = x.shape
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    c = min(seq_chunk, S)
+    while S % c:
+        c -= 1
+    n = S // c
+
+    def chunk_loss(carry, xs):
+        xc, tc, mc = xs                       # [B,c,d], [B,c], [B,c]
+        logits = (xc @ head).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return carry + jnp.sum(nll), None
+
+    xs = (x.reshape(B, n, c, d).swapaxes(0, 1),
+          targets.reshape(B, n, c).swapaxes(0, 1),
+          mask.reshape(B, n, c).swapaxes(0, 1))
+    total, _ = lax.scan(chunk_loss, jnp.zeros((), jnp.float32), xs)
+    return total / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# =========================================================================== caches
+
+def _attn_cache(cfg, ltype, batch, seq_len):
+    K, dh = cfg.num_kv_heads, cfg.head_dim_
+    if ltype == "attn_chunked":
+        W = cfg.local_window if cfg.family == "hybrid" else cfg.attn_chunk
+        W = min(W, seq_len)
+        return {
+            "k": jnp.zeros((batch, W, K, dh), jnp.bfloat16),
+            "v": jnp.zeros((batch, W, K, dh), jnp.bfloat16),
+            "kpos": jnp.full((W,), -1, jnp.int32),
+        }
+    if cfg.kv_cache_dtype == "int8":
+        return {
+            "k": jnp.zeros((batch, seq_len, K, dh), jnp.int8),
+            "v": jnp.zeros((batch, seq_len, K, dh), jnp.int8),
+            "ks": jnp.zeros((batch, seq_len, K), jnp.float32),
+            "vs": jnp.zeros((batch, seq_len, K), jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((batch, seq_len, K, dh), jnp.bfloat16),
+        "v": jnp.zeros((batch, seq_len, K, dh), jnp.bfloat16),
+    }
+
+
+def _block_cache(cfg, ltype, batch, seq_len):
+    if ltype in ("attn", "attn_chunked"):
+        c = _attn_cache(cfg, ltype, batch, seq_len)
+        if cfg.is_encoder_decoder:
+            K, dh = cfg.num_kv_heads, cfg.head_dim_
+            c["xk"] = jnp.zeros((batch, cfg.encoder_seq, K, dh), jnp.bfloat16)
+            c["xv"] = jnp.zeros((batch, cfg.encoder_seq, K, dh), jnp.bfloat16)
+        return c
+    if ltype == "rglru":
+        return R.rglru_state(cfg, batch)
+    if ltype == "mlstm":
+        return R.mlstm_state(cfg, batch)
+    if ltype == "slstm":
+        return R.slstm_state(cfg, batch)
+    raise ValueError(ltype)
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int):
+    pat, n_groups, tail = _layer_layout(cfg)
+    group = {f"b{i}": _block_cache(cfg, lt, batch, seq_len)
+             for i, lt in enumerate(pat)}
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape), group
+    ) if n_groups else {}
+    return {
+        "layers": stacked,
+        "tail": {f"t{i}": _block_cache(cfg, lt, batch, seq_len)
+                 for i, lt in enumerate(tail)},
+    }
+
+
+# =========================================================================== decode
+
+def _quant(x):
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-8
+    q = jnp.round(x.astype(jnp.float32) / s[..., None]).astype(jnp.int8)
+    return q, s
+
+
+def _attn_decode(p, x1, cache, pos, cfg, ltype):
+    """x1 [B, d]; returns (x1_out, cache)."""
+    B, d = x1.shape
+    h = apply_norm(x1, p["ln1"], cfg.norm)
+    q = jnp.einsum("bd,dhe->bhe", h, p["wq"])
+    k1 = jnp.einsum("bd,dke->bke", h, p["wk"])
+    v1 = jnp.einsum("bd,dke->bke", h, p["wv"])
+    if cfg.qk_norm:
+        q, k1 = _qk_normalize(p, q, k1, cfg)
+    if cfg.pos == "rope":
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k1 = apply_rope(k1, pos, cfg.rope_theta)
+
+    if ltype == "attn_chunked":
+        W = cache["k"].shape[1]
+        slot = pos % W
+        cache = dict(cache)
+        cache["k"] = lax.dynamic_update_index_in_dim(
+            cache["k"], k1.astype(cache["k"].dtype), slot, axis=1)
+        cache["v"] = lax.dynamic_update_index_in_dim(
+            cache["v"], v1.astype(cache["v"].dtype), slot, axis=1)
+        cache["kpos"] = lax.dynamic_update_index_in_dim(
+            cache["kpos"], pos.astype(jnp.int32), slot, axis=0)
+        kp = cache["kpos"]
+        if cfg.family == "hybrid":                  # sliding window
+            valid = (kp >= 0) & (kp > pos - W) & (kp <= pos)
+        else:                                        # llama4 chunk semantics
+            Wc = cfg.attn_chunk
+            valid = (kp >= 0) & ((kp // Wc) == (pos // Wc)) & (kp <= pos)
+        kc, vc = cache["k"], cache["v"]
+    elif cfg.kv_cache_dtype == "int8":
+        S = cache["k"].shape[1]
+        kq, ks = _quant(k1)
+        vq, vs = _quant(v1)
+        cache = dict(cache)
+        cache["k"] = lax.dynamic_update_index_in_dim(cache["k"], kq, pos, axis=1)
+        cache["v"] = lax.dynamic_update_index_in_dim(cache["v"], vq, pos, axis=1)
+        cache["ks"] = lax.dynamic_update_index_in_dim(cache["ks"], ks, pos, axis=1)
+        cache["vs"] = lax.dynamic_update_index_in_dim(cache["vs"], vs, pos, axis=1)
+        kc = (cache["k"].astype(jnp.bfloat16)
+              * cache["ks"][..., None].astype(jnp.bfloat16))
+        vc = (cache["v"].astype(jnp.bfloat16)
+              * cache["vs"][..., None].astype(jnp.bfloat16))
+        valid = jnp.arange(S, dtype=jnp.int32) <= pos
+    else:
+        S = cache["k"].shape[1]
+        cache = dict(cache)
+        cache["k"] = lax.dynamic_update_index_in_dim(
+            cache["k"], k1.astype(cache["k"].dtype), pos, axis=1)
+        cache["v"] = lax.dynamic_update_index_in_dim(
+            cache["v"], v1.astype(cache["v"].dtype), pos, axis=1)
+        kc, vc = cache["k"], cache["v"]
+        valid = jnp.arange(S, dtype=jnp.int32) <= pos
+
+    o = decode_attention(q, kc, vc, valid, cap=cfg.logit_softcap)
+    x1 = x1 + jnp.einsum("bhe,hed->bd", o, p["wo"])
+
+    if cfg.is_encoder_decoder:
+        hx = apply_norm(x1, p["lnx"], cfg.norm)
+        qx = jnp.einsum("bd,dhe->bhe", hx, p["xq"])
+        ox = decode_attention(qx, cache["xk"], cache["xv"],
+                              jnp.ones(cache["xk"].shape[1], bool))
+        x1 = x1 + jnp.einsum("bhe,hed->bd", ox, p["xo"])
+
+    h2 = apply_norm(x1, p["ln2"], cfg.norm)
+    if cfg.num_experts:
+        out, _ = moe_mlp(p["mlp"], h2[:, None, :], cfg, groups=cfg.moe_groups)
+        out = out[:, 0]
+    else:
+        out = mlp(p["mlp"], h2, cfg)
+    return x1 + out, cache
+
+
+def _block_decode(p, x1, cache, pos, cfg, ltype):
+    if ltype in ("attn", "attn_chunked"):
+        return _attn_decode(p, x1, cache, pos, cfg, ltype)
+    if ltype == "rglru":
+        x1, st = R.rglru_decode(p, x1, cache, cfg)
+        h2 = apply_norm(x1, p["ln2"], cfg.norm)
+        return x1 + mlp(p["mlp"], h2, cfg), st
+    if ltype == "mlstm":
+        return R.mlstm_decode(p, x1, cache, cfg)
+    if ltype == "slstm":
+        return R.slstm_decode(p, x1, cache, cfg)
+    raise ValueError(ltype)
+
+
+def decode_step(params, cfg: ArchConfig, token, cache, pos):
+    """One decoding step.  token [B] int32; pos scalar int32."""
+    x1 = jnp.take(params["embed"], token, axis=0)
+    if cfg.pos == "learned":
+        x1 = x1 + params["pos_embed"][pos]
+    pat, n_groups, tail = _layer_layout(cfg)
+
+    def group_fn(x1, xs):
+        gp, gc = xs
+        new_c = {}
+        for i, lt in enumerate(pat):
+            x1, new_c[f"b{i}"] = _block_decode(gp[f"b{i}"], x1, gc[f"b{i}"],
+                                               pos, cfg, lt)
+        return x1, new_c
+
+    new_cache = {"layers": {}, "tail": {}}
+    if n_groups:
+        x1, new_cache["layers"] = lax.scan(
+            group_fn, x1, (params["layers"], cache["layers"]))
+    for i, lt in enumerate(tail):
+        x1, new_cache["tail"][f"t{i}"] = _block_decode(
+            params["tail"][f"t{i}"], x1, cache["tail"][f"t{i}"], pos, cfg, lt)
+    x1 = apply_norm(x1, params["ln_f"], cfg.norm)
+    logits = unembed(params, cfg, x1).astype(jnp.float32)
+    return logits, new_cache

@@ -1,0 +1,58 @@
+"""Serving: prefill + decode steps with batched requests.
+
+Three jittable entry points per architecture:
+
+  prefill_step(params, batch)              -> (last_logits, cache)
+  decode_step(params, cache, token, pos)   -> (logits, cache)
+  serve_decode = greedy wrapper used by examples/serve driver
+
+The decode KV cache layout and sharding are described in
+repro/dist/sharding.py (batch over data axes; cache sequence over `model` —
+flash-decoding).  Recurrent archs (rglru/mlstm/slstm) carry O(1) states, so
+``long_500k`` decoding holds no 500K-slot cache for them — that is exactly
+why those cells run (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+
+
+def make_prefill(cfg: ArchConfig, cache_len: int):
+    def prefill_step(params, batch: Dict[str, jnp.ndarray]):
+        x, _, cache = T.forward(params, cfg, batch, cache_len=cache_len)
+        logits = T.unembed(params, cfg, x[:, -1]).astype(jnp.float32)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode(cfg: ArchConfig):
+    def decode_step(params, cache, token, pos):
+        return T.decode_step(params, cfg, token, cache, pos)
+
+    return decode_step
+
+
+def greedy_generate(cfg: ArchConfig, params, batch, *, steps: int,
+                    cache_len: int):
+    """Greedy generation driver (host loop; each step jittable)."""
+    prefill = jax.jit(make_prefill(cfg, cache_len))
+    decode = jax.jit(make_decode(cfg))
+    logits, cache = prefill(params, batch)
+    pos0 = batch["tokens"].shape[1] + (
+        cfg.vis_tokens if cfg.frontend == "vision_stub" and "patches" in batch
+        else 0)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+    for i in range(steps - 1):
+        logits, cache = decode(params, cache, tok,
+                               jnp.asarray(pos0 + i, jnp.int32))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,79 @@
+"""Confidence-bounded gradient accumulation — PF-OLA machinery applied to
+the microbatch loop (beyond-paper feature, DESIGN.md §2).
+
+A gradient over a global batch is an associative-decomposable aggregate of
+per-microbatch contributions — a GLA.  Treating the microbatch stream as
+the scan and the per-microbatch *loss* (or a random projection of the
+gradient) as ``func(d)``, the paper's sampling estimator gives an anytime
+confidence interval on the full-batch statistic.  When the relative CI
+width drops below a target, the remaining microbatches carry little
+information: the step can fire early (adaptive effective batch size).
+
+Statistically this is the paper Eq. (2)/(4) estimator with D = the step's
+microbatch population and S = those processed so far; microbatch order is
+random because the data pipeline shuffles (global randomization §4.2).
+
+``accumulate_until_confident`` is a host-side driver (each microbatch grad
+is one jitted call) used by examples/adaptive_batch.py; the fully-jitted
+variant embeds the width test in a `lax.while_loop`.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import estimators as E
+
+
+def ci_relative_width(sum_, sumsq, n, n_total, confidence=0.95):
+    """Relative CI width of the mean estimate after n of n_total microbatches."""
+    est = E.horvitz_estimate(sum_, jnp.asarray(n, jnp.float32),
+                             jnp.asarray(n_total, jnp.float32))
+    var = E.variance_estimate(sum_, sumsq, jnp.asarray(n, jnp.float32),
+                              jnp.asarray(n_total, jnp.float32))
+    lo, hi = E.normal_bounds(est, var, confidence)
+    return (hi - lo) / jnp.maximum(jnp.abs(est), 1e-9)
+
+
+def accumulate_until_confident(
+    grad_fn: Callable,            # (params, microbatch) -> (loss, grads)
+    params,
+    microbatches,                 # pytree with leading axis M
+    *,
+    target_rel_width: float = 0.05,
+    min_micro: int = 2,
+    confidence: float = 0.95,
+):
+    """Accumulate microbatch grads until the loss-mean CI is tight.
+
+    Returns (grads_mean, n_used, history) — grads averaged over the n_used
+    microbatches actually consumed.  The estimator state is the paper's
+    (sum, sumSq, count); n_total = M (sampling without replacement from the
+    step's population).
+    """
+    M = jax.tree.leaves(microbatches)[0].shape[0]
+    g_acc = None
+    s = sq = 0.0
+    history = []
+    n_used = M
+    for i in range(M):
+        mb = jax.tree.map(lambda x: x[i], microbatches)
+        loss, g = grad_fn(params, mb)
+        loss = float(loss)
+        g_acc = g if g_acc is None else jax.tree.map(jnp.add, g_acc, g)
+        s += loss
+        sq += loss * loss
+        if i + 1 >= min_micro:
+            w = float(ci_relative_width(
+                jnp.asarray(s), jnp.asarray(sq), i + 1, M, confidence))
+        else:
+            w = float("inf")
+        history.append({"n": i + 1, "loss": loss, "rel_width": w})
+        if w <= target_rel_width:
+            n_used = i + 1
+            break
+    grads = jax.tree.map(lambda g: g / n_used, g_acc)
+    return grads, n_used, history

@@ -1,0 +1,116 @@
+"""Optimizers in pure JAX: AdamW (fp32 master + moments) and Adafactor
+(factored second moment, no first moment, no master) for the ≥300B MoE archs
+where AdamW state cannot fit 256×16 GB (DESIGN.md §5, accounting in
+EXPERIMENTS.md §Dry-run).
+
+State sharding: every state leaf mirrors its parameter's model-axis sharding
+and additionally takes the `data` axis on its largest free divisible dim
+(ZeRO; see repro/dist/sharding.py).  Under jit+GSPMD the gradient reshard
+lowers to reduce-scatter and the updated-param fetch to all-gather.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    master: Any   # fp32 params
+    mu: Any       # fp32 first moment
+    nu: Any       # fp32 second moment
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: Any       # row stats (mean over last dim), fp32
+    vc: Any       # col stats (mean over second-to-last dim), fp32
+
+
+def adamw_init(params) -> AdamWState:
+    f32 = lambda t: jax.tree.map(lambda x: x.astype(jnp.float32), t)
+    zeros = lambda t: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return AdamWState(jnp.zeros((), jnp.int32), f32(params), zeros(params),
+                      zeros(params))
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr=1e-4, b1=0.9,
+                 b2=0.95, eps=1e-8, wd=0.1):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+
+    mu = jax.tree.map(lambda g, m: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      grads, state.mu)
+    nu = jax.tree.map(lambda g, v: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                      grads, state.nu)
+
+    def new_master(m, v, ma):
+        mhat = m / (1 - b1 ** t)
+        vhat = v / (1 - b2 ** t)
+        return ma - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * ma)
+
+    master = jax.tree.map(new_master, mu, nu, state.master)
+    new_params = jax.tree.map(lambda ma, p: ma.astype(p.dtype), master, params)
+    return new_params, AdamWState(step, master, mu, nu)
+
+
+def _factored_dims(shape):
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params) -> AdafactorState:
+    def vr(x):
+        return (jnp.zeros(x.shape[:-1], jnp.float32) if _factored_dims(x.shape)
+                else jnp.zeros(x.shape, jnp.float32))
+
+    def vc(x):
+        return (jnp.zeros(x.shape[:-2] + x.shape[-1:], jnp.float32)
+                if _factored_dims(x.shape) else jnp.zeros((1,), jnp.float32))
+
+    return AdafactorState(jnp.zeros((), jnp.int32),
+                          jax.tree.map(vr, params), jax.tree.map(vc, params))
+
+
+def adafactor_update(grads, state: AdafactorState, params, *, lr=1e-4,
+                     decay=0.8, eps=1e-30, clip=1.0, wd=0.0):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta = 1.0 - t ** (-decay)
+
+    def upd(g, p, vr, vc):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _factored_dims(g.shape):
+            vr_n = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc_n = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+            denom = jnp.mean(vr_n, axis=-1, keepdims=True)
+            r = (vr_n / jnp.maximum(denom, eps))[..., None]
+            u = g * jax.lax.rsqrt(jnp.maximum(r * vc_n[..., None, :], eps))
+        else:
+            vr_n = beta * vr + (1 - beta) * g2
+            vc_n = vc
+            u = g * jax.lax.rsqrt(jnp.maximum(vr_n, eps))
+        # update clipping (RMS(u) <= clip)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+        u = u / jnp.maximum(1.0, rms / clip)
+        new = p.astype(jnp.float32) - lr * (u + wd * p.astype(jnp.float32))
+        return new.astype(p.dtype), vr_n, vc_n
+
+    out = jax.tree.map(upd, grads, params, state.vr, state.vc)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    vr = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    vc = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdafactorState(step, vr, vc)
+
+
+def opt_init(params, kind: str):
+    return adamw_init(params) if kind == "adamw" else adafactor_init(params)
+
+
+def opt_update(grads, state, params, kind: str, **kw):
+    if kind == "adamw":
+        return adamw_update(grads, state, params, **kw)
+    return adafactor_update(grads, state, params, **kw)

@@ -1,0 +1,168 @@
+"""Training step: loss, grads (microbatched accumulation), optimizer update.
+
+``make_train_step(cfg)`` returns a pure (params, opt_state, batch) ->
+(params, opt_state, metrics) function suitable for jit with GSPMD shardings
+(repro/launch/dryrun.py wires in_shardings/out_shardings).
+
+Gradient accumulation over ``cfg.train_microbatches`` uses `lax.scan` so the
+per-microbatch activation footprint is 1/M of the step's; grads accumulate
+in f32.  Metrics include the ingredients the PF-OLA bridge consumes: per-step
+loss sum/sumsq/count over microbatches feed the confidence-bounded
+grad-accumulation estimator (repro/training/grad_estimator.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+from repro.training import optimizer as O
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+@jax.custom_vjp
+def _grad_dtype_boundary(x):
+    """Identity forward; casts the cotangent back to x's dtype.
+
+    The cross-entropy tail runs in f32, so without this boundary the
+    *entire* backward residual stream — including every TP activation
+    all-reduce — is carried in f32.  Pinning cotangents to the activation
+    dtype (bf16) halves backward activation traffic and collective bytes
+    (EXPERIMENTS.md §Perf iteration q2); this matches Megatron's bf16
+    gradient-communication convention.
+    """
+    return x
+
+
+def _gdb_fwd(x):
+    # residual: a zero-size array carrying the primal dtype (dtypes are not
+    # JAX types, so smuggle it via an empty array)
+    return x, jnp.zeros((0,), x.dtype)
+
+
+def _gdb_bwd(res, g):
+    return (g.astype(res.dtype),)
+
+
+_grad_dtype_boundary.defvjp(_gdb_fwd, _gdb_bwd)
+
+
+def shift_targets(cfg: ArchConfig, batch: Dict[str, jnp.ndarray], seq_total: int):
+    """(targets, mask) aligned with the model's hidden-state positions.
+
+    Hidden position j predicts the token at input position j+1.  For VLM
+    inputs the first `vis_tokens` positions are patch embeddings; only text
+    transitions are scored.
+    """
+    tokens = batch["tokens"]
+    B, S_txt = tokens.shape
+    P = seq_total - S_txt
+    targets = jnp.zeros((B, seq_total), jnp.int32)
+    targets = lax.dynamic_update_slice(
+        targets, tokens[:, 1:], (0, P))                       # h_{P+i} -> tok_{i+1}
+    mask = jnp.zeros((B, seq_total), jnp.float32)
+    mask = lax.dynamic_update_slice(
+        mask, jnp.ones((B, S_txt - 1), jnp.float32), (0, P))
+    return targets, mask
+
+
+def loss_fn(params, cfg: ArchConfig, batch):
+    x, aux, _ = T.forward(params, cfg, batch)
+    x = _grad_dtype_boundary(x)
+    targets, mask = shift_targets(cfg, batch, x.shape[1])
+    ce = T.xent_loss(params, cfg, x, targets, mask)
+    return ce + AUX_LOSS_WEIGHT * aux, ce
+
+
+def _split_micro(batch, m, batch_axes=None):
+    """[B, ...] -> [M, B/M, ...]; re-pin the batch shard onto dim 1.
+
+    Without the constraint GSPMD is free to shard the microbatch axis (M)
+    instead of the batch axis — measured on qwen3 train_4k this replicated
+    per-device batches 8× and inserted score-sized all-reduces in the
+    attention backward (EXPERIMENTS.md §Perf iteration q1).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def split(x):
+        x = x.reshape((m, x.shape[0] // m) + x.shape[1:])
+        if batch_axes:
+            spec = P(None, batch_axes, *([None] * (x.ndim - 2)))
+            x = jax.lax.with_sharding_constraint(x, spec)
+        return x
+
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(cfg: ArchConfig, *, lr: float = 1e-4, clip: float = 1.0,
+                    dp_size: int = 1, batch_axes=None):
+    """Build the jittable train step for an architecture.
+
+    ``dp_size``: data-parallel shard count of the global batch — microbatch
+    count is capped so each microbatch still shards evenly over it.
+    ``batch_axes``: mesh axes carrying the batch dim; when given, microbatch
+    xs are sharding-constrained so the scan cannot reshard them.
+    """
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        B = batch["tokens"].shape[0]
+        M = cfg.train_microbatches
+        while M > 1 and (B % M or (B // M) % dp_size):
+            M -= 1
+
+        if M == 1:
+            (_, ce), grads = grad_fn(params, cfg, batch)
+            ce_sum, ce_sumsq, nmb = ce, ce * ce, jnp.ones((), jnp.float32)
+        else:
+            micro = _split_micro(batch, M, batch_axes)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            z = jnp.zeros((), jnp.float32)
+
+            def acc(carry, mb):
+                g, s, sq = carry
+                (_, ce), gi = grad_fn(params, cfg, mb)
+                g = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / M, g, gi)
+                return (g, s + ce, sq + ce * ce), None
+
+            (grads, ce_sum, ce_sumsq), _ = lax.scan(acc, (g0, z, z), micro)
+            ce = ce_sum / M
+            nmb = jnp.asarray(M, jnp.float32)
+
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        if clip is not None:
+            scale = jnp.minimum(1.0, clip / (gnorm + 1e-9))
+            grads = jax.tree.map(
+                lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                grads)
+        new_params, new_opt = O.opt_update(
+            grads, opt_state, params, cfg.optimizer, lr=lr)
+        metrics = {
+            "loss": ce if M == 1 else ce_sum / M,
+            "loss_sum": ce_sum,
+            "loss_sumsq": ce_sumsq,
+            "num_micro": nmb,
+            "grad_norm": gnorm,
+        }
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ArchConfig, key, dtype=jnp.bfloat16):
+    """Materialized params + optimizer state (smoke scale only)."""
+    from repro.models import spec as S
+    params = S.init_params(T.param_specs(cfg, dtype=dtype), key)
+    opt = O.opt_init(params, cfg.optimizer)
+    return params, opt

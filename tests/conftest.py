@@ -1,0 +1,7 @@
+import sys
+from pathlib import Path
+
+# allow running without PYTHONPATH=src (never touches jax device config)
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))

@@ -1,0 +1,64 @@
+"""Serialize/Deserialize (paper Table 1 transfer extension) + restart."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs import get_config
+from repro.core import engine, gla, randomize
+from repro.data import tpch
+from repro.training import train_step as TS
+
+
+def test_gla_state_roundtrip_bit_exact():
+    rows = 5_000
+    cols = tpch.generate_lineitem(rows, seed=31)
+    parts = randomize.randomize_global(
+        {k: jnp.asarray(v) for k, v in cols.items()}, jax.random.key(0), 2)
+    shards = randomize.pack_partitions(parts, chunk_len=128)
+    g = gla.make_sum_gla(tpch.q6_func, tpch.q6_cond(tpch.Q6_LOW_WINDOW),
+                         d_total=float(rows))
+    res = engine.run_query(g, shards, rounds=4)
+    state = jax.tree.map(lambda x: x[1], res.snapshots)  # mid-query snapshot
+    buf = ckpt.serialize_state(state)
+    back = ckpt.deserialize_state(buf, like=state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_from_checkpoint_equals_uninterrupted():
+    """Merge(checkpointed prefix, resumed suffix) == single full run."""
+    rows = 6_000
+    cols = tpch.generate_lineitem(rows, seed=32)
+    parts = randomize.randomize_global(
+        {k: jnp.asarray(v) for k, v in cols.items()}, jax.random.key(1), 2)
+    shards = randomize.pack_partitions(parts, chunk_len=128)
+    g = gla.make_sum_gla(tpch.q6_func, tpch.q6_cond(tpch.Q6_LOW_WINDOW),
+                         d_total=float(rows))
+    full = engine.run_query(g, shards, rounds=2)
+
+    C = shards["_mask"].shape[1]
+    half = C // 2
+    first = {k: v[:, :half] for k, v in shards.items()}
+    second = {k: v[:, half:] for k, v in shards.items()}
+    r1 = engine.run_query(g, first, rounds=1)
+    state1 = jax.tree.map(lambda x: x[-1], r1.snapshots)
+    buf = ckpt.serialize_state(state1)            # "crash" here
+    restored = ckpt.deserialize_state(buf, like=state1)
+    r2 = engine.run_query(g, second, rounds=1)
+    state2 = jax.tree.map(lambda x: x[-1], r2.snapshots)
+    merged = g.merge(restored, state2)
+    np.testing.assert_allclose(float(g.terminate(merged)), float(full.final),
+                               rtol=1e-5)
+
+
+def test_train_state_roundtrip(tmp_path):
+    cfg = get_config("smollm_135m").smoke()
+    params, opt = TS.init_train_state(cfg, jax.random.key(0),
+                                      dtype=jnp.float32)
+    path = tmp_path / "ck" / "state.ckpt"
+    ckpt.save_train_state(path, params, opt, step=7, data_cursor=1234)
+    p2, o2, step, cursor = ckpt.load_train_state(path, params, opt)
+    assert step == 7 and cursor == 1234
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,73 @@
+"""Loop-aware HLO cost analysis: exactness on scan vs unroll, collective
+detection, dynamic-slice traffic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.analysis import hlo_cost
+
+
+def _flops(fn, *args):
+    c = jax.jit(fn).lower(*args).compile()
+    return hlo_cost.analyze(c.as_text()), c
+
+
+def test_scan_equals_unroll():
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+
+    def scanned(x, ws):
+        return lax.scan(body, x, ws)[0]
+
+    def unrolled(x, ws):
+        for i in range(10):
+            x, _ = body(x, ws[i])
+        return x
+
+    X = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    W = jax.ShapeDtypeStruct((10, 256, 256), jnp.float32)
+    a, _ = _flops(scanned, X, W)
+    b, _ = _flops(unrolled, X, W)
+    assert abs(a["flops"] - b["flops"]) / b["flops"] < 0.01
+    # 10 × 2·256³ matmul flops dominate
+    assert a["flops"] >= 10 * 2 * 256**3
+
+
+def test_nested_scan_trip_products():
+    def inner(c, x):
+        return c + jnp.sum(x @ x), None
+
+    def outer(c, xs):
+        c2, _ = lax.scan(inner, c, xs)
+        return c2, None
+
+    def fn(xs):
+        out, _ = lax.scan(outer, jnp.float32(0), xs)
+        return out
+
+    XS = jax.ShapeDtypeStruct((5, 7, 64, 64), jnp.float32)
+    a, _ = _flops(fn, XS)
+    expect = 5 * 7 * 2 * 64**3
+    assert abs(a["flops"] - expect) / expect < 0.05
+
+
+def test_dot_general_contracting_dims():
+    def fn(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+
+    A = jax.ShapeDtypeStruct((4, 32, 48), jnp.float32)
+    B = jax.ShapeDtypeStruct((4, 48, 16), jnp.float32)
+    a, _ = _flops(fn, A, B)
+    expect = 2 * 4 * 32 * 16 * 48
+    assert abs(a["flops"] - expect) / expect < 0.01
+
+
+def test_bytes_order_of_magnitude():
+    def fn(x):
+        return x * 2.0 + 1.0
+
+    X = jax.ShapeDtypeStruct((1 << 20,), jnp.float32)
+    a, c = _flops(fn, X)
+    xla_bytes = c.cost_analysis().get("bytes accessed", 0.0)
+    assert 0.3 * xla_bytes <= a["bytes"] <= 4 * xla_bytes + 1e4

@@ -1,0 +1,99 @@
+"""Sharding rule table + sharded-engine equivalence (subprocess with fake
+devices so the main test process keeps 1 CPU device)."""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.spec import ParamSpec
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+
+    class _Dev:
+        shape = (16, 16)
+        size = 256
+
+    devices = _Dev()
+
+
+def _ps(shape, logical, **kw):
+    from repro.dist import sharding as SH
+    return tuple(SH.spec_pspec(ParamSpec(shape, logical), FakeMesh(), **kw))
+
+
+def test_divisible_dims_shard():
+    assert _ps((5120, 25600), ("embed", "mlp")) == (None, "model")
+    assert _ps((202240, 5120), ("vocab", "embed")) == ("model", None)
+    assert _ps((5120, 64, 128), ("embed", "heads", None)) == (None, "model", None)
+
+
+def test_indivisible_falls_back():
+    # smollm: 9 heads don't divide 16 -> try embed (576/16=36 ✓)
+    assert _ps((576, 9, 64), ("embed", "heads", None)) == ("model", None, None)
+    # nothing divisible -> fully replicated
+    assert _ps((7, 9), ("heads", "kv")) == (None, None)
+
+
+def test_expert_priority_over_mlp():
+    # llama4: 128 experts shard; grok: 8 experts fall through to mlp
+    assert _ps((128, 5120, 8192), ("experts", "embed", "mlp")) == (
+        "model", None, None)
+    assert _ps((8, 6144, 32768), ("experts", "embed", "mlp")) == (
+        None, None, "model")
+
+
+def test_opt_data_axis_zero_style():
+    ps = _ps((5120, 25600), ("embed", "mlp"), opt_data_axis="data")
+    assert ps == ("data", "model")
+
+
+def test_layers_axis_never_sharded():
+    ps = _ps((16, 5120, 25600), ("layers", "embed", "mlp"),
+             opt_data_axis="data")
+    assert ps[0] is None
+
+
+@pytest.mark.slow
+def test_sharded_engine_matches_vmapped_subprocess():
+    """Runs the engine under shard_map on 8 fake devices and compares with
+    the vmapped path — in a subprocess so XLA_FLAGS stays local."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, %r)
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import engine, gla, randomize
+        from repro.data import tpch
+        rows = 60_000
+        cols = tpch.generate_lineitem(rows)
+        parts = randomize.randomize_global(
+            {k: jnp.asarray(v) for k, v in cols.items()}, jax.random.key(0), 8)
+        shards = randomize.pack_partitions(parts, chunk_len=256)
+        mesh = jax.make_mesh((8,), ("data",))
+        g = gla.make_sum_gla(tpch.q6_func, tpch.q6_cond(tpch.Q6_LOW_WINDOW),
+                             d_total=float(rows))
+        rv = engine.run_query(g, shards, rounds=8)
+        rs = engine.run_query(g, shards, rounds=8, mesh=mesh)
+        np.testing.assert_allclose(np.asarray(rv.estimates.estimate),
+                                   np.asarray(rs.estimates.estimate), rtol=2e-5)
+        np.testing.assert_allclose(float(rv.final), float(rs.final), rtol=2e-5)
+        sched = engine.straggler_schedule(8, shards["_mask"].shape[1], 6,
+                                          speeds=[1,1,1,1,2,2,3,4])
+        sv = engine.run_query(g, shards, schedule=sched, mode="sync")
+        ss = engine.run_query(g, shards, schedule=sched, mode="sync", mesh=mesh)
+        np.testing.assert_allclose(np.asarray(sv.estimates.estimate),
+                                   np.asarray(ss.estimates.estimate), rtol=2e-5)
+        print("OK")
+    """ % str(SRC))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
