@@ -1,0 +1,31 @@
+"""Shared benchmark output: every benchmark writes a machine-readable
+``BENCH_<name>.json`` next to its human-readable CSV/stdout report.
+
+Schema (see benchmarks/README.md):
+
+    {
+      "bench": "<name>",                # which benchmark produced this
+      "rows": [ {...}, ... ]            # one dict per reported measurement
+    }
+
+Row keys are benchmark-specific but every row carries a ``name``; timing
+rows also carry ``us_per_call`` (float, microseconds, median of repeats)
+and ``derived`` (dict of derived quantities, e.g. overhead ratios).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+OUT_DIR = Path(__file__).resolve().parent / "out"
+
+
+def emit(bench: str, rows: list, extra: dict | None = None) -> Path:
+    """Write BENCH_<bench>.json under benchmarks/out/ and return the path."""
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    payload = {"bench": bench, "rows": rows}
+    if extra:
+        payload.update(extra)
+    path = OUT_DIR / f"BENCH_{bench}.json"
+    path.write_text(json.dumps(payload, indent=1))
+    return path

@@ -76,6 +76,7 @@ def rel_width(est, task_info):
 def run(tasks=None, out=sys.stdout):
     names = tasks or list(_tasks().keys())
     infos = _tasks()
+    rows = []
     print("task,estimator,partitions,round,frac_scanned,rel_width", file=out)
     for task in names:
         info = infos[task]
@@ -92,9 +93,21 @@ def run(tasks=None, out=sys.stdout):
                 scanned = np.asarray(res.snapshots.scanned if hasattr(
                     res.snapshots, "scanned") else res.snapshots.base.scanned)
                 for r in range(rounds):
+                    frac = float(scanned[r]) / ROWS
                     print(f"{task},{est_kind},{parts},{r},"
-                          f"{float(scanned[r]) / ROWS:.4f},{w[r]:.6f}",
-                          file=out)
+                          f"{frac:.4f},{w[r]:.6f}", file=out)
+                    rows.append({
+                        "name": f"convergence_{task}_{est_kind}_p{parts}_r{r}",
+                        "task": task, "estimator": est_kind,
+                        "partitions": parts, "round": r,
+                        "frac_scanned": frac, "rel_width": float(w[r]),
+                    })
+    try:
+        from benchmarks import bench_io
+    except ImportError:  # direct script invocation: benchmarks/ is sys.path[0]
+        import bench_io
+    path = bench_io.emit("convergence", rows)
+    print(f"# wrote {path}", file=out)
 
 
 if __name__ == "__main__":

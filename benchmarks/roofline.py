@@ -129,6 +129,13 @@ def main():
               f"{r['collective_s']:10.4f} {r['bottleneck']:>10s} "
               f"{r['model_over_hlo']:7.3f} {100*r['roofline_fraction']:6.1f}% "
               f"{r['peak_gb']:7.1f}")
+    try:
+        from benchmarks import bench_io
+    except ImportError:  # direct script invocation: benchmarks/ is sys.path[0]
+        import bench_io
+    named = [{"name": f"roofline_{r['cell']}", **r} for r in rows]
+    path = bench_io.emit("roofline", named, extra={"mesh": mesh_kind})
+    print(f"# wrote {path}")
 
 
 if __name__ == "__main__":

@@ -52,7 +52,7 @@ _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _INST_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%([^\s=]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s*"
     r"([a-z0-9\-]+)\((.*)$")
-_CALLS_RE = re.compile(r"calls=%([^\s,)]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%([^\s,)]+)")
 _COND_BODY_RE = re.compile(r"condition=%([^\s,)]+),\s*body=%([^\s,)]+)")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 _BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
@@ -150,12 +150,18 @@ def split_computations(hlo: str) -> Dict[str, List[Instruction]]:
 
 def _dot_flops(inst: Instruction, shapes: Dict[str, str]) -> float:
     out_elems = _shape_elems(inst.type_str)
-    lhs = re.match(r"%([^\s,)]+)", inst.rest)
     k = 1
     m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", inst.rest)
-    if lhs and m and m.group(1):
-        lhs_type = shapes.get(lhs.group(1), "")
-        sm = _SHAPE_RE.search(lhs_type)
+    if m and m.group(1):
+        # lhs type: newer XLA prints operand types inline —
+        # ``dot(f32[4,32,48]{2,1,0} %lhs, ...)`` — so the first shape in the
+        # operand list IS the lhs; older text has bare ``%lhs`` and needs the
+        # computation-wide shape table.
+        head = inst.rest.split(")", 1)[0]
+        sm = _SHAPE_RE.search(head)
+        if sm is None:
+            lhs = re.search(r"%([^\s,)]+)", head)
+            sm = _SHAPE_RE.search(shapes.get(lhs.group(1), "")) if lhs else None
         if sm and sm.group(2):
             dims = [int(d) for d in sm.group(2).split(",")]
             for ci in m.group(1).split(","):

@@ -3,9 +3,12 @@
 aggregation queries and training state.
 
 Format: msgpack envelope (treedef repr + leaf dtype/shape table) with
-zstd-compressed little-endian leaf bytes.  Restart is exact: deserialized
-states are bit-identical, so a resumed query continues from the same
-sample prefix (tests/test_ckpt.py).
+compressed little-endian leaf bytes.  Compression is zstd when the
+``zstandard`` package is available, else zlib — the codec is identified by
+the stream's own magic/format tag (zstd frame magic 0x28B52FFD vs. the zlib
+header), so either side can read what the other wrote.  Restart is exact:
+deserialized states are bit-identical, so a resumed query continues from
+the same sample prefix (tests/test_ckpt.py).
 
 For training, `save_train_state`/`load_train_state` snapshot
 (params, opt_state, step, data-pipeline cursor) — the cursor makes the
@@ -15,6 +18,7 @@ requires (the sample so far must stay a without-replacement prefix).
 from __future__ import annotations
 
 import io
+import zlib
 from pathlib import Path
 from typing import Any
 
@@ -22,7 +26,29 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # optional dependency — fall back to stdlib zlib
+    zstandard = None
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).compress(raw)
+    return zlib.compress(raw, 6)
+
+
+def _decompress(buf: bytes) -> bytes:
+    if buf[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint is zstd-compressed but zstandard is not "
+                "installed (pip install zstandard)")
+        return zstandard.ZstdDecompressor().decompress(buf)
+    return zlib.decompress(buf)
 
 
 def serialize_state(state: Any) -> bytes:
@@ -36,11 +62,11 @@ def serialize_state(state: Any) -> bytes:
         ],
     }
     raw = msgpack.packb(payload, use_bin_type=True)
-    return zstandard.ZstdCompressor(level=3).compress(raw)
+    return _compress(raw)
 
 
 def deserialize_state(buf: bytes, like: Any) -> Any:
-    raw = zstandard.ZstdDecompressor().decompress(buf)
+    raw = _decompress(buf)
     payload = msgpack.unpackb(raw, raw=False)
     _, treedef = jax.tree.flatten(like)
     leaves = [

@@ -5,8 +5,12 @@ Execution model (DESIGN.md §2):
   * a *partition* is the unit of data locality (a GLADE worker node).  In the
     vmapped path partitions are a leading array axis (used by tests/benchmarks
     on 1 CPU device); in the sharded path partitions are devices along the
-    ``data`` mesh axis under ``jax.shard_map`` (used by the dry-run and real
-    deployments).  Both paths run the *same* GLA and the same math.
+    ``data`` mesh axis under ``jax.shard_map``
+    (repro/dist/shard_engine.py, used by the dry-run and real deployments).
+    Both paths run the *same* GLA and the same math: the per-partition scans
+    live in repro/core/scan.py and are shared verbatim — the paths differ
+    only in the merge mechanism (tensordot over the partition axis here,
+    ``lax.psum`` there).
   * within a partition, chunks are consumed by ``lax.scan`` — the analogue of
     DataPath work-units pulling chunks.  ``lanes > 1`` keeps several GLA
     states per partition (the paper's "list of GLA states bounded by the
@@ -23,8 +27,10 @@ Execution model (DESIGN.md §2):
     minimum progress — the Wu et al. barrier — and, in the sharded path,
     pays a per-chunk collective, reproducing that estimator's overhead
     mechanistically.
-  * node failure: ``alive`` masks partitions out of merging; see
-    repro/dist/fault.py for the estimator-level consequences (paper §4.6).
+  * node failure: ``alive`` masks partitions out of merging — [P] for a
+    partition dead throughout, [R, P] for a failure-injection schedule; see
+    repro/dist/fault.py for the estimator-level consequences (paper §4.6,
+    DESIGN.md §4).
 """
 from __future__ import annotations
 
@@ -34,8 +40,8 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
 
+from repro.core import scan as SC
 from repro.core.uda import GLA, Estimate
 
 Pytree = Any
@@ -50,32 +56,8 @@ class QueryResult(NamedTuple):
 
 
 # ---------------------------------------------------------------------------
-# helpers
+# schedules
 # ---------------------------------------------------------------------------
-
-def _stack_init(gla: GLA, lanes: int) -> Pytree:
-    s = gla.init()
-    if lanes == 1:
-        return s
-    return jax.tree.map(lambda x: jnp.broadcast_to(x, (lanes,) + x.shape), s)
-
-
-def _fold_merge(merge, states: Pytree, n: int) -> Pytree:
-    acc = jax.tree.map(lambda x: x[0], states)
-    for i in range(1, n):
-        acc = merge(acc, jax.tree.map(lambda x: x[i], states))
-    return acc
-
-
-def _accumulate_chunk(gla: GLA, states: Pytree, chunk: dict, lanes: int):
-    """Advance lane states by one chunk; return (states, lane-merged view)."""
-    if lanes == 1:
-        st = gla.accumulate(states, chunk)
-        return st, st
-    lc = {k: v.reshape(lanes, -1) for k, v in chunk.items()}
-    st = jax.vmap(gla.accumulate)(states, lc)
-    return st, _fold_merge(gla.merge, st, lanes)
-
 
 def uniform_schedule(num_partitions: int, num_chunks: int, rounds: int) -> np.ndarray:
     """Cumulative chunk boundaries [P, R+1]; round r covers [b[r], b[r+1])."""
@@ -107,117 +89,61 @@ def straggler_schedule(
 
 
 # ---------------------------------------------------------------------------
-# per-partition scans
-# ---------------------------------------------------------------------------
-
-def _scan_prefix(gla: GLA, cols: dict, lanes: int):
-    """Scan chunks emitting every prefix state (init prepended): [C+1, ...].
-
-    Used when snapshots at *arbitrary* per-partition progress are needed
-    (straggler schedules, sync truncation).  State must be small — the
-    emission cost is O(C · |state|) HBM traffic, nothing else.
-    """
-    init = _stack_init(gla, lanes)
-    init_view = _fold_merge(gla.merge, init, lanes) if lanes > 1 else init
-
-    def body(st, chunk):
-        st, view = _accumulate_chunk(gla, st, chunk, lanes)
-        return st, view
-
-    last, prefixes = lax.scan(body, init, cols)
-    prefixes = jax.tree.map(
-        lambda i, p: jnp.concatenate([i[None], p], axis=0), init_view, prefixes
-    )
-    final_view = jax.tree.map(lambda p: p[-1], prefixes)
-    return final_view, prefixes
-
-
-def _scan_rounds(gla: GLA, cols: dict, lanes: int, rounds: int):
-    """Uniform-schedule fast path: emit state only at round boundaries.
-
-    O(|state|·R) emission — usable for large-state GLAs (1M-group group-by).
-    Requires C % rounds == 0.
-    """
-    C = cols["_mask"].shape[0]
-    assert C % rounds == 0, f"uniform rounds path needs C%R==0, got {C}%{rounds}"
-    per = C // rounds
-    rcols = {k: v.reshape((rounds, per) + v.shape[1:]) for k, v in cols.items()}
-    init = _stack_init(gla, lanes)
-
-    def round_body(st, round_cols):
-        def chunk_body(s, chunk):
-            s, _ = _accumulate_chunk(gla, s, chunk, lanes)
-            return s, None
-        st, _ = lax.scan(chunk_body, st, round_cols)
-        view = _fold_merge(gla.merge, st, lanes) if lanes > 1 else st
-        return st, view
-
-    last, views = lax.scan(round_body, init, rcols)
-    final_view = _fold_merge(gla.merge, last, lanes) if lanes > 1 else last
-    return final_view, views
-
-
-def _scan_rounds_masked(gla: GLA, cols: dict, sched: jnp.ndarray, lanes: int):
-    """Arbitrary-schedule path for large-state GLAs: O(R·C) masked scan.
-
-    Round r re-scans all chunks with liveness mask (lo <= c < hi); correctness
-    from the uda mask contract.  Emission is per-round.
-    """
-    C = cols["_mask"].shape[0]
-    R = sched.shape[0] - 1
-    init = _stack_init(gla, lanes)
-
-    def round_body(st, r):
-        lo, hi = sched[r], sched[r + 1]
-
-        def chunk_body(carry, xs):
-            s = carry
-            c, chunk = xs
-            live = ((c >= lo) & (c < hi)).astype(chunk["_mask"].dtype)
-            chunk = dict(chunk)
-            chunk["_mask"] = chunk["_mask"] * live
-            s, _ = _accumulate_chunk(gla, s, chunk, lanes)
-            return s, None
-
-        st, _ = lax.scan(chunk_body, st, (jnp.arange(C), cols))
-        view = _fold_merge(gla.merge, st, lanes) if lanes > 1 else st
-        return st, view
-
-    last, views = lax.scan(round_body, init, jnp.arange(R))
-    final_view = _fold_merge(gla.merge, last, lanes) if lanes > 1 else last
-    return final_view, views
-
-
-# ---------------------------------------------------------------------------
 # vmapped (partition-simulation) path
 # ---------------------------------------------------------------------------
 
-def _merge_over_partitions(gla: GLA, states: Pytree, alive: jnp.ndarray, merge):
-    """Merge states with leading partition axis [P, ...] under an alive mask."""
-    P = alive.shape[0]
+def _merge_over_partitions(gla: GLA, states: Pytree, w: jnp.ndarray, merge,
+                           all_alive: bool):
+    """Merge states with leading partition axis [P, ...] under weights [P].
+
+    ``all_alive`` is decided on the host before tracing: a non-additive
+    merge cannot honor a liveness mask (the weights feed a tensordot), so
+    it is only legal when every partition is statically alive.
+    """
+    P = w.shape[0]
     if gla.merge_is_additive:
-        w = alive.astype(jnp.float32)
         return jax.tree.map(
             lambda x: jnp.tensordot(w.astype(x.dtype), x, axes=(0, 0)), states
         )
-    if not bool(jnp.all(alive)):
+    if not all_alive:
         raise NotImplementedError("alive masks need merge_is_additive")
-    return _fold_merge(merge, states, P)
+    return SC.fold_merge(merge, states, P)
+
+
+def _merge_rounds(gla: GLA, states: Pytree, w_pr: jnp.ndarray, merge,
+                  all_alive: bool):
+    """Merge [P, R, ...] states with per-(partition, round) weights [P, R]."""
+    P, R = w_pr.shape
+    if gla.merge_is_additive:
+        return jax.tree.map(
+            lambda x: jnp.einsum(
+                "pr,pr...->r...", w_pr.astype(x.dtype), x), states
+        )
+    if not all_alive:
+        raise NotImplementedError("alive masks need merge_is_additive")
+    return jax.vmap(lambda s: SC.fold_merge(merge, s, P), in_axes=1)(states)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("gla", "mode", "emit", "lanes", "snapshots", "confidence")
+    jax.jit, static_argnames=("gla", "mode", "emit", "lanes", "snapshots",
+                              "confidence", "all_alive")
 )
 def _run_vmapped(gla: GLA, shards: dict, sched: jnp.ndarray, alive: jnp.ndarray,
                  *, mode: str, emit: str, lanes: int, snapshots: bool,
-                 confidence: float):
+                 confidence: float, all_alive: bool):
     P, C, L = shards["_mask"].shape
     R = sched.shape[1] - 1
     d_local = jnp.sum(shards["_mask"], axis=(1, 2))
     d_total = jnp.sum(d_local)
+    w_pr, w_final = SC.round_weights(alive, R)
 
-    if emit == "chunk":
-        finals, prefixes = jax.vmap(lambda c: _scan_prefix(gla, c, lanes))(shards)
+    if emit in ("chunk", "kernel"):
+        if emit == "chunk":
+            finals, prefixes = jax.vmap(
+                lambda c: SC.scan_prefix(gla, c, lanes))(shards)
+        else:  # per-shard fused-kernel dispatch (DESIGN.md §3)
+            assert lanes == 1, "emit='kernel' runs single-lane"
+            finals, prefixes = SC.kernel_prefix_states_batched(gla, shards)
         if snapshots:
             if mode == "sync":
                 idx = jnp.broadcast_to(jnp.min(sched[:, 1:], axis=0), (P, R))
@@ -230,19 +156,20 @@ def _run_vmapped(gla: GLA, shards: dict, sched: jnp.ndarray, alive: jnp.ndarray,
             round_states = None
     elif emit == "round":
         finals, round_states = jax.vmap(
-            lambda c: _scan_rounds(gla, c, lanes, R)
+            lambda c: SC.scan_rounds(gla, c, lanes, R)
         )(shards)
         if mode == "sync":
             raise NotImplementedError("sync mode requires emit='chunk'")
     elif emit == "round_masked":
         finals, round_states = jax.vmap(
-            lambda c, s: _scan_rounds_masked(gla, c, s, lanes)
+            lambda c, s: SC.scan_rounds_masked(gla, c, s, lanes)
         )(shards, sched)
     else:
         raise ValueError(f"unknown emit: {emit}")
 
     # Final result: plain Merge across partitions, then Terminate.
-    merged_final = _merge_over_partitions(gla, finals, alive, gla.merge)
+    merged_final = _merge_over_partitions(gla, finals, w_final, gla.merge,
+                                          all_alive)
     final = gla.terminate(merged_final)
 
     if not snapshots or round_states is None:
@@ -254,7 +181,8 @@ def _run_vmapped(gla: GLA, shards: dict, sched: jnp.ndarray, alive: jnp.ndarray,
         return jax.vmap(lambda s: gla.estimator_terminate(s, {"d_local": dl}))(p_states)
 
     terminated = jax.vmap(et)(round_states, d_local)          # [P, R, ...]
-    merged = _merge_over_partitions(gla, terminated, alive, gla.estimator_merge)
+    merged = _merge_rounds(gla, terminated, w_pr, gla.estimator_merge,
+                           all_alive)
 
     estimates = None
     if gla.estimate is not None:
@@ -263,101 +191,6 @@ def _run_vmapped(gla: GLA, shards: dict, sched: jnp.ndarray, alive: jnp.ndarray,
         )(merged)
 
     return QueryResult(final, merged, estimates, d_total, d_local)
-
-
-# ---------------------------------------------------------------------------
-# sharded (shard_map over the mesh data axis) path
-# ---------------------------------------------------------------------------
-
-def _run_sharded(gla: GLA, shards: dict, sched: jnp.ndarray, alive: jnp.ndarray,
-                 *, mesh, axis_name: str, mode: str, emit: str, lanes: int,
-                 snapshots: bool, confidence: float, sync_cost_model: bool = True):
-    """Same math as _run_vmapped with partitions = devices on ``axis_name``.
-
-    GLA states must be additive (all shipped GLAs are) so the cross-device
-    EstimatorMerge is a single psum — the efficient aggregation-tree path.
-    In ``mode="sync"`` a per-chunk psum of the progress counter models the
-    Wu et al. per-item serialization; its cost is visible in wall time and in
-    the HLO collective count (benchmarks/overhead.py).
-    """
-    assert gla.merge_is_additive, "sharded path requires additive merges"
-    P = shards["_mask"].shape[0]
-    R = sched.shape[1] - 1
-
-    def worker(cols, sched_p, alive_p):
-        cols = jax.tree.map(lambda x: x[0], cols)      # [1, C, L] -> [C, L]
-        sched_p = sched_p[0]
-        alive_p = alive_p[0].astype(jnp.float32)
-        d_local = jnp.sum(cols["_mask"]) * alive_p
-        d_total = lax.psum(d_local, axis_name)
-
-        if mode == "sync" and sync_cost_model:
-            # Per-chunk progress coordination: the barrier the paper's
-            # synchronized competitor needs.  The psum'd counter feeds the
-            # next iteration's carry so it cannot be DCE'd.
-            def body(carry, chunk):
-                st, prog = carry
-                st, view = _accumulate_chunk(gla, st, chunk, lanes)
-                prog = lax.psum(prog + 1.0, axis_name) / P
-                return (st, prog), view
-            init = (_stack_init(gla, lanes), jnp.zeros(()))
-            (last, _), prefixes = lax.scan(body, init, cols)
-            init_view = _stack_init(gla, lanes)
-            if lanes > 1:
-                init_view = _fold_merge(gla.merge, init_view, lanes)
-                last = _fold_merge(gla.merge, last, lanes)
-            prefixes = jax.tree.map(
-                lambda i, p: jnp.concatenate([i[None], p], 0), init_view, prefixes)
-            final_view = last
-        elif emit == "chunk":
-            final_view, prefixes = _scan_prefix(gla, cols, lanes)
-        elif emit == "round":
-            final_view, round_states = _scan_rounds(gla, cols, lanes, R)
-            prefixes = None
-        else:
-            raise ValueError(emit)
-
-        if emit == "chunk" or mode == "sync":
-            if mode == "sync":
-                gmin = lax.pmin(sched_p[1:], axis_name)
-                idx = gmin
-            else:
-                idx = sched_p[1:]
-            round_states = jax.tree.map(lambda x: x[idx], prefixes)
-
-        # weight by aliveness, then psum == EstimatorMerge over the tree
-        def wz(x):
-            return x * alive_p.astype(x.dtype)
-
-        merged_final = lax.psum(jax.tree.map(wz, final_view), axis_name)
-        if snapshots:
-            term = jax.vmap(
-                lambda s: gla.estimator_terminate(s, {"d_local": d_local})
-            )(round_states)
-            merged_rounds = lax.psum(jax.tree.map(wz, term), axis_name)
-        else:
-            merged_rounds = None
-        return merged_final, merged_rounds, d_total, d_local[None]
-
-    from jax.sharding import PartitionSpec as PS
-    pspec = PS(axis_name)
-    out_specs = (PS(), PS(), PS(), PS(axis_name))
-    fn = jax.shard_map(
-        worker, mesh=mesh,
-        in_specs=(pspec, pspec, pspec),
-        out_specs=out_specs,
-        check_vma=False,  # carry starts replicated (gla.init) and becomes
-                          # device-varying after the first accumulate
-    )
-    sched_arr = jnp.asarray(sched)
-    merged_final, merged_rounds, d_total, d_local = fn(shards, sched_arr, alive)
-    final = gla.terminate(merged_final)
-    estimates = None
-    if snapshots and gla.estimate is not None:
-        estimates = jax.vmap(
-            lambda s: gla.estimate(s, confidence, {"d_total": d_total})
-        )(merged_rounds)
-    return QueryResult(final, merged_rounds, estimates, d_total, d_local)
 
 
 # ---------------------------------------------------------------------------
@@ -388,25 +221,33 @@ def run_query(
       schedule: cumulative chunk boundaries [P, R+1] (engine.*_schedule).
       mode: "async" (paper's estimator) or "sync" (Wu et al. barrier).
       emit: "chunk" (prefix states; small-state GLAs, any schedule),
-            "round" (uniform schedule fast path, large states), or
-            "round_masked" (any schedule, large states, O(R·C)).
+            "round" (uniform schedule fast path, large states),
+            "round_masked" (any schedule, large states, O(R·C)), or
+            "kernel" (per-shard fused Pallas dispatch; needs
+            ``gla.kernel_cols``, lanes == 1).
       lanes: parallel GLA states per partition (DataPath work-unit analogue).
       snapshots: False = non-interactive mode (overhead baseline).
-      alive: bool [P] — node-failure mask (paper §4.6).
-      mesh: if given, run under shard_map with partitions on ``axis_name``.
+      alive: bool [P] (node dead throughout) or [R, P] (failure-injection
+        schedule) — paper §4.6; see repro/dist/fault.py.
+      mesh: if given, run under shard_map with partitions on ``axis_name``
+        (repro/dist/shard_engine.py).
     """
     P, C, L = shards["_mask"].shape
     if schedule is None:
         schedule = uniform_schedule(P, C, rounds)
     sched = jnp.asarray(schedule, jnp.int32)
+    all_alive = alive is None or bool(np.all(np.asarray(alive)))
     alive_arr = jnp.ones((P,), bool) if alive is None else jnp.asarray(alive, bool)
+    if emit == "kernel" and gla.kernel_cols is None:
+        raise ValueError(f"GLA {gla.name!r} does not publish kernel_cols")
 
     if mesh is None:
         return _run_vmapped(
             gla, shards, sched, alive_arr, mode=mode, emit=emit, lanes=lanes,
-            snapshots=snapshots, confidence=confidence,
+            snapshots=snapshots, confidence=confidence, all_alive=all_alive,
         )
-    return _run_sharded(
+    from repro.dist import shard_engine  # local import: core must not require dist
+    return shard_engine.run_sharded(
         gla, shards, sched, alive_arr, mesh=mesh, axis_name=axis_name,
         mode=mode, emit=emit, lanes=lanes, snapshots=snapshots,
         confidence=confidence,

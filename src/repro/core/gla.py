@@ -89,10 +89,18 @@ def make_sum_gla(
             return Estimate(sq(est), sq(lo), sq(hi),
                             info={"var": sq(var), "frac": state.scanned / d_total})
 
+        # Per-shard fused-kernel dispatch (engine emit="kernel"): the Pallas
+        # kernel reproduces acc_sum's state from (func, cond) projections —
+        # only for the plain f32 single-aggregate SumState layout.
+        kernel_cols = None
+        if A == 1 and dtype == jnp.float32:
+            kernel_cols = lambda chunk: (func(chunk), cond(chunk))
+
         return GLA(
             init=zero_sum, accumulate=acc_sum, merge=merge, terminate=terminate,
             estimate=None if estimator == "none" else estimate,
-            merge_is_additive=True, name=f"sum-{estimator}",
+            merge_is_additive=True, kernel_cols=kernel_cols,
+            name=f"sum-{estimator}",
         )
 
     if estimator == "multiple":

@@ -1,0 +1,221 @@
+"""Shared scan/merge core — the one implementation both execution paths run.
+
+The engine has two physical execution paths (DESIGN.md §2, §4):
+
+  * vmapped   — partitions are a leading array axis on one device
+                (``repro.core.engine._run_vmapped``), and
+  * sharded   — partitions are devices along the ``data`` mesh axis under
+                ``jax.shard_map`` (``repro.dist.shard_engine.run_sharded``).
+
+Both consume the per-partition scan primitives in this module, so the GLA
+math is written exactly once; the paths differ only in how per-partition
+states are merged (tensordot over the partition axis vs. ``lax.psum``).
+
+Scan variants (selected by the engine's ``emit`` argument):
+
+  ``scan_prefix``        every prefix state [C+1, ...]; small-state GLAs,
+                         arbitrary snapshot schedules.
+  ``scan_rounds``        state only at round boundaries; large-state GLAs,
+                         uniform schedules (C % R == 0).
+  ``scan_rounds_masked`` per-round O(R·C) masked re-scan; large-state GLAs,
+                         arbitrary schedules.
+  ``kernel_prefix_states`` one fused Pallas dispatch for the whole shard
+                         (per-chunk partials + prefix-sum); SumState GLAs
+                         that publish ``kernel_cols`` (DESIGN.md §3).
+
+``round_weights`` centralizes partition-liveness accounting: the engine and
+the fault model (repro/dist/fault.py) express node failure as an ``alive``
+mask of shape [P] (static) or [R, P] (failure-injection schedule), and every
+merge weights partition states by it.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.uda import GLA
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# lane (work-unit) handling
+# ---------------------------------------------------------------------------
+
+def stack_init(gla: GLA, lanes: int) -> Pytree:
+    """Initial state, broadcast to ``lanes`` parallel GLA states."""
+    s = gla.init()
+    if lanes == 1:
+        return s
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (lanes,) + x.shape), s)
+
+
+def fold_merge(merge, states: Pytree, n: int) -> Pytree:
+    """Left-fold ``merge`` over a leading axis of length ``n``."""
+    acc = jax.tree.map(lambda x: x[0], states)
+    for i in range(1, n):
+        acc = merge(acc, jax.tree.map(lambda x: x[i], states))
+    return acc
+
+
+def accumulate_chunk(gla: GLA, states: Pytree, chunk: dict, lanes: int):
+    """Advance lane states by one chunk; return (states, lane-merged view)."""
+    if lanes == 1:
+        st = gla.accumulate(states, chunk)
+        return st, st
+    lc = {k: v.reshape(lanes, -1) for k, v in chunk.items()}
+    st = jax.vmap(gla.accumulate)(states, lc)
+    return st, fold_merge(gla.merge, st, lanes)
+
+
+# ---------------------------------------------------------------------------
+# per-partition scans
+# ---------------------------------------------------------------------------
+
+def scan_prefix(gla: GLA, cols: dict, lanes: int):
+    """Scan chunks emitting every prefix state (init prepended): [C+1, ...].
+
+    Used when snapshots at *arbitrary* per-partition progress are needed
+    (straggler schedules, sync truncation).  State must be small — the
+    emission cost is O(C · |state|) HBM traffic, nothing else.
+    """
+    init = stack_init(gla, lanes)
+    init_view = fold_merge(gla.merge, init, lanes) if lanes > 1 else init
+
+    def body(st, chunk):
+        st, view = accumulate_chunk(gla, st, chunk, lanes)
+        return st, view
+
+    last, prefixes = lax.scan(body, init, cols)
+    prefixes = jax.tree.map(
+        lambda i, p: jnp.concatenate([i[None], p], axis=0), init_view, prefixes
+    )
+    final_view = jax.tree.map(lambda p: p[-1], prefixes)
+    return final_view, prefixes
+
+
+def scan_rounds(gla: GLA, cols: dict, lanes: int, rounds: int):
+    """Uniform-schedule fast path: emit state only at round boundaries.
+
+    O(|state|·R) emission — usable for large-state GLAs (1M-group group-by).
+    Requires C % rounds == 0.
+    """
+    C = cols["_mask"].shape[0]
+    assert C % rounds == 0, f"uniform rounds path needs C%R==0, got {C}%{rounds}"
+    per = C // rounds
+    rcols = {k: v.reshape((rounds, per) + v.shape[1:]) for k, v in cols.items()}
+    init = stack_init(gla, lanes)
+
+    def round_body(st, round_cols):
+        def chunk_body(s, chunk):
+            s, _ = accumulate_chunk(gla, s, chunk, lanes)
+            return s, None
+        st, _ = lax.scan(chunk_body, st, round_cols)
+        view = fold_merge(gla.merge, st, lanes) if lanes > 1 else st
+        return st, view
+
+    last, views = lax.scan(round_body, init, rcols)
+    final_view = fold_merge(gla.merge, last, lanes) if lanes > 1 else last
+    return final_view, views
+
+
+def scan_rounds_masked(gla: GLA, cols: dict, sched: jnp.ndarray, lanes: int):
+    """Arbitrary-schedule path for large-state GLAs: O(R·C) masked scan.
+
+    Round r re-scans all chunks with liveness mask (lo <= c < hi); correctness
+    from the uda mask contract.  Emission is per-round.
+    """
+    C = cols["_mask"].shape[0]
+    R = sched.shape[0] - 1
+    init = stack_init(gla, lanes)
+
+    def round_body(st, r):
+        lo, hi = sched[r], sched[r + 1]
+
+        def chunk_body(carry, xs):
+            s = carry
+            c, chunk = xs
+            live = ((c >= lo) & (c < hi)).astype(chunk["_mask"].dtype)
+            chunk = dict(chunk)
+            chunk["_mask"] = chunk["_mask"] * live
+            s, _ = accumulate_chunk(gla, s, chunk, lanes)
+            return s, None
+
+        st, _ = lax.scan(chunk_body, st, (jnp.arange(C), cols))
+        view = fold_merge(gla.merge, st, lanes) if lanes > 1 else st
+        return st, view
+
+    last, views = lax.scan(round_body, init, jnp.arange(R))
+    final_view = fold_merge(gla.merge, last, lanes) if lanes > 1 else last
+    return final_view, views
+
+
+# ---------------------------------------------------------------------------
+# fused-kernel shard path (per-shard kernel dispatch, DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+def kernel_prefix_states(gla: GLA, cols: dict):
+    """One Pallas dispatch for a whole [C, L] shard -> SumState prefixes.
+
+    Valid for GLAs that publish ``kernel_cols`` (additive SumState layout):
+    the kernel emits per-chunk (sum, sumsq, scanned, matched) partials in a
+    single launch; additivity turns the prefix states into a cumsum, so the
+    result is interchangeable with :func:`scan_prefix` at lanes == 1.
+    """
+    from repro.core import estimators as E
+    from repro.kernels import ops
+
+    assert gla.kernel_cols is not None, "GLA does not publish kernel_cols"
+    C, L = cols["_mask"].shape
+    flat = {k: v.reshape(C * L) for k, v in cols.items()}
+    vals, weight = gla.kernel_cols(flat)
+    partials = ops.shard_chunk_partials(
+        vals.reshape(C, L), weight.reshape(C, L), cols["_mask"]
+    )  # [C, 4]
+    cum = jnp.concatenate(
+        [jnp.zeros((1, 4), partials.dtype), jnp.cumsum(partials, axis=0)], 0
+    )  # [C+1, 4]
+    prefixes = E.SumState(
+        sum=cum[:, 0:1], sumsq=cum[:, 1:2], scanned=cum[:, 2], matched=cum[:, 3]
+    )
+    final_view = jax.tree.map(lambda p: p[-1], prefixes)
+    return final_view, prefixes
+
+
+def kernel_prefix_states_batched(gla: GLA, shards: dict):
+    """Vmapped-path wrapper: one kernel dispatch per partition, stacked.
+
+    P is small and static, so an unrolled loop keeps the Pallas calls out of
+    scan/vmap transforms (interpret mode on CPU stays supported).
+    """
+    P = shards["_mask"].shape[0]
+    outs = [
+        kernel_prefix_states(gla, jax.tree.map(lambda x, p=p: x[p], shards))
+        for p in range(P)
+    ]
+    prefixes = jax.tree.map(lambda *xs: jnp.stack(xs), *[o[1] for o in outs])
+    finals = jax.tree.map(lambda *xs: jnp.stack(xs), *[o[0] for o in outs])
+    return finals, prefixes
+
+
+# ---------------------------------------------------------------------------
+# liveness accounting (node failure, DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+def round_weights(alive: jnp.ndarray, rounds: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Normalize an alive mask to ([P, R] merge weights, [P] final weights).
+
+    ``alive`` is [P] (partition dead for the whole query) or [R, P]
+    (failure-injection schedule: row r gives liveness during round r).  The
+    final result merges with the last round's liveness — a partition that
+    died mid-query never reports its final state.
+    """
+    alive = jnp.asarray(alive)
+    if alive.ndim == 1:
+        w = jnp.broadcast_to(alive[:, None], (alive.shape[0], rounds))
+        return w.astype(jnp.float32), alive.astype(jnp.float32)
+    w = alive.T.astype(jnp.float32)  # [P, R]
+    return w, w[:, -1]

@@ -79,6 +79,13 @@ class GLA:
         state leaves.  The engine then lowers cross-device merging to a single
         ``psum`` (ring all-reduce) instead of gather+fold — the efficient path
         the paper gets from its aggregation tree.
+      kernel_cols: optional ``chunk -> (vals, weight)`` projection enabling
+        the per-shard fused-kernel dispatch (engine ``emit="kernel"``,
+        DESIGN.md §3).  Only meaningful for GLAs whose state is a float32
+        ``estimators.SumState`` with additive merge: the Pallas kernel
+        computes per-chunk (sum, sumsq, scanned, matched) partials for a
+        whole shard in one launch and the engine prefix-sums them into the
+        same states ``accumulate`` would have produced.
     """
 
     init: Callable[[], State]
@@ -89,6 +96,7 @@ class GLA:
     estimator_merge: Optional[Callable[[State, State], State]] = None
     estimate: Optional[Callable[..., Estimate]] = None
     merge_is_additive: bool = False
+    kernel_cols: Optional[Callable[[Chunk], Any]] = None
     name: str = "gla"
 
     def __post_init__(self):

@@ -1,0 +1,12 @@
+"""Distributed execution: sharding rules, the shard_map engine path, and the
+node-failure model (DESIGN.md §4–§5).
+
+Modules:
+  * ``shard_engine`` — the ``jax.shard_map`` execution path over the ``data``
+    mesh axis; same GLA math as the vmapped path (repro/core/scan.py), with
+    async per-partition snapshot merging and the sync-mode per-chunk barrier.
+  * ``fault``        — partition liveness masks, failure-injection schedules,
+    and the estimator-level consequences of dead partitions (paper §4.6).
+  * ``sharding``     — the logical-axis → mesh-axis rule table for model
+    parameters, optimizer state (ZeRO), and decode caches.
+"""

@@ -1,0 +1,176 @@
+"""Node-failure model — paper §4.6 made executable (DESIGN.md §4).
+
+The engine expresses failure as an ``alive`` mask: [P] for partitions dead
+throughout the query, [R, P] for an injection schedule (partition p
+disappears at round ``fail_at[p]`` and its state — including everything it
+had already accumulated — is lost, so it is excluded from every merge from
+that round on).  This module owns the masks and, crucially, the
+*estimator-level consequences*, which differ per estimation model:
+
+  * ``single``       — survives.  Under global randomization (§4.2) the
+    union of surviving partitions' scans is still a uniform
+    without-replacement sample of the whole dataset; the estimator stays
+    unbiased.  The price is a *variance floor*: |S| can never reach |D|, so
+    the (|D|-|S|) factor in Eq. (4) never vanishes and the confidence bounds
+    never collapse to zero width (:func:`variance_floor`).
+  * ``multiple``     — fails catastrophically.  Stratified sampling treats
+    each partition as a stratum; a dead stratum's contribution has no
+    surviving sample, its local estimator is gone, and nothing bounds the
+    missing term — the honest interval is (-inf, +inf) from the failure
+    round on.
+  * ``synchronized`` — stalls.  The Wu et al. barrier waits for every
+    partition to reach the same progress; a dead partition never arrives, so
+    no snapshot after the failure round clears the barrier.  Estimates
+    freeze at the last pre-failure snapshot (infinite bounds if the failure
+    precedes the first snapshot).
+
+The final (non-estimate) result is always the aggregate over surviving
+partitions' data — exact for what was scanned, silent about what was lost;
+that is precisely why the estimator-level accounting above matters.
+"""
+from __future__ import annotations
+
+from typing import Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine
+from repro.core import estimators as E
+from repro.core.uda import GLA, Estimate
+
+
+def alive_mask(num_partitions: int, dead_partitions: Sequence[int]) -> np.ndarray:
+    """[P] bool — False for partitions dead for the whole query."""
+    alive = np.ones(num_partitions, bool)
+    for p in dead_partitions:
+        alive[p] = False
+    return alive
+
+
+def failure_schedule(
+    num_partitions: int, rounds: int, fail_at: Mapping[int, int]
+) -> np.ndarray:
+    """[R, P] bool — partition p is alive during round r iff r < fail_at[p].
+
+    ``fail_at[p] == 0`` means dead from the start; partitions absent from
+    ``fail_at`` never fail.  Row r feeds the merge of snapshot r, so a
+    partition contributes snapshots strictly before its failure round and is
+    excluded (state lost) from then on.
+    """
+    sched = np.ones((rounds, num_partitions), bool)
+    for p, r in fail_at.items():
+        sched[r:, p] = False
+    return sched
+
+
+def first_failure_round(alive) -> Optional[int]:
+    """Earliest round with a dead partition, or None if all live throughout."""
+    alive = np.asarray(alive)
+    if alive.ndim == 1:
+        return 0 if not alive.all() else None
+    dead_rows = np.flatnonzero(~alive.all(axis=1))
+    return int(dead_rows[0]) if dead_rows.size else None
+
+
+def _poison(est: Estimate, fail_round: int) -> Estimate:
+    """Bounds -> (-inf, +inf) from ``fail_round`` on (multiple model)."""
+    def after(x, v):
+        r = jnp.arange(x.shape[0]).reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.where(r >= fail_round, v, x)
+
+    return Estimate(
+        estimate=est.estimate,
+        lower=jax.tree.map(lambda x: after(x, -jnp.inf), est.lower),
+        upper=jax.tree.map(lambda x: after(x, jnp.inf), est.upper),
+        info=est.info,
+    )
+
+
+def _stall(est: Estimate, fail_round: int) -> Estimate:
+    """Freeze estimates at the last pre-failure snapshot (synchronized model)."""
+    if fail_round == 0:
+        return Estimate(
+            estimate=est.estimate,
+            lower=jax.tree.map(lambda x: jnp.full_like(x, -jnp.inf), est.lower),
+            upper=jax.tree.map(lambda x: jnp.full_like(x, jnp.inf), est.upper),
+            info=est.info,
+        )
+
+    def freeze(x):
+        r = jnp.arange(x.shape[0]).reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.where(r >= fail_round, x[fail_round - 1], x)
+
+    return Estimate(
+        estimate=jax.tree.map(freeze, est.estimate),
+        lower=jax.tree.map(freeze, est.lower),
+        upper=jax.tree.map(freeze, est.upper),
+        info=est.info,
+    )
+
+
+def run_with_failures(
+    gla: GLA,
+    shards: dict,
+    dead_partitions: Sequence[int] = (),
+    *,
+    estimator: str = "single",
+    rounds: int = 8,
+    fail_at: Optional[Mapping[int, int]] = None,
+    schedule: Optional[np.ndarray] = None,
+    mode: str = "async",
+    emit: str = "chunk",
+    confidence: float = 0.95,
+    mesh=None,
+    axis_name: str = "data",
+) -> engine.QueryResult:
+    """Run a query under injected node failures and apply §4.6 semantics.
+
+    ``dead_partitions`` fail before the query starts; ``fail_at`` maps
+    partition -> failure round for mid-query failures.  ``estimator`` names
+    the estimation model the GLA was built with — the post-processing of the
+    bounds (poison / stall / pass-through) depends on it, not on the state.
+    """
+    P, C, L = shards["_mask"].shape
+    if schedule is None:
+        schedule = engine.uniform_schedule(P, C, rounds)
+    R = schedule.shape[1] - 1
+    if fail_at:
+        at = {p: 0 for p in dead_partitions}
+        at.update(fail_at)
+        alive = failure_schedule(P, R, at)
+    else:
+        alive = alive_mask(P, dead_partitions)
+
+    res = engine.run_query(
+        gla, shards, schedule=schedule, mode=mode, emit=emit,
+        confidence=confidence, alive=alive, mesh=mesh, axis_name=axis_name,
+    )
+
+    fr = first_failure_round(alive)
+    if fr is None or res.estimates is None:
+        return res
+    if estimator == "multiple":
+        return res._replace(estimates=_poison(res.estimates, fr))
+    if estimator == "synchronized":
+        return res._replace(estimates=_stall(res.estimates, fr))
+    return res  # single: unbiased as-is, variance floor > 0
+
+
+def variance_floor(
+    gla: GLA, shards: dict, dead_partitions: Sequence[int]
+) -> float:
+    """Residual estimator variance at full scan of the surviving partitions.
+
+    For the single model, failure caps |S| at the survivors' cardinality, so
+    Eq. (4) bottoms out at a strictly positive value (0.0 when nothing
+    died).  Only meaningful for SumState-shaped states (sum / groupby GLAs
+    in the single or synchronized models).
+    """
+    P = shards["_mask"].shape[0]
+    res = engine.run_query(
+        gla, shards, rounds=1, alive=alive_mask(P, dead_partitions))
+    full = jax.tree.map(lambda x: x[-1], res.snapshots)
+    var = E.variance_estimate(full.sum, full.sumsq, full.scanned, res.d_total)
+    return float(np.max(np.asarray(var)))

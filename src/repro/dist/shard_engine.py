@@ -1,0 +1,162 @@
+"""Sharded execution: partitions = devices under ``jax.shard_map``.
+
+This is the deployment path of the engine (DESIGN.md §2, §4): the vmapped
+path simulates partitions as an array axis on one device; here each
+partition is a device along the ``data`` axis of a mesh built by
+repro/launch/mesh.py.  Both paths call the *same* per-partition scan core
+(repro/core/scan.py) — this module only owns what is genuinely distributed:
+
+  * cross-partition merging.  GLA states must be additive (all shipped GLAs
+    are), so Merge/EstimatorMerge lower to a single ``lax.psum`` — the ring
+    all-reduce that plays the role of the paper's aggregation tree.
+  * asynchronous snapshots.  Each partition contributes the prefix state at
+    its *own* scheduled progress; the psum merges unequal-progress states,
+    which is exactly what the paper's single estimator makes legal.
+  * the synchronized barrier.  ``mode="sync"`` truncates every partition to
+    the global minimum progress via ``lax.pmin`` and, with
+    ``sync_cost_model=True``, additionally pays one coordination ``psum`` per
+    chunk — the per-item serialization that makes the Wu et al. estimator
+    slow, visible in wall time and in the HLO collective count
+    (benchmarks/overhead.py).
+  * node failure.  ``alive`` weights ([P] or [R, P], repro/dist/fault.py)
+    zero dead partitions out of every psum.
+
+Equivalence with the vmapped path is asserted in
+tests/test_sharding.py::test_sharded_engine_matches_vmapped_subprocess.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import scan as SC
+from repro.core.uda import GLA
+
+
+def _shard_map(worker, mesh, in_specs, out_specs):
+    """jax-version-tolerant shard_map with replication checking off (the
+    scan carry starts replicated from gla.init and becomes device-varying
+    after the first accumulate, which the static checker rejects)."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn(worker, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    from jax.experimental.shard_map import shard_map as xfn
+    return xfn(worker, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("gla", "mesh", "axis_name", "mode", "emit", "lanes",
+                     "snapshots", "sync_cost_model"),
+)
+def _run_sharded_jit(gla: GLA, shards: dict, sched: jnp.ndarray,
+                     alive2d: jnp.ndarray, *, mesh, axis_name: str, mode: str,
+                     emit: str, lanes: int, snapshots: bool,
+                     sync_cost_model: bool):
+    P = shards["_mask"].shape[0]
+    R = sched.shape[1] - 1
+
+    def worker(cols, sched_p, alive_p):
+        cols = jax.tree.map(lambda x: x[0], cols)      # [1, C, L] -> [C, L]
+        sched_p = sched_p[0]
+        alive_r = alive_p[0].astype(jnp.float32)       # [R] liveness per round
+        d_local = jnp.sum(cols["_mask"])
+        d_total = lax.psum(d_local, axis_name)
+
+        if mode == "sync" and sync_cost_model:
+            # Per-chunk progress coordination: the barrier the paper's
+            # synchronized competitor needs.  The psum'd counter feeds the
+            # next iteration's carry so it cannot be DCE'd.
+            def body(carry, chunk):
+                st, prog = carry
+                st, view = SC.accumulate_chunk(gla, st, chunk, lanes)
+                prog = lax.psum(prog + 1.0, axis_name) / P
+                return (st, prog), view
+            init = (SC.stack_init(gla, lanes), jnp.zeros(()))
+            (last, _), prefixes = lax.scan(body, init, cols)
+            init_view = SC.stack_init(gla, lanes)
+            if lanes > 1:
+                init_view = SC.fold_merge(gla.merge, init_view, lanes)
+                last = SC.fold_merge(gla.merge, last, lanes)
+            prefixes = jax.tree.map(
+                lambda i, p: jnp.concatenate([i[None], p], 0), init_view, prefixes)
+            final_view = last
+        elif emit == "kernel":
+            assert lanes == 1, "emit='kernel' runs single-lane"
+            final_view, prefixes = SC.kernel_prefix_states(gla, cols)
+        elif emit == "chunk":
+            final_view, prefixes = SC.scan_prefix(gla, cols, lanes)
+        elif emit == "round":
+            final_view, round_states = SC.scan_rounds(gla, cols, lanes, R)
+            prefixes = None
+        else:
+            raise ValueError(emit)
+
+        if emit in ("chunk", "kernel") or mode == "sync":
+            if mode == "sync":
+                gmin = lax.pmin(sched_p[1:], axis_name)
+                idx = gmin
+            else:
+                idx = sched_p[1:]
+            round_states = jax.tree.map(lambda x: x[idx], prefixes)
+
+        # weight by aliveness, then psum == EstimatorMerge over the tree.
+        # Final states merge with the last round's liveness — a partition
+        # that died mid-query never reports its final state.
+        def w_final(x):
+            return x * alive_r[-1].astype(x.dtype)
+
+        def w_rounds(x):
+            w = alive_r.reshape((R,) + (1,) * (x.ndim - 1))
+            return x * w.astype(x.dtype)
+
+        merged_final = lax.psum(jax.tree.map(w_final, final_view), axis_name)
+        if snapshots:
+            term = jax.vmap(
+                lambda s: gla.estimator_terminate(s, {"d_local": d_local})
+            )(round_states)
+            merged_rounds = lax.psum(jax.tree.map(w_rounds, term), axis_name)
+        else:
+            merged_rounds = None
+        return merged_final, merged_rounds, d_total, d_local[None]
+
+    from jax.sharding import PartitionSpec as PS
+    pspec = PS(axis_name)
+    out_specs = (PS(), PS(), PS(), PS(axis_name))
+    fn = _shard_map(worker, mesh, (pspec, pspec, pspec), out_specs)
+    return fn(shards, sched, alive2d)
+
+
+@functools.partial(jax.jit, static_argnames=("gla", "confidence"))
+def _estimates_jit(gla: GLA, merged_rounds, d_total, confidence: float):
+    return jax.vmap(
+        lambda s: gla.estimate(s, confidence, {"d_total": d_total})
+    )(merged_rounds)
+
+
+def run_sharded(gla: GLA, shards: dict, sched: jnp.ndarray, alive: jnp.ndarray,
+                *, mesh, axis_name: str, mode: str, emit: str, lanes: int,
+                snapshots: bool, confidence: float, sync_cost_model: bool = True):
+    """Same math as engine._run_vmapped with partitions on ``axis_name``."""
+    from repro.core.engine import QueryResult
+
+    assert gla.merge_is_additive, "sharded path requires additive merges"
+    P = shards["_mask"].shape[0]
+    R = sched.shape[1] - 1
+    # alive arrives [P] or [R, P]; ship it as [P, R] so the partition axis
+    # leads and shards like everything else.
+    alive2d = jnp.broadcast_to(alive, (R, P)).T if alive.ndim == 1 else alive.T
+    merged_final, merged_rounds, d_total, d_local = _run_sharded_jit(
+        gla, shards, jnp.asarray(sched), alive2d, mesh=mesh,
+        axis_name=axis_name, mode=mode, emit=emit, lanes=lanes,
+        snapshots=snapshots, sync_cost_model=sync_cost_model)
+    final = gla.terminate(merged_final)
+    estimates = None
+    if snapshots and gla.estimate is not None:
+        estimates = _estimates_jit(gla, merged_rounds, d_total, confidence)
+    return QueryResult(final, merged_rounds, estimates, d_total, d_local)

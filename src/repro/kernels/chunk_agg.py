@@ -8,13 +8,19 @@ stream [block, 128] tiles HBM→VMEM, evaluate the predicate on the VPU, and
 keep the 4-scalar state resident in VMEM across grid steps (the classic
 revisited-output accumulator pattern).
 
-Two entry points:
+Three entry points:
 
   * ``chunk_agg_kernel``  — generic: takes precomputed ``vals``/``weight``.
   * ``q6_agg_kernel``     — fully fused TPC-H Q6: raw columns in, predicate
     and func evaluated in-kernel, so intermediates never hit HBM.  This is
     the kernel the paper's zero-overhead claim leans on: sum/sumSq/count add
     ≤3 VPU ops/item to a memory-bound stream.
+  * ``shard_agg_kernel``  — per-shard dispatch (engine ``emit="kernel"``,
+    DESIGN.md §3): one launch covers a whole [C, rows, 128] shard on a 2D
+    grid (chunk-major) and emits *per-chunk* accumulator tiles [C, 8, 128].
+    Additive states make the engine's snapshot prefixes a cumsum of these
+    partials, so the sharded engine issues C·P fewer kernel launches while
+    producing states interchangeable with the scan path.
 
 Accumulator layout: [8, 128] f32 (one aligned VREG tile); rows 0..3 hold
 lane-partials of (sum, sumsq, scanned, matched); the host wrapper reduces
@@ -76,6 +82,52 @@ def chunk_agg_kernel(vals, weight, mask, *, block_rows: int = 256,
         in_specs=[spec, spec, spec],
         out_specs=pl.BlockSpec((ACC_ROWS, LANES), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((ACC_ROWS, LANES), jnp.float32),
+        interpret=interpret,
+    )(vals, weight, mask)
+
+
+def _shard_agg_body(vals_ref, weight_ref, mask_ref, acc_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    v = vals_ref[0].astype(jnp.float32)
+    w = weight_ref[0].astype(jnp.float32)
+    m = mask_ref[0].astype(jnp.float32)
+    wm = w * m
+    z = jnp.zeros((ACC_ROWS - 4, LANES), jnp.float32)
+    upd = jnp.concatenate(
+        [
+            jnp.sum(v * wm, axis=0, keepdims=True),
+            jnp.sum(v * v * wm, axis=0, keepdims=True),
+            jnp.sum(m, axis=0, keepdims=True),
+            jnp.sum(wm, axis=0, keepdims=True),
+            z,
+        ],
+        axis=0,
+    )
+    acc_ref[...] += upd[None]
+
+
+def shard_agg_kernel(vals, weight, mask, *, block_rows: int = 256,
+                     interpret: bool = False):
+    """Whole-shard per-chunk aggregation in ONE kernel dispatch.
+
+    vals/weight/mask: [C, R, 128] (R % block_rows == 0) -> [C, 8, 128]
+    per-chunk accumulator tiles.  The grid is (C, R // block_rows) with the
+    block index innermost, so chunk c's output tile is revisited across its
+    blocks and stays resident in VMEM (zero-initialized at block 0).
+    """
+    C, R, lanes = vals.shape
+    assert lanes == LANES and R % block_rows == 0, (vals.shape, block_rows)
+    grid = (C, R // block_rows)
+    spec = pl.BlockSpec((1, block_rows, LANES), lambda i, j: (i, j, 0))
+    return pl.pallas_call(
+        _shard_agg_body,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=pl.BlockSpec((1, ACC_ROWS, LANES), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((C, ACC_ROWS, LANES), jnp.float32),
         interpret=interpret,
     )(vals, weight, mask)
 

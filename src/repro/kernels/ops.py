@@ -50,6 +50,35 @@ def chunk_agg(vals, weight, mask, *, block_rows: int = 256, interpret=None):
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def shard_chunk_partials(vals, weight, mask, *, block_rows: int = 256,
+                         interpret=None):
+    """Per-chunk partials for a whole shard in one kernel dispatch.
+
+    vals/weight/mask: [C, L] -> [C, 4] f32 (sum, sumsq, scanned, matched)
+    per chunk.  Used by the engine's ``emit="kernel"`` path (the snapshot
+    prefix states are the cumsum of these rows for additive GLAs).
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    C, L = vals.shape
+
+    def tiles(x):
+        x = x.astype(jnp.float32)
+        pad = (-L) % LANES
+        if pad:
+            x = jnp.concatenate(
+                [x, jnp.zeros((C, pad), jnp.float32)], axis=1)
+        return x.reshape(C, -1, LANES)
+
+    v, w, m = tiles(vals), tiles(weight), tiles(mask)
+    R = v.shape[1]
+    br = min(block_rows, R)
+    while R % br:
+        br -= 1
+    acc = _ck.shard_agg_kernel(v, w, m, block_rows=br, interpret=interpret)
+    return jnp.sum(acc[:, :4, :], axis=2)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def q6_agg(params, shipdate, discount, quantity, extendedprice, mask,
            *, block_rows: int = 256, interpret=None):
     """Fully fused Q6: params [>=5] f32, flat columns -> [4] f32."""

@@ -52,11 +52,12 @@ def _pin_expert_weights(p, cfg):
     FSDP schedule: gather weights, compute locally, reduce grads.
     No-op without an ambient mesh.
     """
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty or "model" not in mesh.axis_names:
+    from repro.dist import sharding as SH
+    mesh = SH.ambient_mesh()
+    if mesh is None or "model" not in tuple(mesh.axis_names):
         return p
     from jax.sharding import PartitionSpec as PS
-    msize = dict(zip(mesh.axis_names, mesh.axis_sizes))["model"]
+    msize = SH.mesh_axis_size(mesh, "model")
     if cfg.num_experts % msize == 0 and cfg.num_experts >= msize:
         wi_spec, wo_spec = PS("model", None, None), PS("model", None, None)
     elif cfg.d_ff % msize == 0:

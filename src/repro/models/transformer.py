@@ -165,16 +165,16 @@ def pin_batch_activation(x):
     plus score-sized all-reduces (§Perf iteration g1).  No-op without an
     ambient mesh.
     """
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
+    from repro.dist import sharding as SH
+    mesh = SH.ambient_mesh()
+    if mesh is None:
         return x
-    daxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    daxes = SH.batch_axes(mesh)
     if not daxes:
         return x
-    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
     dsize = 1
     for a in daxes:
-        dsize *= sizes[a]
+        dsize *= SH.mesh_axis_size(mesh, a)
     if x.shape[0] % dsize or x.shape[0] < dsize:
         return x
     lead = daxes if len(daxes) > 1 else daxes[0]
@@ -194,13 +194,13 @@ def _pin_replicated_heads(x, cfg):
     l2).  Constraining q/k/v to model-replicated pins the reduction to the
     [B,S,H,dh] tensor instead.  No-op without an ambient mesh.
     """
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty or "model" not in mesh.axis_names:
+    from repro.dist import sharding as SH
+    mesh = SH.ambient_mesh()
+    if mesh is None or "model" not in tuple(mesh.axis_names):
         return x
-    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
-    if cfg.num_heads % sizes["model"] == 0:
+    if cfg.num_heads % SH.mesh_axis_size(mesh, "model") == 0:
         return x
-    daxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    daxes = SH.batch_axes(mesh)
     lead = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
     from jax.sharding import PartitionSpec as PS
     return lax.with_sharding_constraint(

@@ -1,0 +1,132 @@
+"""repro.dist subsystem: per-shard kernel dispatch, failure-injection
+schedules, and the fault model's estimator-level accounting (DESIGN.md §4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, gla, randomize
+from repro.data import tpch
+from repro.dist import fault
+
+ROWS = 12_000
+PARTS = 4
+
+
+@pytest.fixture(scope="module")
+def shards():
+    cols = tpch.generate_lineitem(ROWS, seed=23)
+    parts = randomize.randomize_global(
+        {k: jnp.asarray(v) for k, v in cols.items()}, jax.random.key(5), PARTS)
+    return randomize.pack_partitions(parts, chunk_len=256)
+
+
+@pytest.fixture(scope="module")
+def q6(shards):
+    return gla.make_sum_gla(tpch.q6_func, tpch.q6_cond(tpch.Q6_LOW_WINDOW),
+                            d_total=float(ROWS))
+
+
+def test_kernel_emit_matches_scan(shards, q6):
+    """emit='kernel' (one fused Pallas dispatch per shard) produces the same
+    snapshots and final as the lax.scan prefix path."""
+    assert q6.kernel_cols is not None
+    a = engine.run_query(q6, shards, rounds=4, emit="chunk")
+    b = engine.run_query(q6, shards, rounds=4, emit="kernel")
+    np.testing.assert_allclose(float(a.final), float(b.final), rtol=1e-5)
+    for x, y in zip(jax.tree.leaves(a.snapshots), jax.tree.leaves(b.snapshots)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-4,
+                                   atol=1e-4)
+    np.testing.assert_allclose(np.asarray(a.estimates.estimate),
+                               np.asarray(b.estimates.estimate), rtol=1e-4)
+
+
+def test_kernel_emit_requires_kernel_cols(shards):
+    g = gla.make_sum_gla(tpch.q1_func, tpch.q1_cond, d_total=float(ROWS),
+                         num_aggs=4)  # A>1: no kernel projection
+    assert g.kernel_cols is None
+    with pytest.raises(ValueError, match="kernel_cols"):
+        engine.run_query(g, shards, rounds=4, emit="kernel")
+
+
+def test_failure_schedule_layout():
+    sched = fault.failure_schedule(4, 6, {1: 0, 3: 4})
+    assert sched.shape == (6, 4)
+    assert not sched[:, 1].any()          # dead from the start
+    assert sched[:4, 3].all() and not sched[4:, 3].any()
+    assert sched[:, 0].all() and sched[:, 2].all()
+    assert fault.first_failure_round(sched) == 0
+    assert fault.first_failure_round(fault.failure_schedule(4, 6, {3: 4})) == 4
+    assert fault.first_failure_round(np.ones(4, bool)) is None
+
+
+def test_midquery_failure_drops_partition_from_merge(shards, q6):
+    """After partition p dies at round r, merged snapshots count only the
+    survivors; before r, they include p."""
+    rounds, p, r = 6, 1, 3
+    res = fault.run_with_failures(q6, shards, fail_at={p: r}, rounds=rounds)
+    base = engine.run_query(q6, shards, rounds=rounds)
+    scanned = np.asarray(res.snapshots.scanned)
+    scanned_base = np.asarray(base.snapshots.scanned)
+    np.testing.assert_allclose(scanned[:r], scanned_base[:r], rtol=1e-6)
+    assert np.all(scanned[r:] < scanned_base[r:])
+    # final merges with the last round's liveness: survivors only
+    static = engine.run_query(q6, shards, rounds=rounds,
+                              alive=fault.alive_mask(PARTS, [p]))
+    np.testing.assert_allclose(float(res.final), float(static.final), rtol=1e-6)
+
+
+def test_variance_floor_zero_without_failure(shards, q6):
+    assert fault.variance_floor(q6, shards, []) == pytest.approx(0.0, abs=1e-6)
+    assert fault.variance_floor(q6, shards, [0]) > 0.0
+
+
+def test_synchronized_stalls_at_failure_round(shards):
+    g = gla.make_sum_gla(tpch.q6_func, tpch.q6_cond(tpch.Q6_LOW_WINDOW),
+                         d_total=float(ROWS), estimator="synchronized")
+    rounds, r = 6, 2
+    res = fault.run_with_failures(g, shards, fail_at={2: r}, rounds=rounds,
+                                  estimator="synchronized")
+    est = np.asarray(res.estimates.estimate)
+    lo = np.asarray(res.estimates.lower)
+    # frozen at the last pre-failure snapshot from round r on
+    for arr in (est, lo):
+        assert np.all(arr[r:] == arr[r - 1])
+    # dead from the start: the barrier never clears, bounds are infinite
+    res0 = fault.run_with_failures(g, shards, dead_partitions=[2],
+                                   rounds=rounds, estimator="synchronized")
+    assert np.all(np.isneginf(np.asarray(res0.estimates.lower)))
+    assert np.all(np.isposinf(np.asarray(res0.estimates.upper)))
+
+
+def test_non_additive_merge_fold_path(shards):
+    """A non-additive GLA (max) runs through the fold-merge path when every
+    partition is alive, and refuses alive masks (they need additivity)."""
+    from repro.core.uda import GLA
+    g_max = GLA(
+        init=lambda: {"mx": jnp.full((), -jnp.inf)},
+        accumulate=lambda s, c: {"mx": jnp.maximum(
+            s["mx"],
+            jnp.max(jnp.where(c["_mask"] > 0, c["extendedprice"], -jnp.inf)))},
+        merge=lambda a, b: {"mx": jnp.maximum(a["mx"], b["mx"])},
+        terminate=lambda s: s["mx"],
+        merge_is_additive=False, name="max")
+    res = engine.run_query(g_max, shards, rounds=2, snapshots=False)
+    exact = float(jnp.max(jnp.where(shards["_mask"] > 0,
+                                    shards["extendedprice"], -jnp.inf)))
+    assert float(res.final) == exact
+    with pytest.raises(NotImplementedError, match="merge_is_additive"):
+        engine.run_query(g_max, shards, rounds=2, snapshots=False,
+                         alive=fault.alive_mask(PARTS, [1]))
+
+
+def test_multiple_midquery_poisons_only_after_failure(shards):
+    g = gla.make_sum_gla(tpch.q6_func, tpch.q6_cond(tpch.Q6_LOW_WINDOW),
+                         d_total=float(ROWS), estimator="multiple")
+    rounds, r = 6, 3
+    res = fault.run_with_failures(g, shards, fail_at={0: r}, rounds=rounds,
+                                  estimator="multiple")
+    lo = np.asarray(res.estimates.lower)
+    hi = np.asarray(res.estimates.upper)
+    assert np.all(np.isfinite(lo[:r])) and np.all(np.isfinite(hi[:r]))
+    assert np.all(np.isneginf(lo[r:])) and np.all(np.isposinf(hi[r:]))

@@ -84,7 +84,16 @@ def test_sharded_engine_matches_vmapped_subprocess():
         rs = engine.run_query(g, shards, rounds=8, mesh=mesh)
         np.testing.assert_allclose(np.asarray(rv.estimates.estimate),
                                    np.asarray(rs.estimates.estimate), rtol=2e-5)
-        np.testing.assert_allclose(float(rv.final), float(rs.final), rtol=2e-5)
+        # both paths run the same scan core: final GLA states (and the
+        # merged snapshot states) are bitwise identical, not just close
+        assert np.asarray(rv.final).tobytes() == np.asarray(rs.final).tobytes()
+        for a, b in zip(jax.tree.leaves(rv.snapshots),
+                        jax.tree.leaves(rs.snapshots)):
+            assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+        # the kernel path sums in a different order (tiled lane partials +
+        # cumsum), so it is interchangeable, not bitwise-identical
+        rk = engine.run_query(g, shards, rounds=8, mesh=mesh, emit="kernel")
+        np.testing.assert_allclose(float(rk.final), float(rv.final), rtol=1e-5)
         sched = engine.straggler_schedule(8, shards["_mask"].shape[1], 6,
                                           speeds=[1,1,1,1,2,2,3,4])
         sv = engine.run_query(g, shards, schedule=sched, mode="sync")
