@@ -6,6 +6,8 @@
 Sections:
   * kernels      — jitted hot-loop throughput (chunk/group aggregation)
   * overhead     — paper Table 2 (estimation overhead incl. synchronized)
+  * groupby      — paper §5.3 large-domain Q1: segment_sum scan vs the
+                   per-round-slice Pallas group_agg dispatch
   * convergence  — paper Figs. 1–3 (relative CI width curves)
   * roofline     — §Roofline table from the dry-run artifacts (if present)
 """
@@ -57,6 +59,10 @@ def main():
     print("# === overhead (paper Table 2) ===")
     from benchmarks import overhead
     overhead.run()
+
+    print("# === groupby (paper §5.3 large-domain Q1) ===")
+    from benchmarks import groupby
+    groupby.run(rows=50_000 if quick else groupby.ROWS)
 
     print("# === convergence (paper Figs 1-3) ===")
     from benchmarks import convergence

@@ -382,6 +382,50 @@ class HloCost:
         return sorted(acc.items(), key=lambda kv: -kv[1])[:top]
 
 
+def count_ops(hlo_text: str, opcode: str, *, trip_scaled: bool = True) -> float:
+    """Count instructions with ``opcode`` reachable from the entry.
+
+    Walks while bodies (multiplied by ``known_trip_count`` when
+    ``trip_scaled``), fusion/call targets, and conditional branches —
+    the same traversal as :class:`HloCost`.  Used by benchmarks/groupby.py
+    to verify dispatch counts: the segment_sum path issues scatters once per
+    chunk (trip-scaled through the scan loops), the Pallas path issues one
+    grid loop (a ``while`` op, interpret mode) per dispatch.
+    """
+    hc = HloCost(hlo_text)
+    total = 0.0
+    seen_stack: List[str] = []
+
+    def walk(name: str, mult: float):
+        if name in seen_stack:  # defensive: HLO computations are acyclic
+            return
+        seen_stack.append(name)
+        nonlocal total
+        for inst in hc.comps.get(name, []):
+            if inst.opcode == opcode:
+                total += mult
+            if inst.opcode == "while":
+                cb = _COND_BODY_RE.search(inst.rest)
+                tm = _TRIP_RE.search(inst.rest)
+                trip = int(tm.group(1)) if (tm and trip_scaled) else 1
+                if cb:
+                    walk(cb.group(1), mult * trip)
+                    walk(cb.group(2), mult * trip)
+            elif inst.opcode in ("fusion", "call", "custom-call"):
+                cm = _CALLS_RE.search(inst.rest)
+                if cm:
+                    walk(cm.group(1), mult)
+            elif inst.opcode == "conditional":
+                bm = _BRANCHES_RE.search(inst.rest)
+                if bm:
+                    for b in re.findall(r"%([^\s,]+)", bm.group(1)):
+                        walk(b, mult)
+        seen_stack.pop()
+
+    walk(hc.entry, 1.0)
+    return total
+
+
 def analyze(hlo_text: str) -> dict:
     cost = HloCost(hlo_text).total()
     return {

@@ -35,6 +35,7 @@ Execution model (DESIGN.md §2):
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Any, NamedTuple, Optional
 
 import jax
@@ -137,7 +138,17 @@ def _run_vmapped(gla: GLA, shards: dict, sched: jnp.ndarray, alive: jnp.ndarray,
     d_total = jnp.sum(d_local)
     w_pr, w_final = SC.round_weights(alive, R)
 
-    if emit in ("chunk", "kernel"):
+    if emit == "kernel" and gla.kernel_num_groups is not None:
+        # group-by kernel dispatch: dense [G, A] states follow the round
+        # emission discipline (DESIGN.md §3) — no per-chunk prefixes exist.
+        assert lanes == 1, "emit='kernel' runs single-lane"
+        if mode == "sync":
+            raise NotImplementedError("sync mode requires emit='chunk'")
+        # snapshots off: no round states are consumed — one whole-shard
+        # dispatch (same chunk-sequential association, R-fold fewer launches)
+        finals, round_states = SC.kernel_rounds_states_batched(
+            gla, shards, R if snapshots else 1)
+    elif emit in ("chunk", "kernel"):
         if emit == "chunk":
             finals, prefixes = jax.vmap(
                 lambda c: SC.scan_prefix(gla, c, lanes))(shards)
@@ -211,6 +222,7 @@ def run_query(
     alive: Optional[np.ndarray] = None,
     mesh=None,
     axis_name: str = "data",
+    sync_cost_model: bool = True,
 ) -> QueryResult:
     """Execute a GLA query with on-line estimation.
 
@@ -218,28 +230,65 @@ def run_query(
       gla: the UDA bundle (repro.core.gla constructors or custom).
       shards: columnar dict, leaves [P, C, L], must include "_mask".
       rounds: number of snapshot points (ignored if ``schedule`` given).
+        Round-emission paths ("round", and group-by "kernel") emit at
+        uniform round boundaries only: the engine degrades ``rounds`` to
+        the largest divisor of C with a warning, and rejects an explicit
+        ``schedule`` that is indivisible or non-uniform with a ValueError
+        (those paths would silently ignore it otherwise).
       schedule: cumulative chunk boundaries [P, R+1] (engine.*_schedule).
       mode: "async" (paper's estimator) or "sync" (Wu et al. barrier).
       emit: "chunk" (prefix states; small-state GLAs, any schedule),
             "round" (uniform schedule fast path, large states),
             "round_masked" (any schedule, large states, O(R·C)), or
-            "kernel" (per-shard fused Pallas dispatch; needs
-            ``gla.kernel_cols``, lanes == 1).
+            "kernel" (fused Pallas dispatch; needs ``gla.kernel_cols``,
+            lanes == 1 — one dispatch per shard for scalar SumState GLAs,
+            one ``ops.group_agg`` dispatch per round-slice for group-by
+            GLAs publishing ``kernel_num_groups``).
       lanes: parallel GLA states per partition (DataPath work-unit analogue).
       snapshots: False = non-interactive mode (overhead baseline).
       alive: bool [P] (node dead throughout) or [R, P] (failure-injection
         schedule) — paper §4.6; see repro/dist/fault.py.
       mesh: if given, run under shard_map with partitions on ``axis_name``
         (repro/dist/shard_engine.py).
+      sync_cost_model: sharded ``mode="sync"`` only — pay the per-chunk
+        coordination collective that mechanistically reproduces the Wu et
+        al. barrier cost (DESIGN.md §4).  False truncates to min progress
+        without the per-chunk collective (required for the scalar-SumState
+        ``emit="kernel"`` path under sync).  Ignored by the vmapped path.
     """
     P, C, L = shards["_mask"].shape
+    if emit == "kernel" and gla.kernel_cols is None:
+        raise ValueError(f"GLA {gla.name!r} does not publish kernel_cols")
+    needs_uniform_rounds = emit == "round" or (
+        emit == "kernel" and gla.kernel_num_groups is not None)
+    if needs_uniform_rounds:
+        if schedule is None:
+            if C % rounds:
+                best = max(d for d in range(1, rounds + 1) if C % d == 0)
+                warnings.warn(
+                    f"emit={emit!r} needs C % rounds == 0 (C={C}); degrading "
+                    f"rounds {rounds} -> {best}", stacklevel=2)
+                rounds = best
+        else:
+            sched_np = np.asarray(schedule)
+            R = sched_np.shape[1] - 1
+            if C % R:
+                raise ValueError(
+                    f"emit={emit!r} needs C % rounds == 0, got C={C} with a "
+                    f"{R}-round schedule")
+            # These paths emit states at uniform round boundaries only; a
+            # schedule they would silently ignore is an error, not a hint.
+            if not np.array_equal(sched_np, uniform_schedule(P, C, R)):
+                raise ValueError(
+                    f"emit={emit!r} emits snapshots at uniform round "
+                    "boundaries and cannot honor a non-uniform schedule — "
+                    "use emit='round_masked' (large states, any schedule) "
+                    "or emit='chunk' (prefix states)")
     if schedule is None:
         schedule = uniform_schedule(P, C, rounds)
     sched = jnp.asarray(schedule, jnp.int32)
     all_alive = alive is None or bool(np.all(np.asarray(alive)))
     alive_arr = jnp.ones((P,), bool) if alive is None else jnp.asarray(alive, bool)
-    if emit == "kernel" and gla.kernel_cols is None:
-        raise ValueError(f"GLA {gla.name!r} does not publish kernel_cols")
 
     if mesh is None:
         return _run_vmapped(
@@ -250,5 +299,5 @@ def run_query(
     return shard_engine.run_sharded(
         gla, shards, sched, alive_arr, mesh=mesh, axis_name=axis_name,
         mode=mode, emit=emit, lanes=lanes, snapshots=snapshots,
-        confidence=confidence,
+        confidence=confidence, sync_cost_model=sync_cost_model,
     )

@@ -16,7 +16,10 @@ TPU adaptation (DESIGN.md §3): the per-group scatter is a
 ``jax.ops.segment_sum`` here (lowers to one-hot matmul / sorted segment ops on
 TPU); the Pallas hot-path kernel in ``repro/kernels`` implements the identical
 contraction with explicit VMEM tiling and is allclose-checked against these
-reference semantics.
+reference semantics.  Group-by GLAs publish the ``(vals, weight, gids)``
+kernel projection so ``engine.run_query(emit="kernel")`` reaches that kernel
+directly (one dispatch per round-slice); large raw-id domains fold through
+:func:`hash_bucket` into a 2**bucket_bits dense bucket table.
 """
 from __future__ import annotations
 
@@ -33,6 +36,38 @@ from repro.core.uda import GLA, Chunk, Estimate
 def _as_2d(vals: jnp.ndarray) -> jnp.ndarray:
     """[n] -> [n, 1]; [n, A] stays."""
     return vals[:, None] if vals.ndim == 1 else vals
+
+
+# ---------------------------------------------------------------------------
+# Hash-bucketed group tables (paper §4.4 large-domain group-by, e.g. the
+# 1M-group Q1).  The dense [G, A] composite state cannot scale with the raw
+# id domain, so raw ids are folded into 2**bucket_bits buckets by a
+# multiplicative hash.  The multiplier is odd, hence invertible mod 2**b:
+# g -> (g * MULT) mod 2**b is a *bijection* on [0, 2**b), so any raw domain
+# with num_groups <= 2**bucket_bits maps injectively and de-bucketing is
+# exact (tests/test_groupby_kernel.py::
+# test_kernel_final_matches_exact_debucketed).
+# Larger domains fold ~num_groups / 2**b raw ids per bucket — the bucket
+# then estimates the folded groups' combined aggregate.
+# ---------------------------------------------------------------------------
+
+_BUCKET_MULT = 2654435761  # 2**32 / golden ratio (Knuth), odd
+
+
+def hash_bucket(gids: jnp.ndarray, bucket_bits: int) -> jnp.ndarray:
+    """Raw group ids -> int32 bucket ids in [0, 2**bucket_bits)."""
+    h = jnp.asarray(gids).astype(jnp.uint32) * jnp.uint32(_BUCKET_MULT)
+    return (h & jnp.uint32((1 << bucket_bits) - 1)).astype(jnp.int32)
+
+
+def debucket(bucket_vals: jnp.ndarray, raw_ids, bucket_bits: int):
+    """Gather per-raw-id rows from a bucketed group table [2**b, ...].
+
+    Exact whenever the active raw-id set maps injectively into buckets —
+    guaranteed for num_groups <= 2**bucket_bits by the hash bijectivity.
+    """
+    idx = hash_bucket(jnp.asarray(raw_ids), bucket_bits)
+    return jnp.take(bucket_vals, idx, axis=0)
 
 
 # ---------------------------------------------------------------------------
@@ -156,6 +191,7 @@ def make_groupby_gla(
     estimator: str = "single",
     dtype=jnp.float32,
     num_aggs: int = 1,
+    bucket_bits: Optional[int] = None,
 ) -> GLA:
     """GROUP BY gAtts SUM(func(d)) WHERE cond(d) — paper query (5).
 
@@ -163,8 +199,31 @@ def make_groupby_gla(
     composition", paper §4.4): sums/sumsqs/matched are [G, A]/[G]; ``scanned``
     is global (each group's predicate is cond ∧ group==g over the same scan).
     The per-item scatter is a segment_sum → one-hot MXU contraction on TPU.
+
+    ``bucket_bits`` enables the large-domain hash-bucketed group table
+    (paper's 1M-group Q1): raw ids from ``group`` are folded through
+    :func:`hash_bucket` and the dense state covers the 2**bucket_bits
+    buckets instead of the raw domain.  Recover per-raw-id rows with
+    :func:`debucket` (exact for num_groups <= 2**bucket_bits).
+
+    Under the single/synchronized/none estimation models, float32 states
+    publish the group-by ``kernel_cols`` contract
+    ``chunk -> (vals, weight, gids)`` plus ``kernel_num_groups``, so
+    ``engine.run_query(emit="kernel")`` dispatches the Pallas one-hot MXU
+    kernel (``repro/kernels/group_agg.py``) once per round-slice
+    (DESIGN.md §3).  The "multiple" estimator keeps its MultState wrapper
+    on the scan paths only.
     """
-    G, A = num_groups, num_aggs
+    A = num_aggs
+    if bucket_bits is not None:
+        raw_group = group
+
+        def group(chunk):  # noqa: F811 — bucketed view of the raw ids
+            return hash_bucket(raw_group(chunk), bucket_bits)
+
+        G = 1 << bucket_bits
+    else:
+        G = num_groups
 
     def zero():
         return E.SumState(
@@ -187,6 +246,8 @@ def make_groupby_gla(
     def merge(a, b):
         return jax.tree.map(jnp.add, a, b)
 
+    suffix = f"-b{bucket_bits}" if bucket_bits is not None else ""
+
     if estimator in ("single", "synchronized", "none"):
 
         def estimate(state: E.SumState, confidence, ctx=None) -> Estimate:
@@ -195,11 +256,21 @@ def make_groupby_gla(
             lo, hi = E.normal_bounds(est, var, confidence)
             return Estimate(est, lo, hi, info={"var": var, "matched": state.matched})
 
+        # Group-by fused-kernel dispatch (engine emit="kernel"): ops.group_agg
+        # reproduces acc's state from the (func, cond, group) projections —
+        # one one-hot MXU dispatch per round-slice (scan.kernel_rounds_states).
+        kernel_cols = None
+        kernel_G = None
+        if dtype == jnp.float32:
+            kernel_cols = lambda chunk: (func(chunk), cond(chunk), group(chunk))
+            kernel_G = G
+
         return GLA(
             init=zero, accumulate=acc, merge=merge,
             terminate=lambda s: s.sum,
             estimate=None if estimator == "none" else estimate,
-            merge_is_additive=True, name=f"groupby-{estimator}",
+            merge_is_additive=True, kernel_cols=kernel_cols,
+            kernel_num_groups=kernel_G, name=f"groupby-{estimator}{suffix}",
         )
 
     if estimator == "multiple":
@@ -223,11 +294,11 @@ def make_groupby_gla(
             return Estimate(state.est, lo, hi, info={"var": state.estvar})
 
         return GLA(
-            init=zero_mult, accumulate=acc_mult,
-            merge=lambda a, b: jax.tree.map(jnp.add, a, b),
+            init=zero_mult, accumulate=acc_mult, merge=merge,
             terminate=lambda s: s.base.sum,
-            estimator_terminate=est_term,
-            estimate=estimate, merge_is_additive=True, name="groupby-multiple",
+            estimator_terminate=est_term, estimator_merge=merge,
+            estimate=estimate, merge_is_additive=True,
+            name=f"groupby-multiple{suffix}",
         )
 
     raise ValueError(f"unknown estimator model: {estimator!r}")

@@ -70,8 +70,14 @@ def randomize_distributed(
             for j in range(num_partitions):
                 buckets[j][k].append(v[tgt == j])
     out: List[Columns] = []
+    dtypes = {k: np.asarray(v).dtype for k, v in parts[0].items()}
     for j in range(num_partitions):
-        cat = {k: np.concatenate(vs) if vs else np.zeros((0,))
+        # Empty buckets (a partition that received no rows) must keep the
+        # source dtype: a bare np.zeros((0,)) would silently promote int32
+        # columns (shipdate, rfls, suppkey) to float64 downstream.
+        cat = {k: (np.concatenate(vs) if vs
+                   else np.zeros((0,), dtypes[k])).astype(dtypes[k],
+                                                          copy=False)
                for k, vs in buckets[j].items()}
         n_j = next(iter(cat.values())).shape[0]
         # Stage 2: fresh random keys -> sort = local random permutation.

@@ -22,6 +22,11 @@ Scan variants (selected by the engine's ``emit`` argument):
   ``kernel_prefix_states`` one fused Pallas dispatch for the whole shard
                          (per-chunk partials + prefix-sum); SumState GLAs
                          that publish ``kernel_cols`` (DESIGN.md §3).
+  ``kernel_rounds_states`` one ``ops.group_agg`` Pallas dispatch per
+                         round-slice; group-by GLAs that publish
+                         ``kernel_cols`` + ``kernel_num_groups`` — dense
+                         [G, A] states follow the round emission discipline
+                         (DESIGN.md §3).
 
 ``round_weights`` centralizes partition-liveness accounting: the engine and
 the fault model (repro/dist/fault.py) express node failure as an ``alive``
@@ -199,6 +204,70 @@ def kernel_prefix_states_batched(gla: GLA, shards: dict):
     prefixes = jax.tree.map(lambda *xs: jnp.stack(xs), *[o[1] for o in outs])
     finals = jax.tree.map(lambda *xs: jnp.stack(xs), *[o[0] for o in outs])
     return finals, prefixes
+
+
+def kernel_rounds_states(gla: GLA, cols: dict, rounds: int):
+    """One ``ops.group_agg`` dispatch per round-slice -> group SumState views.
+
+    Valid for group-by GLAs publishing the ``(vals, weight, gids)`` kernel
+    projection plus ``kernel_num_groups`` (core/gla.make_groupby_gla).  The
+    dense [G, A] state makes per-chunk prefix emission memory-infeasible, so
+    this path composes with the ``emit="round"`` discipline instead: the
+    kernel aggregates each round-slice of the shard in a single launch and
+    additivity turns the round-boundary states into a running sum of the
+    per-round deltas — interchangeable with :func:`scan_rounds` at lanes==1.
+
+    ``block_rows`` is pinned to the chunk length, so the kernel accumulates
+    chunk-by-chunk in the same association order as the scan path; the
+    running sum over rounds is folded sequentially for the same reason
+    (see tests/test_groupby_kernel.py for the bitwise-equality check).
+    """
+    from repro.core import estimators as E
+    from repro.kernels import ops
+
+    assert gla.kernel_cols is not None, "GLA does not publish kernel_cols"
+    assert gla.kernel_num_groups is not None, (
+        "GLA publishes the scalar kernel contract, not the group-by one")
+    C, L = cols["_mask"].shape
+    assert C % rounds == 0, (
+        f"group-by kernel path needs C % rounds == 0, got {C} % {rounds}")
+    per = C // rounds
+    G = gla.kernel_num_groups
+
+    deltas = []
+    for r in range(rounds):
+        sl = {k: v[r * per:(r + 1) * per].reshape(per * L)
+              for k, v in cols.items()}
+        vals, weight, gids = gla.kernel_cols(sl)
+        w = (weight * sl["_mask"]).astype(jnp.float32)
+        sums, sumsqs, matched = ops.group_agg(
+            vals, w, gids.astype(jnp.int32), num_groups=G, block_rows=L)
+        deltas.append(E.SumState(
+            sum=sums, sumsq=sumsqs,
+            scanned=jnp.sum(sl["_mask"].astype(jnp.float32)),
+            matched=matched,
+        ))
+
+    acc, views = deltas[0], [deltas[0]]
+    for d in deltas[1:]:
+        acc = jax.tree.map(jnp.add, acc, d)
+        views.append(acc)
+    views = jax.tree.map(lambda *xs: jnp.stack(xs), *views)  # [R, ...]
+    return acc, views
+
+
+def kernel_rounds_states_batched(gla: GLA, shards: dict, rounds: int):
+    """Vmapped-path wrapper for :func:`kernel_rounds_states`: unrolled over
+    partitions (same rationale as :func:`kernel_prefix_states_batched`)."""
+    P = shards["_mask"].shape[0]
+    outs = [
+        kernel_rounds_states(
+            gla, jax.tree.map(lambda x, p=p: x[p], shards), rounds)
+        for p in range(P)
+    ]
+    finals = jax.tree.map(lambda *xs: jnp.stack(xs), *[o[0] for o in outs])
+    views = jax.tree.map(lambda *xs: jnp.stack(xs), *[o[1] for o in outs])
+    return finals, views
 
 
 # ---------------------------------------------------------------------------

@@ -79,13 +79,26 @@ class GLA:
         state leaves.  The engine then lowers cross-device merging to a single
         ``psum`` (ring all-reduce) instead of gather+fold — the efficient path
         the paper gets from its aggregation tree.
-      kernel_cols: optional ``chunk -> (vals, weight)`` projection enabling
-        the per-shard fused-kernel dispatch (engine ``emit="kernel"``,
-        DESIGN.md §3).  Only meaningful for GLAs whose state is a float32
-        ``estimators.SumState`` with additive merge: the Pallas kernel
-        computes per-chunk (sum, sumsq, scanned, matched) partials for a
-        whole shard in one launch and the engine prefix-sums them into the
-        same states ``accumulate`` would have produced.
+      kernel_cols: optional column projection enabling the fused-kernel
+        dispatch (engine ``emit="kernel"``, DESIGN.md §3).  Only meaningful
+        for GLAs whose state is a float32 ``estimators.SumState`` (directly
+        or per group) with additive merge.  Two contracts, selected by
+        ``kernel_num_groups``:
+        * scalar (``kernel_num_groups is None``): ``chunk -> (vals, weight)``.
+          The Pallas kernel computes per-chunk (sum, sumsq, scanned, matched)
+          partials for a whole shard in one launch and the engine prefix-sums
+          them into the same states ``accumulate`` would have produced
+          (``scan.kernel_prefix_states``).
+        * group-by: ``chunk -> (vals, weight, gids)`` with
+          ``kernel_num_groups`` set to the dense group-table size G.  Dense
+          [G, A] states make per-chunk prefixes memory-infeasible, so the
+          engine dispatches ``kernels.ops.group_agg`` once per *round-slice*
+          (``scan.kernel_rounds_states``), composing with the ``emit="round"``
+          emission discipline (uniform schedules, C % R == 0).
+        In both contracts ``weight`` is the bare predicate — the engine fuses
+        ``chunk["_mask"]`` itself.
+      kernel_num_groups: dense group-table size for the group-by kernel
+        contract; None selects the scalar SumState contract.
     """
 
     init: Callable[[], State]
@@ -97,6 +110,7 @@ class GLA:
     estimate: Optional[Callable[..., Estimate]] = None
     merge_is_additive: bool = False
     kernel_cols: Optional[Callable[[Chunk], Any]] = None
+    kernel_num_groups: Optional[int] = None
     name: str = "gla"
 
     def __post_init__(self):

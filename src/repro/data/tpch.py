@@ -104,6 +104,32 @@ def q1_group_large(chunk):
     return chunk["suppkey"]
 
 
+# Scaled large-domain Q1 (paper §5.3: 1M groups): suppkey spans >= 100k raw
+# ids, folded into 2**bucket_bits hash buckets (repro/core/gla.hash_bucket)
+# so the dense composite state stays TPU/VMEM-feasible.
+Q1_LARGE_SUPPLIERS = 100_000
+Q1_LARGE_BUCKET_BITS = 13
+
+
+def q1_large_scenario(rows: int, *, num_suppliers: int = Q1_LARGE_SUPPLIERS,
+                      bucket_bits: int = Q1_LARGE_BUCKET_BITS, seed: int = 7,
+                      estimator: str = "single"):
+    """Large-domain Q1 group-by: columns + a hash-bucketed group-by GLA.
+
+    The GLA publishes the group-by kernel projection, so it runs through
+    ``engine.run_query(emit="kernel")`` (one ``ops.group_agg`` dispatch per
+    round-slice) as well as the segment_sum paths.  Returns ``(cols, gla)``.
+    """
+    from repro.core import gla as _gla  # local: data must not require core
+
+    cols = generate_lineitem(rows, num_suppliers=num_suppliers, seed=seed)
+    g = _gla.make_groupby_gla(
+        q1_func, q1_cond, q1_group_large, num_groups=num_suppliers,
+        bucket_bits=bucket_bits, d_total=float(rows), estimator=estimator,
+        num_aggs=4)
+    return cols, g
+
+
 def exact_answer(cols: Dict[str, np.ndarray], func, cond, group=None,
                  num_groups: int | None = None):
     """Ground truth on host numpy (the oracle for all correctness tests)."""

@@ -88,7 +88,15 @@ def _run_sharded_jit(gla: GLA, shards: dict, sched: jnp.ndarray,
             final_view = last
         elif emit == "kernel":
             assert lanes == 1, "emit='kernel' runs single-lane"
-            final_view, prefixes = SC.kernel_prefix_states(gla, cols)
+            if gla.kernel_num_groups is not None:
+                # group-by kernel dispatch: round emission discipline, no
+                # per-chunk prefixes (DESIGN.md §3).  Snapshots off: one
+                # whole-shard dispatch, nothing else is consumed.
+                final_view, round_states = SC.kernel_rounds_states(
+                    gla, cols, R if snapshots else 1)
+                prefixes = None
+            else:
+                final_view, prefixes = SC.kernel_prefix_states(gla, cols)
         elif emit == "chunk":
             final_view, prefixes = SC.scan_prefix(gla, cols, lanes)
         elif emit == "round":
@@ -97,7 +105,7 @@ def _run_sharded_jit(gla: GLA, shards: dict, sched: jnp.ndarray,
         else:
             raise ValueError(emit)
 
-        if emit in ("chunk", "kernel") or mode == "sync":
+        if prefixes is not None:
             if mode == "sync":
                 gmin = lax.pmin(sched_p[1:], axis_name)
                 idx = gmin
@@ -146,6 +154,29 @@ def run_sharded(gla: GLA, shards: dict, sched: jnp.ndarray, alive: jnp.ndarray,
     from repro.core.engine import QueryResult
 
     assert gla.merge_is_additive, "sharded path requires additive merges"
+    if emit == "kernel" and mode == "sync":
+        # No silent downgrade: with sync_cost_model the per-chunk
+        # coordination scan replaces the scan entirely (the kernel dispatch
+        # would never run), and the group-by kernel contract has no prefix
+        # states for the pmin truncation even without it.
+        if sync_cost_model:
+            raise ValueError(
+                "emit='kernel' is incompatible with mode='sync' + "
+                "sync_cost_model=True: the per-chunk coordination scan "
+                "bypasses the kernel dispatch — use emit='chunk', or pass "
+                "sync_cost_model=False (scalar-SumState GLAs only)")
+        if gla.kernel_num_groups is not None:
+            raise ValueError(
+                "group-by emit='kernel' emits round states only; mode='sync' "
+                "needs prefix states for the min-progress truncation — use "
+                "emit='chunk' or mode='async'")
+    if emit == "round" and mode == "sync" and not sync_cost_model:
+        # Same silent-downgrade class: scan_rounds has no prefix states, so
+        # the pmin truncation would be skipped and async round states would
+        # come back labeled as synchronized estimates.
+        raise ValueError(
+            "emit='round' emits round states only; mode='sync' needs prefix "
+            "states for the min-progress truncation — use emit='chunk'")
     P = shards["_mask"].shape[0]
     R = sched.shape[1] - 1
     # alive arrives [P] or [R, P]; ship it as [P, R] so the partition axis

@@ -11,10 +11,13 @@ resident in VMEM across grid steps; each grid step streams one [block, ...]
 tile of items.  G is the *padded* group-table size (hash-bucketed for large
 domains, e.g. the paper's 1M-group Q1 — see repro/core/gla.py).
 
-Tiling: items are presented as [R, 128] lane tiles like chunk_agg; the
-one-hot is built per 128-item row with broadcasted_iota over G.  G and A are
-padded to multiples of 128/8 by the ops.py wrapper so every matmul dim is
-MXU-aligned.
+Tiling: items stream as [block_rows, A] row blocks (unlike chunk_agg's
+[R, 128] lane tiles — here the lane dim carries the A aggregates, and the
+one-hot is built per block with a broadcasted_iota over G).  The ops.py
+wrapper pads G to a multiple of 128 (the one-hot's lane dim) and A to a
+multiple of 8 (the [G, A] output sublane pairing), so both matmul operand
+shapes are MXU-aligned; ``matched`` keeps its [G, 1] layout (a single
+lane-dim column — tolerated, and sliced off by the wrapper anyway).
 """
 from __future__ import annotations
 
@@ -51,7 +54,8 @@ def group_agg_kernel(vals, weight, gids, *, num_groups: int,
                      block_rows: int = 512, interpret: bool = False):
     """vals [N, A], weight [N, 1], gids [N, 1] -> (sums, sumsqs [G, A], matched [G, 1]).
 
-    N % block_rows == 0; A should be lane-padded by the wrapper.
+    N % block_rows == 0; the ops.py wrapper pads num_groups to a multiple
+    of 128 and A to a multiple of 8 before calling (MXU alignment).
     """
     N, A = vals.shape
     assert N % block_rows == 0

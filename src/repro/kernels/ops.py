@@ -101,13 +101,20 @@ def group_agg(vals, weight, gids, *, num_groups: int, block_rows: int = 512,
 
     vals [N] or [N, A]; weight [N]; gids [N] int32.
     returns (sums [G, A], sumsqs [G, A], matched [G]) f32 — unpadded G/A.
+
+    MXU alignment (group_agg.py contract): G is padded to a multiple of 128
+    (the one-hot ``[B, G]`` lane dim) and A to a multiple of 8 even when
+    A == 1 (the ``[G, A]`` output sublane pairing); results are sliced back
+    to the unpadded shapes.  Padded group columns receive no items (gids are
+    in-range) and padded agg columns are zero-filled, so the padding is
+    value-inert.
     """
     interpret = _interpret_default() if interpret is None else interpret
     if vals.ndim == 1:
         vals = vals[:, None]
     N, A = vals.shape
-    A_pad = -(-A // 8) * 8 if A > 1 else 1
-    G_pad = max(-(-num_groups // 8) * 8, 8)
+    A_pad = -(-A // 8) * 8
+    G_pad = -(-num_groups // 128) * 128
     v = jnp.zeros((N, A_pad), jnp.float32).at[:, :A].set(vals.astype(jnp.float32))
     v = _pad_rows(v, block_rows)
     w = _pad_rows(weight.astype(jnp.float32)[:, None], block_rows)

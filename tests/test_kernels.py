@@ -51,19 +51,51 @@ def test_q6_fused_kernel(n):
                                atol=1e-4)
 
 
-@pytest.mark.parametrize("g", [4, 25, 100])
+@pytest.mark.parametrize("g", [4, 25, 100, 1000])
 @pytest.mark.parametrize("a", [1, 4])
 @pytest.mark.parametrize("n", [512, 2100])
 def test_group_agg_sweep(g, a, n):
+    """Kernel vs oracle at unpadded G/A (the wrapper pads G→128k, A→8k)."""
     rng = np.random.default_rng(g * a + n)
     vals = jnp.asarray(rng.normal(size=(n, a)), jnp.float32)
     w = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
     gids = jnp.asarray(rng.integers(0, g, n), jnp.int32)
     s, sq, mt = ops.group_agg(vals, w, gids, num_groups=g, interpret=True)
+    assert s.shape == (g, a) and sq.shape == (g, a) and mt.shape == (g,)
     es, esq, emt = ref.group_agg_ref(vals, w, gids, g)
     np.testing.assert_allclose(np.asarray(s), np.asarray(es), rtol=1e-4,
                                atol=1e-4)
     np.testing.assert_allclose(np.asarray(sq), np.asarray(esq), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(mt), np.asarray(emt), rtol=1e-5)
+
+
+def test_group_agg_mxu_padding():
+    """ops.group_agg MXU alignment: the kernel sees G padded to a multiple
+    of 128 and A padded to a multiple of 8 even when A == 1 (the group_agg.py
+    one-hot-matmul contract), and padding never leaks into the results."""
+    from unittest import mock
+
+    from repro.kernels import group_agg as _gk
+
+    rng = np.random.default_rng(3)
+    n, g = 640, 100
+    vals = jnp.asarray(rng.normal(size=n), jnp.float32)  # A == 1
+    w = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
+    gids = jnp.asarray(rng.integers(0, g, n), jnp.int32)
+    seen = {}
+    orig = _gk.group_agg_kernel
+
+    def spy(v, wt, gd, *, num_groups, **kw):
+        seen["G"], seen["A"] = num_groups, v.shape[1]
+        return orig(v, wt, gd, num_groups=num_groups, **kw)
+
+    with mock.patch.object(_gk, "group_agg_kernel", side_effect=spy):
+        s, _, mt = ops.group_agg(vals, w, gids, num_groups=g, interpret=True)
+    assert seen["G"] % 128 == 0 and seen["G"] >= g
+    assert seen["A"] % 8 == 0
+    es, _, emt = ref.group_agg_ref(vals[:, None], w, gids, g)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(es), rtol=1e-4,
                                atol=1e-4)
     np.testing.assert_allclose(np.asarray(mt), np.asarray(emt), rtol=1e-5)
 
