@@ -1,0 +1,92 @@
+"""Validate every benchmarks/out/BENCH_*.json against the schema in
+benchmarks/README.md.
+
+    python benchmarks/check_schema.py [out_dir]
+
+Exit status 0 when every file conforms, 1 otherwise (CI gates on it after
+``python -m benchmarks.run --smoke``).  The schema is deliberately small:
+
+    { "bench": "<name>",            # matches the BENCH_<name>.json filename
+      "rows": [ {"name": ...,       # stable row id, non-empty str, unique
+                 "us_per_call": ...,  # optional: finite number (timing rows)
+                 "derived": {...}},   # optional: dict of derived quantities
+                ... ] }
+
+Row keys beyond those are benchmark-specific and pass through unchecked.
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+from pathlib import Path
+
+
+def check_payload(payload, expected_bench: str) -> list:
+    """Return a list of violation strings (empty == conforming)."""
+    errs = []
+    if not isinstance(payload, dict):
+        return [f"top level must be an object, got {type(payload).__name__}"]
+    bench = payload.get("bench")
+    if not isinstance(bench, str) or not bench:
+        errs.append("'bench' must be a non-empty string")
+    elif bench != expected_bench:
+        errs.append(f"'bench' is {bench!r} but the filename says "
+                    f"{expected_bench!r}")
+    rows = payload.get("rows")
+    if not isinstance(rows, list) or not rows:
+        errs.append("'rows' must be a non-empty list")
+        return errs
+    seen = set()
+    for i, row in enumerate(rows):
+        where = f"rows[{i}]"
+        if not isinstance(row, dict):
+            errs.append(f"{where}: must be an object")
+            continue
+        name = row.get("name")
+        if not isinstance(name, str) or not name:
+            errs.append(f"{where}: 'name' must be a non-empty string")
+        elif name in seen:
+            errs.append(f"{where}: duplicate row name {name!r}")
+        else:
+            seen.add(name)
+        if "us_per_call" in row:
+            us = row["us_per_call"]
+            if (not isinstance(us, (int, float)) or isinstance(us, bool)
+                    or not math.isfinite(us)):
+                errs.append(f"{where}: 'us_per_call' must be a finite "
+                            f"number, got {us!r}")
+        if "derived" in row and not isinstance(row["derived"], dict):
+            errs.append(f"{where}: 'derived' must be an object")
+    return errs
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    out_dir = Path(argv[0]) if argv else Path(__file__).parent / "out"
+    files = sorted(out_dir.glob("BENCH_*.json"))
+    if not files:
+        print(f"FAIL: no BENCH_*.json found under {out_dir}")
+        return 1
+    failed = False
+    for path in files:
+        expected = path.stem[len("BENCH_"):]
+        try:
+            payload = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"FAIL {path.name}: unreadable JSON ({e})")
+            failed = True
+            continue
+        errs = check_payload(payload, expected)
+        if errs:
+            failed = True
+            print(f"FAIL {path.name}:")
+            for e in errs:
+                print(f"  - {e}")
+        else:
+            print(f"OK   {path.name}: {len(payload['rows'])} rows")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

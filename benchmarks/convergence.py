@@ -27,37 +27,38 @@ ROUNDS = 10
 CHUNK = 1024
 
 
-def _shards(parts, seed=7):
-    cols = tpch.generate_lineitem(ROWS, seed=seed)
+def _shards(parts, rows=ROWS, seed=7):
+    cols = tpch.generate_lineitem(rows, seed=seed)
     parts_ = randomize.randomize_global(
         {k: jnp.asarray(v) for k, v in cols.items()}, jax.random.key(seed),
         parts)
     # pad the chunk count to a multiple of ROUNDS so every configuration
     # yields the same number of snapshot rounds
-    n_chunks = -(-ROWS // parts // CHUNK)
+    n_chunks = -(-rows // parts // CHUNK)
     return randomize.pack_partitions(
         parts_, chunk_len=CHUNK, min_chunks=-(-n_chunks // ROUNDS) * ROUNDS)
 
 
-def _tasks():
+def _tasks(rows=ROWS):
     supp, valid = tpch.supplier_nation_table()
+    d = float(rows)
     return {
         "agg_low": dict(maker=lambda est: gla.make_sum_gla(
             tpch.q6_func, tpch.q6_cond(tpch.Q6_LOW_WINDOW),
-            d_total=float(ROWS), estimator=est)),
+            d_total=d, estimator=est)),
         "agg_high": dict(maker=lambda est: gla.make_sum_gla(
             tpch.q6_func, tpch.q6_cond(tpch.Q6_HIGH_WINDOW),
-            d_total=float(ROWS), estimator=est)),
+            d_total=d, estimator=est)),
         "groupby_small": dict(maker=lambda est: gla.make_groupby_gla(
             tpch.q1_func, tpch.q1_cond, tpch.q1_group_small, num_groups=4,
-            d_total=float(ROWS), estimator=est, num_aggs=4), group=2),
+            d_total=d, estimator=est, num_aggs=4), group=2),
         "groupby_large": dict(maker=lambda est: gla.make_groupby_gla(
             tpch.q1_func, tpch.q1_cond, tpch.q1_group_large, num_groups=1000,
-            d_total=float(ROWS), estimator=est, num_aggs=4), group=123),
+            d_total=d, estimator=est, num_aggs=4), group=123),
         "join_groupby": dict(maker=lambda est: gla.make_join_groupby_gla(
             tpch.q1_func, tpch.q6_cond(tpch.Q6_LOW_WINDOW),
             lambda c: c["suppkey"], supp, valid, num_groups=tpch.NUM_NATIONS,
-            d_total=float(ROWS), estimator=est, num_aggs=4), group=7),
+            d_total=d, estimator=est, num_aggs=4), group=7),
     }
 
 
@@ -73,15 +74,15 @@ def rel_width(est, task_info):
     return (hi - lo) / np.maximum(np.abs(mid), 1e-12)
 
 
-def run(tasks=None, out=sys.stdout):
-    names = tasks or list(_tasks().keys())
-    infos = _tasks()
-    rows = []
+def run(tasks=None, out=sys.stdout, rows=ROWS):
+    infos = _tasks(rows)
+    names = tasks or list(infos.keys())
+    bench_rows = []
     print("task,estimator,partitions,round,frac_scanned,rel_width", file=out)
     for task in names:
         info = infos[task]
         for parts in (1, 2, 4, 8):
-            shards = _shards(parts)
+            shards = _shards(parts, rows)
             C = shards["_mask"].shape[1]
             rounds = ROUNDS
             while C % rounds:
@@ -93,10 +94,10 @@ def run(tasks=None, out=sys.stdout):
                 scanned = np.asarray(res.snapshots.scanned if hasattr(
                     res.snapshots, "scanned") else res.snapshots.base.scanned)
                 for r in range(rounds):
-                    frac = float(scanned[r]) / ROWS
+                    frac = float(scanned[r]) / rows
                     print(f"{task},{est_kind},{parts},{r},"
                           f"{frac:.4f},{w[r]:.6f}", file=out)
-                    rows.append({
+                    bench_rows.append({
                         "name": f"convergence_{task}_{est_kind}_p{parts}_r{r}",
                         "task": task, "estimator": est_kind,
                         "partitions": parts, "round": r,
@@ -106,7 +107,7 @@ def run(tasks=None, out=sys.stdout):
         from benchmarks import bench_io
     except ImportError:  # direct script invocation: benchmarks/ is sys.path[0]
         import bench_io
-    path = bench_io.emit("convergence", rows)
+    path = bench_io.emit("convergence", bench_rows)
     print(f"# wrote {path}", file=out)
 
 

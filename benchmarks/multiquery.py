@@ -1,0 +1,211 @@
+"""Multi-query shared scan: one pass serving N queries vs N solo passes.
+
+PF-OLA's framing (§3–§4) is a *workload* of concurrent estimations riding
+one execution.  This benchmark runs N ∈ {1, 2, 4, 8} mixed TPC-H queries
+(Q6 windows, Q1 small/large-domain group-by, join group-by) two ways:
+
+  * ``shared``  — ``engine.run_queries``: all N stacked into a GLABundle,
+    ONE scan of the shards feeds every query (emit="round").
+  * ``n_pass``  — N solo ``engine.run_query`` calls, each paying its own
+    full pass (today's baseline for a second concurrent query).
+
+Reported per N: warm wall time (interleaved min-of-repeats) for both, the
+speedup, and the HLO scan-loop structure from
+``repro/analysis/hlo_cost.py::count_ops``: the shared program must contain
+exactly as many ``while`` ops as the single-query program — the round loop
+and the chunk loop, i.e. ONE chunk pass regardless of N — while the n-pass
+baseline grows linearly.  ``single_chunk_pass_hlo_verified`` records that
+assertion (the acceptance gate for N=4).
+
+A second section batches a kernel-capable bundle through
+``emit="kernel"``: the fused program issues ONE ``ops.group_agg`` Pallas
+dispatch per (partition, round-slice) for the whole bundle, vs one per
+member solo (``kernel_dispatches`` in the derived fields).
+
+Output: CSV (name,us_per_call,derived) to stdout + benchmarks/out/
+BENCH_multiquery.json (schema in benchmarks/README.md).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.analysis import hlo_cost as HC
+from repro.core import engine, gla, randomize
+from repro.data import tpch
+
+ROWS = 150_000
+SMOKE_ROWS = 24_000
+PARTS = 4
+CHUNK = 512
+ROUNDS = 4
+NS = (1, 2, 4, 8)
+
+
+def _shards(cols, rows):
+    import jax.numpy as jnp
+
+    parts = randomize.randomize_global(
+        {k: jnp.asarray(v) for k, v in cols.items()}, jax.random.key(11),
+        PARTS)
+    n_chunks = -(-rows // PARTS // CHUNK)
+    return randomize.pack_partitions(
+        parts, chunk_len=CHUNK, min_chunks=-(-n_chunks // ROUNDS) * ROUNDS)
+
+
+def _query_pool(rows):
+    """Eight distinct queries cycling the paper's families."""
+    supp, valid = tpch.supplier_nation_table(tpch.Q1_LARGE_SUPPLIERS)
+    d = float(rows)
+    return [
+        gla.make_sum_gla(tpch.q6_func, tpch.q6_cond(tpch.Q6_LOW_WINDOW),
+                         d_total=d),
+        gla.make_groupby_gla(tpch.q1_func, tpch.q1_cond, tpch.q1_group_small,
+                             num_groups=4, d_total=d, num_aggs=4),
+        gla.make_sum_gla(tpch.q6_func, tpch.q6_cond(tpch.Q6_HIGH_WINDOW),
+                         d_total=d),
+        gla.make_groupby_gla(tpch.q1_func, tpch.q1_cond, tpch.q1_group_large,
+                             num_groups=tpch.Q1_LARGE_SUPPLIERS,
+                             bucket_bits=tpch.Q1_LARGE_BUCKET_BITS,
+                             d_total=d, num_aggs=4),
+        gla.make_join_groupby_gla(
+            tpch.q1_func, tpch.q6_cond(tpch.Q6_LOW_WINDOW),
+            lambda c: c["suppkey"], supp, valid,
+            num_groups=tpch.NUM_NATIONS, d_total=d, num_aggs=4),
+        gla.make_sum_gla(tpch.q6_func, tpch.q6_cond((900, 1265)), d_total=d),
+        gla.make_sum_gla(tpch.q6_func, tpch.q6_cond(tpch.Q6_LOW_WINDOW),
+                         d_total=d, estimator="multiple"),
+        gla.make_sum_gla(tpch.q6_func, tpch.q6_cond((1600, 1965)), d_total=d),
+    ]
+
+
+def _finals(results):
+    """Pull every query's final out so nothing is DCE'd."""
+    return [r.final for r in (results if isinstance(results, list)
+                              else [results])]
+
+
+def _time_interleaved(fns, shards, repeats):
+    """fns: dict name -> compiled callable; min-of-repeats per name."""
+    ts = {k: [] for k in fns}
+    for _ in range(repeats):
+        for k, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(shards))
+            ts[k].append(time.perf_counter() - t0)
+    return {k: min(v) for k, v in ts.items()}
+
+
+def run(out=sys.stdout, rows=ROWS, repeats=5):
+    bench_rows = []
+
+    def report(name, us, derived):
+        bench_rows.append({"name": name, "us_per_call": us,
+                           "derived": derived})
+        dstr = ";".join(f"{k}={v}" for k, v in derived.items())
+        print(f"{name},{us:.0f},{dstr}", file=out)
+
+    cols = tpch.generate_lineitem(
+        rows, seed=31, num_suppliers=tpch.Q1_LARGE_SUPPLIERS)
+    shards = _shards(cols, rows)
+    P, C, L = shards["_mask"].shape
+    pool = _query_pool(rows)
+    scen = {"rows": rows, "partitions": P, "chunks": C, "chunk_len": L,
+            "rounds": ROUNDS}
+
+    print("name,us_per_call,derived", file=out)
+
+    # -- shared scan vs N passes over the round-emission scan path --------
+    # The chunk-stream loop is the while op with trip count C/R (the
+    # round loop wraps it with trip R); per-query fix-up loops (scatter
+    # expansions, estimate assembly) have item-scale trips and are told
+    # apart by trip count.  ONE chunk pass == exactly one trip-C/R loop.
+    per = C // ROUNDS
+    assert per != ROUNDS, (
+        "pick sizes where chunks-per-round != rounds, or the round loop "
+        "is indistinguishable from the chunk loop by trip count")
+
+    def chunk_loops(compiled):
+        return sum(t == per for t in HC.while_trip_counts(compiled.as_text()))
+
+    solo_compiled = [
+        jax.jit(lambda sh, g=g: _finals(engine.run_query(
+            g, sh, rounds=ROUNDS, emit="round"))).lower(shards).compile()
+        for g in pool
+    ]
+    for n in NS:
+        glas = pool[:n]
+        shared = jax.jit(lambda sh, glas=glas: _finals(engine.run_queries(
+            glas, sh, rounds=ROUNDS, emit="round"))).lower(shards).compile()
+
+        def n_pass(sh, n=n):
+            outs = []
+            for c in solo_compiled[:n]:
+                outs.append(c(sh))
+            return outs
+
+        best = _time_interleaved(
+            {"shared": shared, "n_pass": n_pass}, shards, repeats)
+
+        # THE multi-query invariant: the shared program loops over the
+        # chunk stream once — N queries, one data pass.
+        shared_passes = chunk_loops(shared)
+        n_pass_passes = sum(chunk_loops(c) for c in solo_compiled[:n])
+        assert shared_passes == 1, (n, shared_passes)
+        assert n_pass_passes == n, (n, n_pass_passes)
+
+        # bitwise check: the shared pass returns exactly the solo results
+        sh_finals = shared(shards)
+        for i, c in enumerate(solo_compiled[:n]):
+            for a, b in zip(jax.tree.leaves(sh_finals[i]),
+                            jax.tree.leaves(c(shards))):
+                assert np.asarray(a).tobytes() == np.asarray(b).tobytes(), \
+                    f"query {i} diverged"
+
+        report(f"multiquery_shared_scan_N{n}", best["shared"] * 1e6,
+               {**scen, "queries": n,
+                "n_pass_us": round(best["n_pass"] * 1e6),
+                "one_pass_vs_n_pass_wall":
+                    f"{best['n_pass'] / best['shared']:.2f}x",
+                "hlo_chunk_scan_loops_shared": int(shared_passes),
+                "hlo_chunk_scan_loops_n_pass": int(n_pass_passes),
+                "single_chunk_pass_hlo_verified": shared_passes == 1,
+                "finals_bitwise_identical_to_solo": True})
+
+    # -- batched kernel dispatch: one group_agg launch serves the bundle --
+    kernel_pool = [pool[3], pool[0], pool[4]]  # Q1-large, Q6, join
+    fused = jax.jit(lambda sh: _finals(engine.run_queries(
+        kernel_pool, sh, rounds=ROUNDS, emit="kernel"))
+    ).lower(shards).compile()
+    fused_whiles = HC.count_ops(fused.as_text(), "while", trip_scaled=False)
+    interpret_lowering = jax.default_backend() == "cpu"
+    if interpret_lowering:
+        # every while op left in the fused kernel program is a Pallas grid
+        # loop: one dispatch per (partition, round-slice) for ALL members
+        assert fused_whiles == P * ROUNDS, fused_whiles
+    jax.block_until_ready(fused(shards))
+    t0 = time.perf_counter()
+    jax.block_until_ready(fused(shards))
+    dt = time.perf_counter() - t0
+    report("multiquery_kernel_bundle", dt * 1e6,
+           {**scen, "queries": len(kernel_pool),
+            "kernel_dispatches": P * ROUNDS,
+            "kernel_dispatches_solo_total": len(kernel_pool) * P * ROUNDS,
+            "hlo_while_loops": int(fused_whiles),
+            "dispatch_counts_hlo_verified": interpret_lowering,
+            "note": "interpret mode on CPU; dispatch structure is the "
+                    "platform-independent mechanism (DESIGN.md §6)"})
+
+    try:
+        from benchmarks import bench_io
+    except ImportError:  # direct script invocation: benchmarks/ is sys.path[0]
+        import bench_io
+    path = bench_io.emit("multiquery", bench_rows)
+    print(f"# wrote {path}", file=out)
+
+
+if __name__ == "__main__":
+    run(rows=int(sys.argv[1]) if len(sys.argv) > 1 else ROWS)

@@ -46,12 +46,14 @@ SRC = Path(__file__).resolve().parents[1] / "src"
 SH_ROWS, SH_PARTS, SH_CHUNK, SH_ROUNDS = 200_000, 8, 128, 4
 
 
-def _shards():
-    cols = tpch.generate_lineitem(ROWS, seed=13)
+def _shards(rows=ROWS):
+    cols = tpch.generate_lineitem(rows, seed=13)
     parts = randomize.randomize_global(
         {k: jnp.asarray(v) for k, v in cols.items()}, jax.random.key(1),
         PARTS)
-    return randomize.pack_partitions(parts, chunk_len=CHUNK)
+    # small (smoke) row counts need shorter chunks to keep >= 2 rounds
+    chunk = CHUNK if rows >= PARTS * CHUNK * 2 else 256
+    return randomize.pack_partitions(parts, chunk_len=chunk)
 
 
 def _time(fn, repeats=7):
@@ -64,15 +66,16 @@ def _time(fn, repeats=7):
     return float(np.median(ts))
 
 
-def run(out=sys.stdout):
-    rows = []
+def run(out=sys.stdout, rows=ROWS, sh_repeats=25):
+    bench_rows = []
 
     def report(name, us, derived):
-        rows.append({"name": name, "us_per_call": us, "derived": derived})
+        bench_rows.append({"name": name, "us_per_call": us,
+                           "derived": derived})
         dstr = ";".join(f"{k}={v}" for k, v in derived.items())
         print(f"{name},{us:.0f},{dstr}", file=out)
 
-    shards = _shards()
+    shards = _shards(rows)
     C = shards["_mask"].shape[1]
     rounds = 8
     while C % rounds:
@@ -85,7 +88,7 @@ def run(out=sys.stdout):
     times = {}
     for name, v in variants.items():
         g = gla.make_sum_gla(tpch.q6_func, tpch.q6_cond(tpch.Q6_LOW_WINDOW),
-                             d_total=float(ROWS), estimator=v["estimator"])
+                             d_total=float(rows), estimator=v["estimator"])
 
         def call(g=g, v=v):
             r = engine.run_query(g, shards, rounds=rounds, emit="round",
@@ -119,9 +122,9 @@ def run(out=sys.stdout):
         return a["flops"], a["bytes"]
 
     g_off = gla.make_sum_gla(tpch.q6_func, tpch.q6_cond(tpch.Q6_LOW_WINDOW),
-                             d_total=float(ROWS), estimator="none")
+                             d_total=float(rows), estimator="none")
     g_on = gla.make_sum_gla(tpch.q6_func, tpch.q6_cond(tpch.Q6_LOW_WINDOW),
-                            d_total=float(ROWS), estimator="single")
+                            d_total=float(rows), estimator="single")
     f0, b0 = _terms(g_off, False)
     f1, b1 = _terms(g_on, True)
     report("overhead_roofline_flops", f1,
@@ -167,13 +170,14 @@ def run(out=sys.stdout):
         for kw in variants.values():
             call(kw)  # compile + warm
         ts = {k: [] for k in variants}
-        for _ in range(25):
+        for _ in range(%d):
             for k, kw in variants.items():
                 t0 = time.perf_counter(); call(kw)
                 ts[k].append(time.perf_counter() - t0)
         best = {k: min(v) for k, v in ts.items()}
         print(f"SHARDED {best['noest']:.6f} {best['async']:.6f} {best['sync']:.6f}")
-    """ % (SH_PARTS, str(SRC), SH_ROWS, SH_PARTS, SH_CHUNK, SH_ROUNDS))
+    """ % (SH_PARTS, str(SRC), SH_ROWS, SH_PARTS, SH_CHUNK, SH_ROUNDS,
+           sh_repeats))
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, timeout=900)
     parsed = False
@@ -211,7 +215,7 @@ def run(out=sys.stdout):
         from benchmarks import bench_io
     except ImportError:  # direct script invocation: benchmarks/ is sys.path[0]
         import bench_io
-    path = bench_io.emit("overhead", rows)
+    path = bench_io.emit("overhead", bench_rows)
     print(f"# wrote {path}", file=out)
 
 

@@ -39,7 +39,7 @@ def n_active_params(cfg) -> float:
     excluded; MoE expert leaves scaled from E to top-k)."""
     import jax.numpy as jnp
     from repro.models import transformer as T
-    from repro.models.spec import ParamSpec, is_spec
+    from repro.models.spec import is_spec
     import jax
 
     specs = T.param_specs(cfg, dtype=jnp.bfloat16)
@@ -129,6 +129,11 @@ def main():
               f"{r['collective_s']:10.4f} {r['bottleneck']:>10s} "
               f"{r['model_over_hlo']:7.3f} {100*r['roofline_fraction']:6.1f}% "
               f"{r['peak_gb']:7.1f}")
+    if not rows:
+        # no dry-run artifacts: nothing to report — do not emit an empty
+        # BENCH file (benchmarks/check_schema.py requires non-empty rows)
+        print("# no dry-run artifacts; BENCH_roofline.json not written")
+        return
     try:
         from benchmarks import bench_io
     except ImportError:  # direct script invocation: benchmarks/ is sys.path[0]

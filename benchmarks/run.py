@@ -1,19 +1,26 @@
 """Benchmark driver — one section per paper table/figure.
 
-    python -m benchmarks.run            # everything (CSV to stdout)
-    python -m benchmarks.run quick      # skip the heavier sweeps
+    python -m benchmarks.run              # everything (CSV to stdout)
+    python -m benchmarks.run quick        # skip the heavier sweeps
+    python -m benchmarks.run --smoke      # CI-sized: small rows, few repeats
 
 Sections:
   * kernels      — jitted hot-loop throughput (chunk/group aggregation)
   * overhead     — paper Table 2 (estimation overhead incl. synchronized)
   * groupby      — paper §5.3 large-domain Q1: segment_sum scan vs the
                    per-round-slice Pallas group_agg dispatch
+  * multiquery   — shared scan: N concurrent queries over ONE pass vs N
+                   solo passes (DESIGN.md §6)
   * convergence  — paper Figs. 1–3 (relative CI width curves)
   * roofline     — §Roofline table from the dry-run artifacts (if present)
+
+Every section prints CSV to stdout and writes a machine-readable
+``benchmarks/out/BENCH_<name>.json`` (``benchmarks/check_schema.py``
+validates them; CI runs ``--smoke`` + the validator on every push).
 """
 from __future__ import annotations
 
-import sys
+import argparse
 import time
 
 import jax
@@ -31,12 +38,11 @@ def _bench(fn, repeats=5):
     return float(np.median(ts)) * 1e6
 
 
-def kernels_section():
+def kernels_section(n=1 << 20):
     """Throughput of the aggregation hot loops (pure-jnp reference path on
     CPU; the Pallas kernels target TPU and are validated in tests)."""
     from repro.kernels import ref
     print("name,us_per_call,derived")
-    n = 1 << 20
     rng = np.random.default_rng(0)
     vals = jnp.asarray(rng.normal(size=n), jnp.float32)
     w = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
@@ -51,23 +57,43 @@ def kernels_section():
     print(f"kernel_group_agg_1Mx4_1000g,{us:.0f},GBps={n * 20 / us / 1e3:.2f}")
 
 
-def main():
-    quick = len(sys.argv) > 1 and sys.argv[1] == "quick"
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("mode", nargs="?", choices=["quick"],
+                    help="legacy positional: skip the heavier sweeps")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: small row counts, few repeats — "
+                         "exercises every section and emits every "
+                         "BENCH_*.json in minutes")
+    args = ap.parse_args(argv)
+    smoke = args.smoke
+    quick = smoke or args.mode == "quick"
+
     print("# === kernels ===")
-    kernels_section()
+    kernels_section(n=1 << 16 if smoke else 1 << 20)
 
     print("# === overhead (paper Table 2) ===")
     from benchmarks import overhead
-    overhead.run()
+    if smoke:
+        overhead.run(rows=200_000, sh_repeats=5)
+    else:
+        overhead.run()
 
     print("# === groupby (paper §5.3 large-domain Q1) ===")
     from benchmarks import groupby
     groupby.run(rows=50_000 if quick else groupby.ROWS)
 
+    print("# === multiquery (shared scan, DESIGN.md §6) ===")
+    from benchmarks import multiquery
+    if smoke:
+        multiquery.run(rows=multiquery.SMOKE_ROWS, repeats=2)
+    else:
+        multiquery.run()
+
     print("# === convergence (paper Figs 1-3) ===")
     from benchmarks import convergence
     tasks = ["agg_low", "agg_high"] if quick else None
-    convergence.run(tasks=tasks)
+    convergence.run(tasks=tasks, rows=100_000 if smoke else convergence.ROWS)
 
     print("# === roofline (dry-run artifacts) ===")
     try:

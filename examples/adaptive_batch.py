@@ -33,8 +33,8 @@ def main():
 
     @jax.jit
     def grad_fn(p, mb):
-        (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p, cfg, mb)
-        return l, g
+        (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p, cfg, mb)
+        return loss, g
 
     for step in range(8):
         toks = jax.random.randint(jax.random.key(step), (MICRO * MB, SEQ),

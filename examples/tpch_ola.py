@@ -98,6 +98,48 @@ def main():
         print(f"  async+stragglers final matches: "
               f"{np.allclose(np.asarray(res.final), np.asarray(engine.run_query(g, shards, rounds=rounds, emit='round').final), rtol=1e-5)}")
 
+    # Concurrent session (DESIGN.md §6): Q1 + Q6 + large-domain Q1 run as
+    # ONE shared scan — engine.run_queries stacks them into a GLABundle and
+    # every query's estimates come from the same single pass over the
+    # shards, bitwise-identical to running each alone.
+    print("\n=== concurrent session: Q1 + Q6 + Q1-large, one shared scan ===")
+    session = {
+        "Q1 group-by small": queries["Q1 group-by small"]("single"),
+        "Q6 agg (low sel)": queries["Q6 agg (low sel)"]("single"),
+        "Q1 group-by large": make_large("single"),
+    }
+    t0 = time.perf_counter()
+    multi = engine.run_queries(list(session.values()), shards, rounds=rounds,
+                               emit="round")
+    jax.block_until_ready([r.final for r in multi])
+    dt_shared = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    solos = [engine.run_query(g, shards, rounds=rounds, emit="round")
+             for g in session.values()]
+    jax.block_until_ready([r.final for r in solos])
+    dt_solo = time.perf_counter() - t0
+    identical = all(
+        np.asarray(m.final).tobytes() == np.asarray(s.final).tobytes()
+        and all(np.asarray(a).tobytes() == np.asarray(b).tobytes()
+                for a, b in zip((m.estimates.lower, m.estimates.upper),
+                                (s.estimates.lower, s.estimates.upper)))
+        for m, s in zip(multi, solos))
+    print(f"  shared scan {dt_shared:6.2f}s vs 3 solo passes {dt_solo:6.2f}s"
+          f"  (finals+bounds bitwise identical to solos: {identical})")
+    for name, res in zip(session, multi):
+        lo = np.asarray(res.estimates.lower, np.float64)
+        hi = np.asarray(res.estimates.upper, np.float64)
+        mid = np.asarray(res.estimates.estimate, np.float64)
+        while mid.ndim > 2:
+            lo, hi, mid = lo[..., 0], hi[..., 0], mid[..., 0]
+        if mid.ndim == 2:  # group-by: busiest group
+            gsel = int(np.argmax(np.abs(mid[-1])))
+            lo, hi, mid = lo[:, gsel], hi[:, gsel], mid[:, gsel]
+        w = (hi - lo) / np.maximum(np.abs(mid), 1e-12)
+        print(f"  {name:18s} rel.width by round: "
+              + " ".join(f"{x:.3f}" for x in w))
+    assert identical, "shared scan diverged from solo runs"
+
     # Large-domain Q1 through the group-by Pallas kernel (DESIGN.md §3):
     # one ops.group_agg dispatch per round-slice instead of one segment_sum
     # per chunk, finals interchangeable with the scan path.

@@ -30,10 +30,9 @@ tests/test_hlo_cost.py.
 """
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
@@ -424,6 +423,47 @@ def count_ops(hlo_text: str, opcode: str, *, trip_scaled: bool = True) -> float:
 
     walk(hc.entry, 1.0)
     return total
+
+
+def while_trip_counts(hlo_text: str) -> List[int]:
+    """Trip counts of every while op reachable from the entry (each counted
+    once, nested or not; unknown trips report as 1).
+
+    Lets callers identify *which* loops a program runs, not just how many:
+    benchmarks/multiquery.py uses it to verify the shared multi-query scan
+    keeps exactly ONE loop over the chunk axis regardless of how many
+    queries ride it (the per-query scatter/estimate fix-up loops have
+    item-scale trip counts and are told apart by trip).
+    """
+    hc = HloCost(hlo_text)
+    trips: List[int] = []
+    seen_stack: List[str] = []
+
+    def walk(name: str):
+        if name in seen_stack:  # defensive: HLO computations are acyclic
+            return
+        seen_stack.append(name)
+        for inst in hc.comps.get(name, []):
+            if inst.opcode == "while":
+                tm = _TRIP_RE.search(inst.rest)
+                trips.append(int(tm.group(1)) if tm else 1)
+                cb = _COND_BODY_RE.search(inst.rest)
+                if cb:
+                    walk(cb.group(1))
+                    walk(cb.group(2))
+            elif inst.opcode in ("fusion", "call", "custom-call"):
+                cm = _CALLS_RE.search(inst.rest)
+                if cm:
+                    walk(cm.group(1))
+            elif inst.opcode == "conditional":
+                bm = _BRANCHES_RE.search(inst.rest)
+                if bm:
+                    for b in re.findall(r"%([^\s,]+)", bm.group(1)):
+                        walk(b)
+        seen_stack.pop()
+
+    walk(hc.entry)
+    return trips
 
 
 def analyze(hlo_text: str) -> dict:

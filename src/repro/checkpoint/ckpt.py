@@ -17,7 +17,6 @@ requires (the sample so far must stay a without-replacement prefix).
 """
 from __future__ import annotations
 
-import io
 import zlib
 from pathlib import Path
 from typing import Any

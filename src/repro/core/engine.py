@@ -138,16 +138,20 @@ def _run_vmapped(gla: GLA, shards: dict, sched: jnp.ndarray, alive: jnp.ndarray,
     d_total = jnp.sum(d_local)
     w_pr, w_final = SC.round_weights(alive, R)
 
-    if emit == "kernel" and gla.kernel_num_groups is not None:
-        # group-by kernel dispatch: dense [G, A] states follow the round
-        # emission discipline (DESIGN.md §3) — no per-chunk prefixes exist.
+    if emit == "kernel" and (gla.kernel_num_groups is not None
+                             or gla.members):
+        # group-by / bundled kernel dispatch: dense [G, A] states follow the
+        # round emission discipline (DESIGN.md §3, §6) — no per-chunk
+        # prefixes exist.  Bundles batch every member into one group_agg
+        # dispatch per round-slice.
         assert lanes == 1, "emit='kernel' runs single-lane"
         if mode == "sync":
             raise NotImplementedError("sync mode requires emit='chunk'")
         # snapshots off: no round states are consumed — one whole-shard
         # dispatch (same chunk-sequential association, R-fold fewer launches)
-        finals, round_states = SC.kernel_rounds_states_batched(
-            gla, shards, R if snapshots else 1)
+        kernel_fn = (SC.bundle_kernel_rounds_states_batched if gla.members
+                     else SC.kernel_rounds_states_batched)
+        finals, round_states = kernel_fn(gla, shards, R if snapshots else 1)
     elif emit in ("chunk", "kernel"):
         if emit == "chunk":
             finals, prefixes = jax.vmap(
@@ -257,10 +261,19 @@ def run_query(
         ``emit="kernel"`` path under sync).  Ignored by the vmapped path.
     """
     P, C, L = shards["_mask"].shape
-    if emit == "kernel" and gla.kernel_cols is None:
-        raise ValueError(f"GLA {gla.name!r} does not publish kernel_cols")
+    if emit == "kernel":
+        if gla.members:
+            missing = [m.name for m in gla.members if m.kernel_cols is None]
+            if missing:
+                raise ValueError(
+                    f"bundle members {missing} do not publish kernel_cols — "
+                    "emit='kernel' batches every member into one dispatch "
+                    "and cannot mix in scan-only members")
+        elif gla.kernel_cols is None:
+            raise ValueError(f"GLA {gla.name!r} does not publish kernel_cols")
     needs_uniform_rounds = emit == "round" or (
-        emit == "kernel" and gla.kernel_num_groups is not None)
+        emit == "kernel" and (gla.kernel_num_groups is not None
+                              or bool(gla.members)))
     if needs_uniform_rounds:
         if schedule is None:
             if C % rounds:
@@ -301,3 +314,61 @@ def run_query(
         mode=mode, emit=emit, lanes=lanes, snapshots=snapshots,
         confidence=confidence, sync_cost_model=sync_cost_model,
     )
+
+
+def run_queries(
+    glas,
+    shards: dict,
+    *,
+    rounds: int = 8,
+    schedule: Optional[np.ndarray] = None,
+    confidence: float = 0.95,
+    mode: str = "async",
+    emit: str = "round",
+    lanes: int = 1,
+    snapshots: bool = True,
+    alive: Optional[np.ndarray] = None,
+    mesh=None,
+    axis_name: str = "data",
+    sync_cost_model: bool = True,
+):
+    """Execute N concurrent OLA queries over a SINGLE pass of the shards.
+
+    The paper's central claim (§3–§4) is that any number of concurrent
+    estimation models ride alongside one execution with virtually no
+    overhead.  This is the multi-query hot path that delivers it: the
+    ``glas`` are stacked into a :func:`repro.core.gla.GLABundle` (one
+    tuple-of-states GLA), every scan path feeds all of them from the same
+    chunk stream, and the results are unbundled into one
+    :class:`QueryResult` per query.  Each query's finals, snapshot states
+    and per-round bounds are bitwise-identical to running it alone with
+    ``run_query`` (tests/test_multiquery.py) — a second query no longer
+    pays a second pass over the data.
+
+    Args are as for :func:`run_query`; they apply to the shared scan (one
+    schedule, one mode, one emission discipline for the whole bundle).
+    ``emit`` defaults to ``"round"`` because the bundle state is as large
+    as its largest member — per-chunk prefix emission (``"chunk"``) is only
+    sensible when every member is small.  ``emit="kernel"`` requires every
+    member to publish ``kernel_cols`` and batches all of them into one
+    ``ops.group_agg`` dispatch per round-slice (DESIGN.md §6).
+
+    Returns: list of :class:`QueryResult`, one per input GLA, in order.
+    """
+    from repro.core.gla import GLABundle  # local: avoid import cycle at load
+
+    glas = list(glas)
+    bundle = GLABundle(glas)
+    res = run_query(
+        bundle, shards, rounds=rounds, schedule=schedule,
+        confidence=confidence, mode=mode, emit=emit, lanes=lanes,
+        snapshots=snapshots, alive=alive, mesh=mesh, axis_name=axis_name,
+        sync_cost_model=sync_cost_model,
+    )
+    out = []
+    for i in range(len(glas)):
+        est = res.estimates[i] if res.estimates is not None else None
+        snap = res.snapshots[i] if res.snapshots is not None else None
+        out.append(QueryResult(res.final[i], snap, est,
+                               res.d_total, res.d_local))
+    return out

@@ -23,8 +23,8 @@ directly (one dispatch per round-slice); large raw-id domains fold through
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable, Optional
+from functools import lru_cache
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +36,88 @@ from repro.core.uda import GLA, Chunk, Estimate
 def _as_2d(vals: jnp.ndarray) -> jnp.ndarray:
     """[n] -> [n, 1]; [n, A] stays."""
     return vals[:, None] if vals.ndim == 1 else vals
+
+
+# ---------------------------------------------------------------------------
+# Multi-query bundles (paper §3: "any number of concurrent estimation
+# models" driven alongside one execution).  A bundle is itself a GLA whose
+# state is the tuple of member states, so every engine scan path runs N
+# queries over a single pass of the chunk stream.  Each member sees the
+# exact same chunks in the exact same order as it would alone, so finals
+# and snapshot states are bitwise-identical to solo runs
+# (tests/test_multiquery.py).
+# ---------------------------------------------------------------------------
+
+
+def GLABundle(glas: Sequence[GLA], *, name: Optional[str] = None) -> GLA:
+    """Stack heterogeneous GLAs into one fused GLA over a shared scan.
+
+    The fused state is ``tuple(member states)``; accumulate/merge/terminate
+    and the estimator extensions apply member-wise over the same chunk.
+    ``estimate`` returns a tuple with one :class:`Estimate` per member
+    (``None`` for members without an estimation model), preserving
+    per-query round-emission views.  ``merge_is_additive`` holds iff it
+    holds for every member — the engines' psum/tensordot merges then apply
+    leaf-wise across the whole tuple.
+
+    The bundle publishes no ``kernel_cols`` of its own; the engines'
+    ``emit="kernel"`` path instead batches every member's kernel projection
+    into one ``ops.group_agg`` dispatch per round-slice
+    (``repro.core.scan.bundle_kernel_rounds_states``) when all members
+    publish one.  Use :func:`repro.core.engine.run_queries` to execute a
+    bundle and get per-query results back.
+
+    Bundling the same member GLAs again returns the *same* bundle object
+    (memoized): the engines' jit caches key on the GLA statically, so a
+    repeated interactive workload must not pay an XLA recompile per
+    ``run_queries`` call just because the combinator rebuilt its closures.
+    """
+    members = tuple(glas)
+    if not members:
+        raise ValueError("GLABundle needs at least one member GLA")
+    if any(m.members for m in members):
+        raise ValueError("GLABundle members must not themselves be bundles")
+    return _bundle_cached(members, name)
+
+
+@lru_cache(maxsize=256)
+def _bundle_cached(members: tuple, name: Optional[str]) -> GLA:
+    def init():
+        return tuple(m.init() for m in members)
+
+    def accumulate(state, chunk):
+        return tuple(
+            m.accumulate(s, chunk) for m, s in zip(members, state))
+
+    def merge(a, b):
+        return tuple(m.merge(x, y) for m, x, y in zip(members, a, b))
+
+    def terminate(state):
+        return tuple(m.terminate(s) for m, s in zip(members, state))
+
+    def estimator_terminate(state, ctx=None):
+        return tuple(
+            m.estimator_terminate(s, ctx) for m, s in zip(members, state))
+
+    def estimator_merge(a, b):
+        return tuple(
+            m.estimator_merge(x, y) for m, x, y in zip(members, a, b))
+
+    def estimate(state, confidence, ctx=None):
+        return tuple(
+            m.estimate(s, confidence, ctx) if m.estimate is not None else None
+            for m, s in zip(members, state))
+
+    any_estimate = any(m.estimate is not None for m in members)
+    return GLA(
+        init=init, accumulate=accumulate, merge=merge, terminate=terminate,
+        estimator_terminate=estimator_terminate,
+        estimator_merge=estimator_merge,
+        estimate=estimate if any_estimate else None,
+        merge_is_additive=all(m.merge_is_additive for m in members),
+        members=members,
+        name=name or "bundle[" + "+".join(m.name for m in members) + "]",
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -127,9 +209,11 @@ def make_sum_gla(
         # Per-shard fused-kernel dispatch (engine emit="kernel"): the Pallas
         # kernel reproduces acc_sum's state from (func, cond) projections —
         # only for the plain f32 single-aggregate SumState layout.
-        kernel_cols = None
         if A == 1 and dtype == jnp.float32:
-            kernel_cols = lambda chunk: (func(chunk), cond(chunk))
+            def kernel_cols(chunk):
+                return func(chunk), cond(chunk)
+        else:
+            kernel_cols = None
 
         return GLA(
             init=zero_sum, accumulate=acc_sum, merge=merge, terminate=terminate,
@@ -259,11 +343,13 @@ def make_groupby_gla(
         # Group-by fused-kernel dispatch (engine emit="kernel"): ops.group_agg
         # reproduces acc's state from the (func, cond, group) projections —
         # one one-hot MXU dispatch per round-slice (scan.kernel_rounds_states).
-        kernel_cols = None
-        kernel_G = None
         if dtype == jnp.float32:
-            kernel_cols = lambda chunk: (func(chunk), cond(chunk), group(chunk))
+            def kernel_cols(chunk):
+                return func(chunk), cond(chunk), group(chunk)
             kernel_G = G
+        else:
+            kernel_cols = None
+            kernel_G = None
 
         return GLA(
             init=zero, accumulate=acc, merge=merge,

@@ -17,10 +17,8 @@ from __future__ import annotations
 
 from typing import Callable, Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import estimators as E
 from repro.core.gla import make_groupby_gla, make_sum_gla
 from repro.core.uda import GLA, Chunk
 
@@ -41,8 +39,6 @@ def make_loss_gla(
     by stacking two aggregates (func and the constant-1 function), exactly
     the paper's AVERAGE construction (§4.3).
     """
-    ones = lambda chunk: jnp.ones_like(loss_per_example(chunk))
-
     def func2(chunk):
         lpe = loss_per_example(chunk)
         return jnp.stack([lpe, jnp.ones_like(lpe)], axis=-1)
@@ -85,7 +81,9 @@ def make_groupwise_loss_gla(
         lpe = loss_per_example(chunk)
         return jnp.stack([lpe, jnp.ones_like(lpe)], axis=-1)
 
-    cond = lambda chunk: jnp.ones_like(chunk["_mask"])
+    def cond(chunk):
+        return jnp.ones_like(chunk["_mask"])
+
     return make_groupby_gla(func2, cond, group, num_groups=num_groups,
                             d_total=d_total, estimator=estimator,
                             num_aggs=2).with_(name="groupwise-loss-gla")

@@ -190,20 +190,37 @@ def kernel_prefix_states(gla: GLA, cols: dict):
     return final_view, prefixes
 
 
-def kernel_prefix_states_batched(gla: GLA, shards: dict):
-    """Vmapped-path wrapper: one kernel dispatch per partition, stacked.
+def _unroll_partitions(fn, shards: dict):
+    """Run a per-shard (final, views) function on every partition, stacked.
 
     P is small and static, so an unrolled loop keeps the Pallas calls out of
     scan/vmap transforms (interpret mode on CPU stays supported).
     """
     P = shards["_mask"].shape[0]
-    outs = [
-        kernel_prefix_states(gla, jax.tree.map(lambda x, p=p: x[p], shards))
-        for p in range(P)
-    ]
-    prefixes = jax.tree.map(lambda *xs: jnp.stack(xs), *[o[1] for o in outs])
+    outs = [fn(jax.tree.map(lambda x, p=p: x[p], shards)) for p in range(P)]
     finals = jax.tree.map(lambda *xs: jnp.stack(xs), *[o[0] for o in outs])
-    return finals, prefixes
+    views = jax.tree.map(lambda *xs: jnp.stack(xs), *[o[1] for o in outs])
+    return finals, views
+
+
+def _fold_running_sum(deltas):
+    """Fold per-round additive deltas into round-boundary states.
+
+    Sequential association order on purpose — it matches the scan paths'
+    chunk-by-chunk accumulation, which is what keeps kernel-path states
+    bitwise-identical to the scan states.  Returns (final, views stacked
+    [R, ...]).
+    """
+    acc, views = deltas[0], [deltas[0]]
+    for d in deltas[1:]:
+        acc = jax.tree.map(jnp.add, acc, d)
+        views.append(acc)
+    return acc, jax.tree.map(lambda *xs: jnp.stack(xs), *views)
+
+
+def kernel_prefix_states_batched(gla: GLA, shards: dict):
+    """Vmapped-path wrapper: one kernel dispatch per partition, stacked."""
+    return _unroll_partitions(lambda c: kernel_prefix_states(gla, c), shards)
 
 
 def kernel_rounds_states(gla: GLA, cols: dict, rounds: int):
@@ -247,27 +264,116 @@ def kernel_rounds_states(gla: GLA, cols: dict, rounds: int):
             scanned=jnp.sum(sl["_mask"].astype(jnp.float32)),
             matched=matched,
         ))
-
-    acc, views = deltas[0], [deltas[0]]
-    for d in deltas[1:]:
-        acc = jax.tree.map(jnp.add, acc, d)
-        views.append(acc)
-    views = jax.tree.map(lambda *xs: jnp.stack(xs), *views)  # [R, ...]
-    return acc, views
+    return _fold_running_sum(deltas)
 
 
 def kernel_rounds_states_batched(gla: GLA, shards: dict, rounds: int):
     """Vmapped-path wrapper for :func:`kernel_rounds_states`: unrolled over
-    partitions (same rationale as :func:`kernel_prefix_states_batched`)."""
-    P = shards["_mask"].shape[0]
-    outs = [
-        kernel_rounds_states(
-            gla, jax.tree.map(lambda x, p=p: x[p], shards), rounds)
-        for p in range(P)
-    ]
-    finals = jax.tree.map(lambda *xs: jnp.stack(xs), *[o[0] for o in outs])
-    views = jax.tree.map(lambda *xs: jnp.stack(xs), *[o[1] for o in outs])
-    return finals, views
+    partitions (same rationale as :func:`_unroll_partitions`)."""
+    return _unroll_partitions(
+        lambda c: kernel_rounds_states(gla, c, rounds), shards)
+
+
+# ---------------------------------------------------------------------------
+# multi-query bundles: batched kernel dispatch (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+def _bundle_member_projection(member: GLA, sl: dict):
+    """Normalize a member's kernel projection to (vals [n, A], weight, G).
+
+    Scalar-contract members (``kernel_num_groups is None``) are folded in as
+    a 1-group table: their ``(vals, weight)`` projection becomes a group-by
+    projection with every item in group 0, so a single ``ops.group_agg``
+    dispatch serves scalar and group-by members alike.
+    """
+    assert member.kernel_cols is not None, (
+        f"bundle member {member.name!r} does not publish kernel_cols")
+    if member.kernel_num_groups is None:
+        vals, weight = member.kernel_cols(sl)
+        gids = jnp.zeros(vals.shape[0], jnp.int32)
+        G = 1
+    else:
+        vals, weight, gids = member.kernel_cols(sl)
+        G = member.kernel_num_groups
+    if vals.ndim == 1:
+        vals = vals[:, None]
+    return vals, weight, gids.astype(jnp.int32), G
+
+
+def bundle_kernel_rounds_states(gla: GLA, cols: dict, rounds: int):
+    """ONE ``ops.group_agg`` dispatch per round-slice for a whole bundle.
+
+    Every member's kernel projection of the same round-slice is stacked
+    row-wise into a single dispatch: member m's group ids are offset into
+    the disjoint range [off_m, off_m + G_m) of one concatenated group table,
+    and its vals are zero-padded to the widest member's aggregate count.
+    Because each member's rows are a multiple of ``block_rows`` (pinned to
+    the chunk length L), members occupy disjoint kernel blocks, so member
+    m's table rows receive exact-zero partials from every other member's
+    blocks — group-by members' states stay bitwise-identical to their solo
+    :func:`kernel_rounds_states` dispatch (scalar members fold through the
+    one-hot contraction instead of the scan's matvec, so they are
+    interchangeable-not-bitwise with the scan path, like the solo scalar
+    kernel).  Returns (tuple of member finals, tuple of member [R] views)
+    matching the bundle's tuple-state layout.
+    """
+    from repro.core import estimators as E
+    from repro.kernels import ops
+
+    members = gla.members
+    assert members, "bundle kernel path needs a GLABundle"
+    C, L = cols["_mask"].shape
+    assert C % rounds == 0, (
+        f"bundle kernel path needs C % rounds == 0, got {C} % {rounds}")
+    per = C // rounds
+
+    deltas = [[] for _ in members]  # [member][round] -> SumState delta
+    for r in range(rounds):
+        sl = {k: v[r * per:(r + 1) * per].reshape(per * L)
+              for k, v in cols.items()}
+        mask = sl["_mask"].astype(jnp.float32)
+        scanned = jnp.sum(mask)
+        projs = [_bundle_member_projection(m, sl) for m in members]
+        A_max = max(v.shape[1] for v, _, _, _ in projs)
+        offs = []
+        vals_cat, w_cat, gids_cat = [], [], []
+        off = 0
+        for vals, weight, gids, G in projs:
+            offs.append(off)
+            if vals.shape[1] < A_max:
+                vals = jnp.concatenate(
+                    [vals, jnp.zeros((vals.shape[0], A_max - vals.shape[1]),
+                                     vals.dtype)], axis=1)
+            vals_cat.append(vals)
+            w_cat.append((weight * sl["_mask"]).astype(jnp.float32))
+            gids_cat.append(gids + jnp.int32(off))
+            off += G
+        sums, sumsqs, matched = ops.group_agg(
+            jnp.concatenate(vals_cat, axis=0),
+            jnp.concatenate(w_cat, axis=0),
+            jnp.concatenate(gids_cat, axis=0),
+            num_groups=off, block_rows=L)
+        for i, (vals, _, _, G) in enumerate(projs):
+            o, A = offs[i], vals.shape[1]
+            if members[i].kernel_num_groups is None:
+                deltas[i].append(E.SumState(
+                    sum=sums[o, :1], sumsq=sumsqs[o, :1],
+                    scanned=scanned, matched=matched[o]))
+            else:
+                deltas[i].append(E.SumState(
+                    sum=sums[o:o + G, :A], sumsq=sumsqs[o:o + G, :A],
+                    scanned=scanned, matched=matched[o:o + G]))
+
+    folded = [_fold_running_sum(member_deltas) for member_deltas in deltas]
+    return (tuple(f for f, _ in folded), tuple(v for _, v in folded))
+
+
+def bundle_kernel_rounds_states_batched(gla: GLA, shards: dict, rounds: int):
+    """Vmapped-path wrapper for :func:`bundle_kernel_rounds_states`:
+    unrolled over partitions (same rationale as
+    :func:`_unroll_partitions`)."""
+    return _unroll_partitions(
+        lambda c: bundle_kernel_rounds_states(gla, c, rounds), shards)
 
 
 # ---------------------------------------------------------------------------

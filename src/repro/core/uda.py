@@ -99,6 +99,12 @@ class GLA:
         ``chunk["_mask"]`` itself.
       kernel_num_groups: dense group-table size for the group-by kernel
         contract; None selects the scalar SumState contract.
+      members: non-empty only for bundle GLAs (``repro.core.gla.GLABundle``):
+        the member GLAs whose states this GLA stacks into one tuple pytree.
+        The engine uses it to (a) recognize bundles when validating
+        ``emit="kernel"`` (the bundle itself publishes no ``kernel_cols`` —
+        each member does) and (b) unbundle per-query results after the
+        shared scan (``engine.run_queries``).
     """
 
     init: Callable[[], State]
@@ -111,6 +117,7 @@ class GLA:
     merge_is_additive: bool = False
     kernel_cols: Optional[Callable[[Chunk], Any]] = None
     kernel_num_groups: Optional[int] = None
+    members: tuple = ()
     name: str = "gla"
 
     def __post_init__(self):

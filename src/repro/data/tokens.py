@@ -6,7 +6,6 @@ short-range repetition structure so small models have something learnable.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

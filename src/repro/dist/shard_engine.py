@@ -88,7 +88,13 @@ def _run_sharded_jit(gla: GLA, shards: dict, sched: jnp.ndarray,
             final_view = last
         elif emit == "kernel":
             assert lanes == 1, "emit='kernel' runs single-lane"
-            if gla.kernel_num_groups is not None:
+            if gla.members:
+                # bundled kernel dispatch: ONE group_agg launch per
+                # round-slice covers every member (DESIGN.md §6).
+                final_view, round_states = SC.bundle_kernel_rounds_states(
+                    gla, cols, R if snapshots else 1)
+                prefixes = None
+            elif gla.kernel_num_groups is not None:
                 # group-by kernel dispatch: round emission discipline, no
                 # per-chunk prefixes (DESIGN.md §3).  Snapshots off: one
                 # whole-shard dispatch, nothing else is consumed.
@@ -165,11 +171,11 @@ def run_sharded(gla: GLA, shards: dict, sched: jnp.ndarray, alive: jnp.ndarray,
                 "sync_cost_model=True: the per-chunk coordination scan "
                 "bypasses the kernel dispatch — use emit='chunk', or pass "
                 "sync_cost_model=False (scalar-SumState GLAs only)")
-        if gla.kernel_num_groups is not None:
+        if gla.kernel_num_groups is not None or gla.members:
             raise ValueError(
-                "group-by emit='kernel' emits round states only; mode='sync' "
-                "needs prefix states for the min-progress truncation — use "
-                "emit='chunk' or mode='async'")
+                "group-by/bundled emit='kernel' emits round states only; "
+                "mode='sync' needs prefix states for the min-progress "
+                "truncation — use emit='chunk' or mode='async'")
     if emit == "round" and mode == "sync" and not sync_cost_model:
         # Same silent-downgrade class: scan_rounds has no prefix states, so
         # the pmin truncation would be skipped and async round states would

@@ -86,8 +86,8 @@ def spec_pspec(spec: ParamSpec, mesh, *, opt_data_axis: Optional[str] = None,
     if msize > 1:
         for name in MODEL_PRIORITY:
             hit = [
-                i for i, l in enumerate(spec.logical)
-                if l == name and spec.shape[i] % msize == 0
+                i for i, lg in enumerate(spec.logical)
+                if lg == name and spec.shape[i] % msize == 0
                 and spec.shape[i] >= msize
             ]
             if hit:
@@ -96,8 +96,8 @@ def spec_pspec(spec: ParamSpec, mesh, *, opt_data_axis: Optional[str] = None,
     if opt_data_axis is not None:
         dsize = mesh_axis_size(mesh, opt_data_axis)
         if dsize > 1:
-            for i, l in enumerate(spec.logical):
-                if (l is not None and l != "layers" and assign[i] is None
+            for i, lg in enumerate(spec.logical):
+                if (lg is not None and lg != "layers" and assign[i] is None
                         and spec.shape[i] % dsize == 0
                         and spec.shape[i] >= dsize):
                     assign[i] = opt_data_axis

@@ -28,7 +28,6 @@ import re
 import subprocess
 import sys
 import time
-import traceback
 from pathlib import Path
 
 import jax

@@ -44,7 +44,10 @@ def run(arch: str, shape: str, overrides: dict, label: str,
     cfg = dataclasses.replace(cfg0, **overrides) if overrides else cfg0
 
     # monkeypatch get_config so build_cell sees the overridden config
-    DR.get_config = lambda a: cfg
+    def _patched_get_config(a):
+        return cfg
+
+    DR.get_config = _patched_get_config
 
     mesh = M.make_production_mesh(multi_pod=(mesh_kind == "multi"))
     t0 = time.time()

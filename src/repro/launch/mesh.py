@@ -23,7 +23,6 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def make_test_mesh(devices: int = 8, axes=("data",)):
     """Small mesh over however many (possibly fake) devices exist."""
-    import numpy as np
     n = len(jax.devices())
     use = min(devices, n)
     shape = (use,) if len(axes) == 1 else (use // 2, 2)

@@ -21,7 +21,6 @@ import numpy as np
 from repro.checkpoint import ckpt
 from repro.configs import get_config
 from repro.data.tokens import token_batches
-from repro.training import optimizer as O
 from repro.training import train_step as TS
 
 

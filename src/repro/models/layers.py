@@ -18,7 +18,6 @@ Mask modes:
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional
 
 import jax
@@ -141,7 +140,7 @@ def flash_attention(q, k, v, *, mode="causal", window=None, cap=None,
         o0 = jnp.zeros((B, qb, K, G, dh), jnp.float32)
 
         def step(carry, xs, qi=qi, qpos=qpos):
-            m, l, o = carry
+            m, den, o = carry
             kj, vj, kp = xs
             s = jnp.einsum("bqkgd,btkd->bqkgt", qi, kj,
                            preferred_element_type=jnp.float32) * scale
@@ -156,18 +155,18 @@ def flash_attention(q, k, v, *, mode="causal", window=None, cap=None,
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            l_new = l * corr + jnp.sum(p, axis=-1)
+            den_new = den * corr + jnp.sum(p, axis=-1)
             o_new = o * corr[..., None] + jnp.einsum(
                 "bqkgt,btkd->bqkgd", p.astype(vj.dtype), vj,
                 preferred_element_type=jnp.float32)
-            return (m_new, l_new, o_new), None
+            return (m_new, den_new, o_new), None
 
         # remat the kv-block body: backward recomputes the [qb,kvb]
         # score/probability blocks instead of storing them per step —
         # the flash-attention memory property under reverse-mode
-        (m, l, o), _ = lax.scan(jax.checkpoint(step), (m0, l0, o0), (
+        (m, den, o), _ = lax.scan(jax.checkpoint(step), (m0, l0, o0), (
             jnp.moveaxis(k_blocks, 1, 0), jnp.moveaxis(v_blocks, 1, 0), kp_blocks))
-        o = o / jnp.maximum(l, 1e-30)[..., None]
+        o = o / jnp.maximum(den, 1e-30)[..., None]
         outs.append(o.reshape(B, qb, H, dh))
     return jnp.concatenate(outs, axis=1).astype(q.dtype)
 

@@ -275,12 +275,17 @@ def _slstm_dims(cfg):
 
 def slstm_specs(cfg, dtype):
     d, H, dh, fd = _slstm_dims(cfg)
-    gate = lambda: ParamSpec((d, H, dh), ("embed", "heads", None),
-                             scale=0.5, dtype=dtype)
-    rec = lambda: ParamSpec((H, dh, dh), ("heads", None, None),
-                            scale=0.5, dtype=dtype)
-    bias = lambda: ParamSpec((H, dh), ("heads", None), "zeros",
-                             dtype=jnp.float32)
+    def gate():
+        return ParamSpec((d, H, dh), ("embed", "heads", None), scale=0.5,
+                         dtype=dtype)
+
+    def rec():
+        return ParamSpec((H, dh, dh), ("heads", None, None), scale=0.5,
+                         dtype=dtype)
+
+    def bias():
+        return ParamSpec((H, dh), ("heads", None), "zeros",
+                         dtype=jnp.float32)
     return {
         "ln1": _norm_spec(d, cfg.norm, dtype),
         "wz": gate(), "wi": gate(), "wf": gate(), "wo": gate(),

@@ -20,8 +20,7 @@ unembedding so the full [B,S,V] logits tensor never materializes — with
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -23,7 +23,6 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import estimators as E
 

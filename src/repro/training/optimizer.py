@@ -30,8 +30,11 @@ class AdafactorState(NamedTuple):
 
 
 def adamw_init(params) -> AdamWState:
-    f32 = lambda t: jax.tree.map(lambda x: x.astype(jnp.float32), t)
-    zeros = lambda t: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    def f32(t):
+        return jax.tree.map(lambda x: x.astype(jnp.float32), t)
+
+    def zeros(t):
+        return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), t)
     return AdamWState(jnp.zeros((), jnp.int32), f32(params), zeros(params),
                       zeros(params))
 

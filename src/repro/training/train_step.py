@@ -12,7 +12,6 @@ grad-accumulation estimator (repro/training/grad_estimator.py).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Dict
 
 import jax

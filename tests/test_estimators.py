@@ -132,6 +132,93 @@ def test_erratum_count_scanned_not_matched():
     assert width < 1e-3
 
 
+def test_variance_estimate_degenerate_sample_sizes():
+    """|S| in {0, 1} leaves the variance undefined: the estimator must
+    clamp to +inf (infinite-width bounds), never NaN (Eq. 4 divides by
+    |S|^2(|S|-1) and multiplies by (|D|-|S|))."""
+    d_total = 1000.0
+    for s in (0.0, 1.0):
+        var = E.variance_estimate(jnp.float32(0.0), jnp.float32(0.0),
+                                  jnp.float32(s), d_total)
+        assert np.isposinf(float(var)), (s, float(var))
+        lo, hi = E.normal_bounds(jnp.float32(0.0), var, 0.95)
+        assert not np.isnan(float(lo)) and not np.isnan(float(hi))
+    # |S| = 2 is the smallest defined sample: finite and non-negative
+    var2 = E.variance_estimate(jnp.float32(3.0), jnp.float32(5.0),
+                               jnp.float32(2.0), d_total)
+    assert np.isfinite(float(var2)) and float(var2) >= 0.0
+
+
+def test_variance_estimate_fp_negative_clamps_to_zero():
+    """A constant sample makes |S|*sumsq - sum^2 cancel to ~0; float error
+    can drive it slightly negative.  The estimator clamps at 0 — bounds
+    collapse instead of going NaN through sqrt(negative)."""
+    s = 3.0
+    c = 0.1  # 0.1 is inexact in binary: s*sumsq - sum^2 != 0 exactly
+    var = E.variance_estimate(jnp.float32(s * c), jnp.float32(s * c * c),
+                              jnp.float32(s), 10.0)
+    assert float(var) >= 0.0
+    lo, hi = E.normal_bounds(jnp.float32(s * c), var, 0.95)
+    assert not np.isnan(float(lo)) and not np.isnan(float(hi))
+
+
+def test_mult_estimate_zero_scanned_tuples():
+    """Stratified estimator before any tuple arrives: estimate 0 with
+    infinite (not NaN) bounds, per-partition EstimatorTerminate included."""
+    st = E.mult_estimator_terminate(E.mult_state_zero(), d_local=250.0)
+    assert float(st.est) == 0.0
+    assert np.isposinf(float(st.estvar))
+    est = E.mult_estimate(st, 0.95)
+    assert not np.isnan(float(est.estimate))
+    assert np.isneginf(float(est.lower)) and np.isposinf(float(est.upper))
+    # an empty stratum (d_local == 0) must not generate NaN either
+    st0 = E.mult_estimator_terminate(E.mult_state_zero(), d_local=0.0)
+    e0 = E.mult_estimate(st0, 0.95)
+    assert not np.isnan(float(e0.estimate))
+
+
+def test_single_round_schedule_end_to_end():
+    """rounds=1 (one snapshot at full scan) is a legal schedule on every
+    emission path and for both estimator models: bounds collapse on the
+    exact answer, never NaN."""
+    rows = 8_000
+    cols, shards = _shards(rows, seed=21)
+    exact = tpch.exact_answer(cols, tpch.q6_func,
+                              tpch.q6_cond(tpch.Q6_LOW_WINDOW))[0]
+    for estimator in ("single", "multiple"):
+        g = gla.make_sum_gla(tpch.q6_func, tpch.q6_cond(tpch.Q6_LOW_WINDOW),
+                             d_total=float(rows), estimator=estimator)
+        for emit in ("chunk", "round"):
+            res = engine.run_query(g, shards, rounds=1, emit=emit)
+            est = np.asarray(res.estimates.estimate)
+            assert est.shape[0] == 1
+            assert not np.any(np.isnan(est))
+            np.testing.assert_allclose(est[-1], exact, rtol=2e-4)
+            width = float(np.asarray(res.estimates.upper)[-1]
+                          - np.asarray(res.estimates.lower)[-1])
+            assert width < 1e-3
+
+
+def test_multiple_estimator_empty_partition_no_nan():
+    """A partition with zero live tuples (all-padding shard) contributes
+    est=0 and var=inf to the stratified sum: bounds blow up to infinite
+    width — honest, and never NaN."""
+    rows = 6_000
+    _, shards = _shards(rows, parts=4, seed=13)
+    # kill partition 3: zero mask = no live tuples, d_local = 0
+    shards = dict(shards)
+    shards["_mask"] = shards["_mask"].at[3].set(0.0)
+    g = gla.make_sum_gla(tpch.q6_func, tpch.q6_cond(tpch.Q6_LOW_WINDOW),
+                         d_total=float(rows), estimator="multiple")
+    res = engine.run_query(g, shards, rounds=3, emit="round")
+    est = np.asarray(res.estimates.estimate)
+    lo = np.asarray(res.estimates.lower)
+    hi = np.asarray(res.estimates.upper)
+    assert not np.any(np.isnan(est))
+    assert not np.any(np.isnan(lo)) and not np.any(np.isnan(hi))
+    assert np.all(np.isposinf(hi - lo))  # dead stratum: unbounded interval
+
+
 def test_single_vs_multiple_equal_at_uniform_progress():
     """With equal partition sizes and uniform progress the two models agree
     (paper Fig. 1 single-node observation generalized)."""

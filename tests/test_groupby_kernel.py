@@ -4,7 +4,6 @@ and the sync-mode incompatibility errors."""
 import subprocess
 import sys
 import textwrap
-import warnings
 from pathlib import Path
 
 import jax

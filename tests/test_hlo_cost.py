@@ -2,7 +2,6 @@
 detection, dynamic-slice traffic."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 
 from repro.analysis import hlo_cost

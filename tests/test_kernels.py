@@ -1,6 +1,5 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True on
 CPU — kernels target TPU)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

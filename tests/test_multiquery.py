@@ -1,0 +1,295 @@
+"""Multi-query shared-scan engine (DESIGN.md §6): N concurrent OLA
+estimations over a single pass.
+
+The acceptance contract: ``engine.run_queries`` over [Q1, Q6, Q1-large]
+returns finals and per-round bounds bitwise-identical to solo ``run_query``
+calls, on both the vmapped and shard_map engines, and the bundled
+``emit="kernel"`` path issues exactly one ``ops.group_agg`` dispatch per
+(partition, round-slice) for the WHOLE bundle."""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import hlo_cost as HC
+from repro.core import engine, gla, randomize
+from repro.data import tpch
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+
+ROWS = 12_000
+PARTS = 4
+SUPPLIERS = 2_000
+BUCKET_BITS = 11
+ROUNDS = 4
+
+
+@pytest.fixture(scope="module")
+def shards():
+    cols = tpch.generate_lineitem(ROWS, seed=23, num_suppliers=SUPPLIERS)
+    parts = randomize.randomize_global(
+        {k: jnp.asarray(v) for k, v in cols.items()}, jax.random.key(5),
+        PARTS)
+    return randomize.pack_partitions(parts, chunk_len=256)
+
+
+def _q6(estimator="single"):
+    return gla.make_sum_gla(tpch.q6_func, tpch.q6_cond(tpch.Q6_LOW_WINDOW),
+                            d_total=float(ROWS), estimator=estimator)
+
+
+def _q1_small(estimator="single"):
+    return gla.make_groupby_gla(
+        tpch.q1_func, tpch.q1_cond, tpch.q1_group_small, num_groups=4,
+        d_total=float(ROWS), estimator=estimator, num_aggs=4)
+
+
+def _q1_large(estimator="single"):
+    return gla.make_groupby_gla(
+        tpch.q1_func, tpch.q1_cond, tpch.q1_group_large,
+        num_groups=SUPPLIERS, bucket_bits=BUCKET_BITS, d_total=float(ROWS),
+        estimator=estimator, num_aggs=4)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    return [_q1_small(), _q6(), _q1_large()]
+
+
+def _assert_bitwise(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert np.asarray(x).tobytes() == np.asarray(y).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# the bundle combinator itself
+# ---------------------------------------------------------------------------
+
+def test_bundle_is_a_gla(workload):
+    b = gla.GLABundle(workload)
+    assert b.members == tuple(workload)
+    assert b.merge_is_additive
+    assert b.kernel_cols is None  # members publish theirs; the bundle batches
+    assert "sum-single" in b.name
+    with pytest.raises(ValueError, match="at least one"):
+        gla.GLABundle([])
+    with pytest.raises(ValueError, match="must not themselves"):
+        gla.GLABundle([b, _q6()])
+
+
+def test_bundle_memoized_for_jit_cache(workload):
+    """Re-bundling the same members returns the SAME object: the engines'
+    jit caches key on the GLA statically, so a repeated run_queries
+    workload must not recompile per call."""
+    assert gla.GLABundle(workload) is gla.GLABundle(workload)
+    assert gla.GLABundle(workload) is not gla.GLABundle(workload[:2])
+
+
+def test_bundle_estimate_tuple_matches_members(workload):
+    """Per-query emission views: the bundle's estimate is a tuple with one
+    Estimate per member, None for estimation-free members."""
+    b = gla.GLABundle([_q6(), _q6("none")])
+    state = b.init()
+    ests = b.estimate(state, 0.95, {"d_total": 1.0})
+    assert len(ests) == 2
+    assert ests[0] is not None and ests[1] is None
+
+
+# ---------------------------------------------------------------------------
+# bitwise equivalence with solo runs — the shared scan must be free
+# ---------------------------------------------------------------------------
+
+def test_run_queries_bitwise_identical_vmapped(shards, workload):
+    """[Q1, Q6, Q1-large] through one shared scan == three solo scans,
+    bitwise: finals, merged snapshot states, and the per-round bounds."""
+    multi = engine.run_queries(workload, shards, rounds=ROUNDS, emit="round")
+    assert len(multi) == len(workload)
+    for g, res in zip(workload, multi):
+        solo = engine.run_query(g, shards, rounds=ROUNDS, emit="round")
+        _assert_bitwise(res.final, solo.final)
+        _assert_bitwise(res.snapshots, solo.snapshots)
+        _assert_bitwise(
+            (res.estimates.estimate, res.estimates.lower,
+             res.estimates.upper),
+            (solo.estimates.estimate, solo.estimates.lower,
+             solo.estimates.upper))
+        assert float(res.d_total) == float(solo.d_total)
+
+
+def test_run_queries_chunk_emit_matches_round(shards):
+    """Small-state bundles can use prefix emission; snapshots at uniform
+    round boundaries equal the round path bitwise."""
+    glas = [_q6(), _q1_small()]
+    a = engine.run_queries(glas, shards, rounds=ROUNDS, emit="chunk")
+    b = engine.run_queries(glas, shards, rounds=ROUNDS, emit="round")
+    for x, y in zip(a, b):
+        _assert_bitwise(x.final, y.final)
+        _assert_bitwise(x.snapshots, y.snapshots)
+
+
+def test_run_queries_mixed_estimators(shards):
+    """single + multiple + estimation-free members coexist in one pass;
+    the stratified member's EstimatorTerminate sees the same d_local."""
+    glas = [_q6("single"), _q6("multiple"), _q6("none")]
+    multi = engine.run_queries(glas, shards, rounds=ROUNDS, emit="round")
+    for g, res in zip(glas, multi):
+        solo = engine.run_query(g, shards, rounds=ROUNDS, emit="round")
+        _assert_bitwise(res.final, solo.final)
+        if g.estimate is None:
+            assert res.estimates is None
+        else:
+            _assert_bitwise(res.estimates.estimate, solo.estimates.estimate)
+    # the estimation-free member yields None estimates in the bundle view
+    assert multi[2].estimates is None
+
+
+def test_run_queries_snapshots_off(shards, workload):
+    multi = engine.run_queries(workload, shards, rounds=ROUNDS, emit="round",
+                               snapshots=False)
+    for g, res in zip(workload, multi):
+        solo = engine.run_query(g, shards, rounds=ROUNDS, emit="round",
+                                snapshots=False)
+        _assert_bitwise(res.final, solo.final)
+        assert res.snapshots is None and res.estimates is None
+
+
+# ---------------------------------------------------------------------------
+# batched kernel dispatch
+# ---------------------------------------------------------------------------
+
+def test_run_queries_kernel_batched_bitwise(shards, workload):
+    """emit='kernel' batches all members into one group_agg dispatch per
+    round-slice.  Group-by members stay bitwise-identical to their solo
+    kernel dispatch (disjoint blocks, exact-zero cross-member partials);
+    the scalar member folds through the one-hot contraction and is
+    interchangeable with the scan path (same caveat as the solo scalar
+    kernel)."""
+    multi = engine.run_queries(workload, shards, rounds=ROUNDS, emit="kernel")
+    for g, res in zip(workload, multi):
+        if g.kernel_num_groups is not None:
+            solo = engine.run_query(g, shards, rounds=ROUNDS, emit="kernel")
+            _assert_bitwise(res.final, solo.final)
+            _assert_bitwise(res.snapshots, solo.snapshots)
+        else:
+            solo = engine.run_query(g, shards, rounds=ROUNDS, emit="round")
+            np.testing.assert_allclose(np.asarray(res.final),
+                                       np.asarray(solo.final), rtol=1e-5)
+            np.testing.assert_allclose(
+                np.asarray(res.estimates.estimate),
+                np.asarray(solo.estimates.estimate), rtol=1e-4)
+
+
+def test_kernel_bundle_one_dispatch_per_round_slice(shards, workload):
+    """HLO-verified: the bundled kernel program contains exactly P×R while
+    ops — every one a Pallas grid loop, one dispatch per (partition,
+    round-slice) for the WHOLE bundle — vs one per member solo."""
+    if jax.default_backend() != "cpu":
+        pytest.skip("interpret-mode lowering check is CPU-specific")
+    fn = jax.jit(lambda sh: engine.run_queries(
+        workload, sh, rounds=ROUNDS, emit="kernel")).lower(shards).compile()
+    n_while = HC.count_ops(fn.as_text(), "while", trip_scaled=False)
+    assert n_while == PARTS * ROUNDS, n_while
+
+
+def test_kernel_bundle_rejects_scan_only_members(shards):
+    g64 = gla.make_groupby_gla(
+        tpch.q1_func, tpch.q1_cond, tpch.q1_group_large, num_groups=100,
+        d_total=float(ROWS), dtype=jnp.float64)
+    assert g64.kernel_cols is None
+    with pytest.raises(ValueError, match="do not publish kernel_cols"):
+        engine.run_queries([_q6(), g64], shards, rounds=ROUNDS, emit="kernel")
+
+
+def test_kernel_bundle_rounds_validation(shards, workload):
+    """Bundles inherit the round-emission discipline: indivisible explicit
+    schedules are rejected, default rounds degrade with a warning."""
+    C = shards["_mask"].shape[1]
+    bad = engine.uniform_schedule(PARTS, C, 7)
+    with pytest.raises(ValueError, match="C % rounds"):
+        engine.run_queries(workload, shards, schedule=bad, emit="kernel")
+    with pytest.warns(UserWarning, match="degrading"):
+        res = engine.run_queries(workload, shards, rounds=8, emit="kernel")
+    assert np.asarray(res[0].snapshots.scanned).shape[0] == 6
+
+
+# ---------------------------------------------------------------------------
+# sharded engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_run_queries_sharded_matches_solo_subprocess():
+    """Shared scan under shard_map on 4 fake devices: per-query finals,
+    snapshots and bounds bitwise-identical to solo sharded AND solo vmapped
+    runs; the bundled kernel path agrees with its vmapped twin."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import sys; sys.path.insert(0, %r)
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import engine, gla, randomize
+        from repro.data import tpch
+        rows, parts = 12_000, 4
+        cols = tpch.generate_lineitem(rows, seed=23, num_suppliers=2000)
+        ps = randomize.randomize_global(
+            {k: jnp.asarray(v) for k, v in cols.items()}, jax.random.key(5),
+            parts)
+        shards = randomize.pack_partitions(ps, chunk_len=256)
+        mesh = jax.make_mesh((parts,), ("data",))
+        glas = [
+            gla.make_groupby_gla(
+                tpch.q1_func, tpch.q1_cond, tpch.q1_group_small,
+                num_groups=4, d_total=float(rows), num_aggs=4),
+            gla.make_sum_gla(tpch.q6_func, tpch.q6_cond(tpch.Q6_LOW_WINDOW),
+                             d_total=float(rows)),
+            gla.make_groupby_gla(
+                tpch.q1_func, tpch.q1_cond, tpch.q1_group_large,
+                num_groups=2000, bucket_bits=11, d_total=float(rows),
+                num_aggs=4),
+        ]
+        def leaves_equal(a, b):
+            return all(np.asarray(x).tobytes() == np.asarray(y).tobytes()
+                       for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+        multi = engine.run_queries(glas, shards, rounds=4, emit="round",
+                                   mesh=mesh)
+        for g, res in zip(glas, multi):
+            ss = engine.run_query(g, shards, rounds=4, emit="round",
+                                  mesh=mesh)
+            sv = engine.run_query(g, shards, rounds=4, emit="round")
+            for solo in (ss, sv):
+                assert leaves_equal(res.final, solo.final)
+                assert leaves_equal(res.snapshots, solo.snapshots)
+                assert leaves_equal(
+                    (res.estimates.estimate, res.estimates.lower,
+                     res.estimates.upper),
+                    (solo.estimates.estimate, solo.estimates.lower,
+                     solo.estimates.upper))
+        mk = engine.run_queries(glas, shards, rounds=4, emit="kernel",
+                                mesh=mesh)
+        mv = engine.run_queries(glas, shards, rounds=4, emit="kernel")
+        for a, b in zip(mk, mv):
+            assert leaves_equal(a.final, b.final)
+            assert leaves_equal(a.snapshots, b.snapshots)
+        print("OK")
+    """ % str(SRC))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
+
+
+def test_sharded_sync_rejects_bundle_kernel(shards, workload):
+    from repro.dist import shard_engine
+    mesh = jax.make_mesh((1,), ("data",))
+    one = jax.tree.map(lambda x: x[:1], shards)
+    sched = jnp.asarray(
+        engine.uniform_schedule(1, shards["_mask"].shape[1], ROUNDS))
+    with pytest.raises(ValueError, match="round states"):
+        shard_engine.run_sharded(
+            gla.GLABundle(workload), one, sched, jnp.ones((1,), bool),
+            mesh=mesh, axis_name="data", mode="sync", emit="kernel",
+            lanes=1, snapshots=True, confidence=0.95, sync_cost_model=False)

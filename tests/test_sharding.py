@@ -5,8 +5,6 @@ import sys
 import textwrap
 from pathlib import Path
 
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.models.spec import ParamSpec
