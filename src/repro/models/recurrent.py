@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.models.layers import apply_norm, mlp
+from repro.models.layers import apply_norm
 from repro.models.spec import ParamSpec
 
 
@@ -107,8 +107,10 @@ _LRU_C = 8.0
 def _rglru_gates(p, u):
     """u [.., w] conv output -> (log_a, gated_input) in f32."""
     uf = u.astype(jnp.float32)
-    r = jax.nn.sigmoid(uf * p["ga_w"].astype(jnp.float32) + p["ga_b"].astype(jnp.float32))
-    i = jax.nn.sigmoid(uf * p["gx_w"].astype(jnp.float32) + p["gx_b"].astype(jnp.float32))
+    r = jax.nn.sigmoid(
+        uf * p["ga_w"].astype(jnp.float32) + p["ga_b"].astype(jnp.float32))
+    i = jax.nn.sigmoid(
+        uf * p["gx_w"].astype(jnp.float32) + p["gx_b"].astype(jnp.float32))
     log_a = -_LRU_C * r * jax.nn.softplus(p["lam"].astype(jnp.float32))
     a = jnp.exp(log_a)
     b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)

@@ -46,8 +46,9 @@ def adamw_update(grads, state: AdamWState, params, *, lr=1e-4, b1=0.9,
 
     mu = jax.tree.map(lambda g, m: b1 * m + (1 - b1) * g.astype(jnp.float32),
                       grads, state.mu)
-    nu = jax.tree.map(lambda g, v: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
-                      grads, state.nu)
+    nu = jax.tree.map(
+        lambda g, v: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        grads, state.nu)
 
     def new_master(m, v, ma):
         mhat = m / (1 - b1 ** t)
