@@ -1,0 +1,109 @@
+"""Diff benchmarks/out/BENCH_*.json against the committed baselines.
+
+    python benchmarks/compare_baseline.py [out_dir [baseline_dir]]
+
+CI runs this after ``python -m benchmarks.run --smoke`` +
+``check_schema.py``: the schema validator checks each file in isolation;
+this gate checks the *trajectory* — the benchmark surface may only grow,
+never silently shrink or drift:
+
+  * every baseline file must be produced by the current smoke run;
+  * every baseline row (by ``name``) must still be present;
+  * every key a baseline row carries (including ``derived`` sub-keys) must
+    still be present — dropping a reported metric is schema drift and
+    fails;
+  * ``us_per_call`` must stay under a *sanity ceiling*:
+    max(CEIL_FLOOR_US, CEIL_FACTOR x baseline).  CI runners are noisy, so
+    the ceiling is deliberately generous — it catches hangs and
+    asymptotic blowups, not percent-level regressions (those are read off
+    the uploaded artifacts).
+
+New files and new rows pass with a note: they seed the next baseline
+(refresh with ``cp benchmarks/out/BENCH_*.json benchmarks/baselines/``).
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+CEIL_FACTOR = 50.0
+CEIL_FLOOR_US = 10_000_000.0  # 10 s: below this, never fail on time alone
+
+
+def _rows_by_name(payload: dict) -> dict:
+    return {r["name"]: r for r in payload.get("rows", [])}
+
+
+def compare_file(base: dict, new: dict, fname: str) -> list:
+    errs = []
+    base_rows, new_rows = _rows_by_name(base), _rows_by_name(new)
+    for name, brow in base_rows.items():
+        nrow = new_rows.get(name)
+        if nrow is None:
+            errs.append(f"{fname}: baseline row {name!r} disappeared")
+            continue
+        missing = set(brow) - set(nrow)
+        if missing:
+            errs.append(f"{fname}: row {name!r} dropped keys "
+                        f"{sorted(missing)} (schema drift)")
+        if isinstance(brow.get("derived"), dict) \
+                and isinstance(nrow.get("derived"), dict):
+            dmissing = set(brow["derived"]) - set(nrow["derived"])
+            if dmissing:
+                errs.append(f"{fname}: row {name!r} dropped derived keys "
+                            f"{sorted(dmissing)} (schema drift)")
+        if "us_per_call" in brow and "us_per_call" in nrow:
+            ceil = max(CEIL_FLOOR_US, CEIL_FACTOR * float(brow["us_per_call"]))
+            if float(nrow["us_per_call"]) > ceil:
+                errs.append(
+                    f"{fname}: row {name!r} us_per_call "
+                    f"{nrow['us_per_call']:.0f} exceeds the sanity ceiling "
+                    f"{ceil:.0f} (baseline {brow['us_per_call']:.0f})")
+    extra = set(new_rows) - set(base_rows)
+    if extra:
+        print(f"note {fname}: {len(extra)} new row(s) not in the baseline "
+              "(will seed the next refresh)")
+    return errs
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    here = Path(__file__).parent
+    out_dir = Path(argv[0]) if argv else here / "out"
+    base_dir = Path(argv[1]) if len(argv) > 1 else here / "baselines"
+    base_files = sorted(base_dir.glob("BENCH_*.json"))
+    if not base_files:
+        print(f"FAIL: no baselines under {base_dir}")
+        return 1
+    failed = False
+    for bpath in base_files:
+        npath = out_dir / bpath.name
+        if not npath.exists():
+            print(f"FAIL {bpath.name}: not produced by this run")
+            failed = True
+            continue
+        try:
+            base = json.loads(bpath.read_text())
+            new = json.loads(npath.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"FAIL {bpath.name}: unreadable ({e})")
+            failed = True
+            continue
+        errs = compare_file(base, new, bpath.name)
+        if errs:
+            failed = True
+            for e in errs:
+                print(f"FAIL {e}")
+        else:
+            print(f"OK   {bpath.name}: {len(base.get('rows', []))} baseline "
+                  "rows present, ceilings respected")
+    new_only = {p.name for p in out_dir.glob("BENCH_*.json")} \
+        - {p.name for p in base_files}
+    for name in sorted(new_only):
+        print(f"note {name}: no baseline yet (seed it from this run)")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

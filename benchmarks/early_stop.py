@@ -1,0 +1,130 @@
+"""Early termination: time-to-ε and fraction of the scan saved.
+
+The paper's headline user feature is stopping "as soon as the estimate is
+accurate enough, typically early in the execution".  This benchmark
+measures what that is worth on the incremental session driver
+(repro/core/session.py, DESIGN.md §7): for each query family it runs the
+fused full scan and an early-terminating session side by side and reports
+
+    time-to-ε      — wall time until the stopping rule fires (us)
+    rounds_taken   — round-slices executed, of rounds_total
+    frac_scan_saved — 1 - rounds_taken / rounds_total
+    speedup        — full-scan wall / time-to-ε
+
+Families where the rule never fires (the classic low-selectivity Q6: the
+CI only collapses near the full scan) fall through to the complete scan —
+frac_scan_saved 0 — which is itself the point: early termination is a
+property of the query's convergence, not a discount applied blindly.
+
+Output: CSV to stdout + benchmarks/out/BENCH_early_stop.json.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine, gla, randomize
+from repro.core import session as S
+from repro.data import tpch
+
+ROWS = 500_000
+PARTS = 4
+ROUNDS = 32
+CHUNK = 1024
+
+
+def _shards(rows):
+    cols = tpch.generate_lineitem(rows, seed=9)
+    parts = randomize.randomize_global(
+        {k: jnp.asarray(v) for k, v in cols.items()}, jax.random.key(9),
+        PARTS)
+    n_chunks = -(-rows // PARTS // CHUNK)
+    return randomize.pack_partitions(
+        parts, chunk_len=CHUNK, min_chunks=-(-n_chunks // ROUNDS) * ROUNDS)
+
+
+def _wide_q6(d_total):
+    def func(c):
+        return c["quantity"]
+
+    def cond(c):
+        sd = c["shipdate"]
+        return ((sd >= 0) & (sd < 1460)).astype(jnp.float32)
+
+    return gla.make_sum_gla(func, cond, d_total=d_total)
+
+
+def _families(rows):
+    d = float(rows)
+    return {
+        # converges mid-scan: the early-termination win case
+        "q6_wide_sum": (_wide_q6(d), 0.01, "chunk"),
+        # classic Q6 low selectivity: 1% is only reached near the full
+        # scan — the fall-through case
+        "q6_low_sel": (gla.make_sum_gla(
+            tpch.q6_func, tpch.q6_cond(tpch.Q6_LOW_WINDOW), d_total=d),
+            0.01, "chunk"),
+        # group-by: every group's CI must meet the rule
+        "q1_groupby_small": (gla.make_groupby_gla(
+            tpch.q1_func, tpch.q1_cond, tpch.q1_group_small, num_groups=4,
+            d_total=d, num_aggs=4), 0.05, "round"),
+    }
+
+
+def _timed(fn, repeats):
+    fn()  # warm (compile)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6
+
+
+def run(rows=ROWS, repeats=3, out=sys.stdout):
+    shards = _shards(rows)
+    bench_rows = []
+    print("name,us_per_call,derived", file=out)
+    for name, (g, eps, emit) in _families(rows).items():
+        def run_full():
+            res = engine.run_query(g, shards, rounds=ROUNDS, emit=emit)
+            jax.block_until_ready(res.final)
+
+        def run_session():
+            sess = S.Session(g, shards, rounds=ROUNDS, emit=emit,
+                             stop=S.rel_width(eps))
+            res = sess.run()
+            jax.block_until_ready(res.final)
+            return sess
+
+        full_us = _timed(run_full, repeats)
+        sess_us = _timed(run_session, repeats)
+        sess = run_session()  # one more for the counters
+        taken, total = sess.steps_taken, sess.rounds_total
+        saved = 1.0 - taken / total
+        speedup = full_us / sess_us if sess_us else float("inf")
+        derived = {
+            "eps": eps, "rounds_taken": taken, "rounds_total": total,
+            "frac_scan_saved": saved, "full_scan_us": full_us,
+            "speedup_vs_full": speedup, "converged": bool(sess.converged),
+        }
+        print(f"early_stop_{name},{sess_us:.0f},"
+              f"rounds={taken}/{total};saved={saved:.3f};"
+              f"speedup={speedup:.2f}", file=out)
+        bench_rows.append({"name": f"early_stop_{name}",
+                           "us_per_call": sess_us, "derived": derived})
+
+    try:
+        from benchmarks import bench_io
+    except ImportError:  # direct script invocation: benchmarks/ is sys.path[0]
+        import bench_io
+    path = bench_io.emit("early_stop", bench_rows)
+    print(f"# wrote {path}", file=out)
+
+
+if __name__ == "__main__":
+    run(rows=int(sys.argv[1]) if len(sys.argv) > 1 else ROWS)

@@ -11,6 +11,8 @@ Sections:
                    per-round-slice Pallas group_agg dispatch
   * multiquery   — shared scan: N concurrent queries over ONE pass vs N
                    solo passes (DESIGN.md §6)
+  * early_stop   — time-to-ε and fraction of the scan saved by the
+                   incremental session driver (DESIGN.md §7)
   * convergence  — paper Figs. 1–3 (relative CI width curves)
   * roofline     — §Roofline table from the dry-run artifacts (if present)
 
@@ -89,6 +91,13 @@ def main(argv=None):
         multiquery.run(rows=multiquery.SMOKE_ROWS, repeats=2)
     else:
         multiquery.run()
+
+    print("# === early_stop (time-to-eps, DESIGN.md §7) ===")
+    from benchmarks import early_stop
+    if smoke:
+        early_stop.run(rows=100_000, repeats=2)
+    else:
+        early_stop.run()
 
     print("# === convergence (paper Figs 1-3) ===")
     from benchmarks import convergence

@@ -76,6 +76,29 @@ def deserialize_state(buf: bytes, like: Any) -> Any:
     return jax.tree.unflatten(treedef, leaves)
 
 
+def save_envelope(path: str | Path, meta: dict, blob: bytes) -> None:
+    """Atomically write a (metadata header, opaque state blob) pair.
+
+    ``meta`` is a plain msgpack-able dict readable without knowing the
+    blob's pytree structure — the session layer (repro/core/session.py)
+    stores its configuration fingerprint and scan cursor here so
+    :func:`load_envelope` can rebuild the deserialization skeleton before
+    touching the blob.  The blob is whatever :func:`serialize_state`
+    produced (already compressed); pass ``b""`` for state-less envelopes.
+    """
+    raw = msgpack.packb({"meta": meta, "blob": blob}, use_bin_type=True)
+    Path(path).parent.mkdir(parents=True, exist_ok=True)
+    tmp = Path(str(path) + ".tmp")
+    tmp.write_bytes(raw)
+    tmp.replace(path)
+
+
+def load_envelope(path: str | Path) -> tuple:
+    """Read a :func:`save_envelope` file; returns ``(meta, blob)``."""
+    d = msgpack.unpackb(Path(path).read_bytes(), raw=False)
+    return d["meta"], d["blob"]
+
+
 def save(path: str | Path, state: Any) -> None:
     Path(path).parent.mkdir(parents=True, exist_ok=True)
     tmp = Path(str(path) + ".tmp")

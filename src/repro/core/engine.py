@@ -212,53 +212,18 @@ def _run_vmapped(gla: GLA, shards: dict, sched: jnp.ndarray, alive: jnp.ndarray,
 # public API
 # ---------------------------------------------------------------------------
 
-def run_query(
-    gla: GLA,
-    shards: dict,
-    *,
-    rounds: int = 8,
-    schedule: Optional[np.ndarray] = None,
-    confidence: float = 0.95,
-    mode: str = "async",
-    emit: str = "chunk",
-    lanes: int = 1,
-    snapshots: bool = True,
-    alive: Optional[np.ndarray] = None,
-    mesh=None,
-    axis_name: str = "data",
-    sync_cost_model: bool = True,
-) -> QueryResult:
-    """Execute a GLA query with on-line estimation.
+def normalize_plan(gla: GLA, shards: dict, rounds: int,
+                   schedule: Optional[np.ndarray], emit: str):
+    """Validate emit/kernel contracts and resolve the round schedule.
 
-    Args:
-      gla: the UDA bundle (repro.core.gla constructors or custom).
-      shards: columnar dict, leaves [P, C, L], must include "_mask".
-      rounds: number of snapshot points (ignored if ``schedule`` given).
-        Round-emission paths ("round", and group-by "kernel") emit at
-        uniform round boundaries only: the engine degrades ``rounds`` to
-        the largest divisor of C with a warning, and rejects an explicit
-        ``schedule`` that is indivisible or non-uniform with a ValueError
-        (those paths would silently ignore it otherwise).
-      schedule: cumulative chunk boundaries [P, R+1] (engine.*_schedule).
-      mode: "async" (paper's estimator) or "sync" (Wu et al. barrier).
-      emit: "chunk" (prefix states; small-state GLAs, any schedule),
-            "round" (uniform schedule fast path, large states),
-            "round_masked" (any schedule, large states, O(R·C)), or
-            "kernel" (fused Pallas dispatch; needs ``gla.kernel_cols``,
-            lanes == 1 — one dispatch per shard for scalar SumState GLAs,
-            one ``ops.group_agg`` dispatch per round-slice for group-by
-            GLAs publishing ``kernel_num_groups``).
-      lanes: parallel GLA states per partition (DataPath work-unit analogue).
-      snapshots: False = non-interactive mode (overhead baseline).
-      alive: bool [P] (node dead throughout) or [R, P] (failure-injection
-        schedule) — paper §4.6; see repro/dist/fault.py.
-      mesh: if given, run under shard_map with partitions on ``axis_name``
-        (repro/dist/shard_engine.py).
-      sync_cost_model: sharded ``mode="sync"`` only — pay the per-chunk
-        coordination collective that mechanistically reproduces the Wu et
-        al. barrier cost (DESIGN.md §4).  False truncates to min progress
-        without the per-chunk collective (required for the scalar-SumState
-        ``emit="kernel"`` path under sync).  Ignored by the vmapped path.
+    Shared by :func:`run_query` and :class:`repro.core.session.Session` so
+    both entry points enforce identical contracts.  Round-emission paths
+    ("round", and group-by/bundle "kernel") emit at uniform round boundaries
+    only: ``rounds`` degrades to the largest divisor of C with a warning,
+    and an explicit ``schedule`` that is indivisible or non-uniform is a
+    ValueError (those paths would silently ignore it otherwise).
+
+    Returns ``(rounds, schedule)`` with ``schedule`` a [P, R+1] ndarray.
     """
     P, C, L = shards["_mask"].shape
     if emit == "kernel":
@@ -299,10 +264,14 @@ def run_query(
                     "or emit='chunk' (prefix states)")
     if schedule is None:
         schedule = uniform_schedule(P, C, rounds)
-    sched = jnp.asarray(schedule, jnp.int32)
-    all_alive = alive is None or bool(np.all(np.asarray(alive)))
-    alive_arr = jnp.ones((P,), bool) if alive is None else jnp.asarray(alive, bool)
+    return np.asarray(schedule).shape[1] - 1, np.asarray(schedule)
 
+
+def _execute_full(gla: GLA, shards: dict, sched: jnp.ndarray,
+                  alive_arr: jnp.ndarray, *, mode: str, emit: str, lanes: int,
+                  snapshots: bool, confidence: float, all_alive: bool,
+                  mesh, axis_name: str, sync_cost_model: bool) -> QueryResult:
+    """Dispatch one fused whole-scan program (vmapped or sharded)."""
     if mesh is None:
         return _run_vmapped(
             gla, shards, sched, alive_arr, mode=mode, emit=emit, lanes=lanes,
@@ -314,6 +283,76 @@ def run_query(
         mode=mode, emit=emit, lanes=lanes, snapshots=snapshots,
         confidence=confidence, sync_cost_model=sync_cost_model,
     )
+
+
+def run_query(
+    gla: GLA,
+    shards: dict,
+    *,
+    rounds: int = 8,
+    schedule: Optional[np.ndarray] = None,
+    confidence: float = 0.95,
+    mode: str = "async",
+    emit: str = "chunk",
+    lanes: int = 1,
+    snapshots: bool = True,
+    alive: Optional[np.ndarray] = None,
+    mesh=None,
+    axis_name: str = "data",
+    sync_cost_model: bool = True,
+    stop=None,
+) -> QueryResult:
+    """Execute a GLA query with on-line estimation.
+
+    A thin wrapper over :class:`repro.core.session.Session` driven to
+    completion.  Without ``stop`` this runs the fused whole-scan program —
+    byte-for-byte the classic engine path; with ``stop`` the session
+    advances round by round and terminates as soon as the rule fires, so
+    the result may cover fewer than ``rounds`` snapshot rounds and its
+    ``final`` is the best partial-scan answer at the stopping round.
+
+    Args:
+      gla: the UDA bundle (repro.core.gla constructors or custom).
+      shards: columnar dict, leaves [P, C, L], must include "_mask".
+      rounds: number of snapshot points (ignored if ``schedule`` given).
+        Round-emission paths ("round", and group-by "kernel") emit at
+        uniform round boundaries only: the engine degrades ``rounds`` to
+        the largest divisor of C with a warning, and rejects an explicit
+        ``schedule`` that is indivisible or non-uniform with a ValueError
+        (those paths would silently ignore it otherwise).
+      schedule: cumulative chunk boundaries [P, R+1] (engine.*_schedule).
+      mode: "async" (paper's estimator) or "sync" (Wu et al. barrier).
+      emit: "chunk" (prefix states; small-state GLAs, any schedule),
+            "round" (uniform schedule fast path, large states),
+            "round_masked" (any schedule, large states, O(R·C)), or
+            "kernel" (fused Pallas dispatch; needs ``gla.kernel_cols``,
+            lanes == 1 — one dispatch per shard for scalar SumState GLAs,
+            one ``ops.group_agg`` dispatch per round-slice for group-by
+            GLAs publishing ``kernel_num_groups``).
+      lanes: parallel GLA states per partition (DataPath work-unit analogue).
+      snapshots: False = non-interactive mode (overhead baseline).
+      alive: bool [P] (node dead throughout) or [R, P] (failure-injection
+        schedule) — paper §4.6; see repro/dist/fault.py.
+      mesh: if given, run under shard_map with partitions on ``axis_name``
+        (repro/dist/shard_engine.py).
+      sync_cost_model: sharded ``mode="sync"`` only — pay the per-chunk
+        coordination collective that mechanistically reproduces the Wu et
+        al. barrier cost (DESIGN.md §4).  False truncates to min progress
+        without the per-chunk collective (required for the scalar-SumState
+        ``emit="kernel"`` path under sync).  Ignored by the vmapped path.
+      stop: optional stopping rule (repro.core.session.rel_width et al.);
+        needs an incrementally-steppable config — ``mode="async"`` with a
+        partition-uniform schedule.
+    """
+    from repro.core import session as SN  # local: session imports engine
+
+    sess = SN.Session(
+        gla, shards, rounds=rounds, schedule=schedule, stop=stop,
+        confidence=confidence, mode=mode, emit=emit, lanes=lanes,
+        snapshots=snapshots, alive=alive, mesh=mesh, axis_name=axis_name,
+        sync_cost_model=sync_cost_model,
+    )
+    return sess.run()
 
 
 def run_queries(
@@ -331,6 +370,7 @@ def run_queries(
     mesh=None,
     axis_name: str = "data",
     sync_cost_model: bool = True,
+    stop=None,
 ):
     """Execute N concurrent OLA queries over a SINGLE pass of the shards.
 
@@ -351,7 +391,10 @@ def run_queries(
     as its largest member — per-chunk prefix emission (``"chunk"``) is only
     sensible when every member is small.  ``emit="kernel"`` requires every
     member to publish ``kernel_cols`` and batches all of them into one
-    ``ops.group_agg`` dispatch per round-slice (DESIGN.md §6).
+    ``ops.group_agg`` dispatch per round-slice (DESIGN.md §6).  ``stop``
+    applies to the shared scan: with e.g. ``session.rel_width`` every
+    member that publishes an estimator must converge before the bundle
+    stops — the all-queries-converged rule.
 
     Returns: list of :class:`QueryResult`, one per input GLA, in order.
     """
@@ -363,7 +406,7 @@ def run_queries(
         bundle, shards, rounds=rounds, schedule=schedule,
         confidence=confidence, mode=mode, emit=emit, lanes=lanes,
         snapshots=snapshots, alive=alive, mesh=mesh, axis_name=axis_name,
-        sync_cost_model=sync_cost_model,
+        sync_cost_model=sync_cost_model, stop=stop,
     )
     out = []
     for i in range(len(glas)):

@@ -28,6 +28,13 @@ Scan variants (selected by the engine's ``emit`` argument):
                          [G, A] states follow the round emission discipline
                          (DESIGN.md §3).
 
+The per-round-slice primitives those variants fold over all rounds —
+``scan_round_step``, ``kernel_round_delta``, ``bundle_round_deltas``,
+``kernel_scalar_round_delta`` — are also jitted standalone by the
+incremental session driver (repro/core/session.py, DESIGN.md §7), which
+advances one round at a time so stopping rules can terminate the scan
+early.  One implementation, two execution disciplines.
+
 ``round_weights`` centralizes partition-liveness accounting: the engine and
 the fault model (repro/dist/fault.py) express node failure as an ``alive``
 mask of shape [P] (static) or [R, P] (failure-injection schedule), and every
@@ -102,6 +109,28 @@ def scan_prefix(gla: GLA, cols: dict, lanes: int):
     return final_view, prefixes
 
 
+def scan_round_step(gla: GLA, states: Pytree, round_cols: dict, lanes: int):
+    """Advance laned per-partition states by ONE round-slice of chunks.
+
+    The per-round-slice primitive both execution disciplines share: the
+    monolithic :func:`scan_rounds` folds it over all rounds inside one
+    program, and the incremental session driver (repro/core/session.py)
+    jits it standalone and advances round by round, evaluating stopping
+    rules in between.  Identical chunk-sequential accumulation order either
+    way, so round-boundary states are bitwise-identical across disciplines
+    (tests/test_session.py).
+
+    Returns (new laned states, lane-merged round-boundary view).
+    """
+    def chunk_body(s, chunk):
+        s, _ = accumulate_chunk(gla, s, chunk, lanes)
+        return s, None
+
+    states, _ = lax.scan(chunk_body, states, round_cols)
+    view = fold_merge(gla.merge, states, lanes) if lanes > 1 else states
+    return states, view
+
+
 def scan_rounds(gla: GLA, cols: dict, lanes: int, rounds: int):
     """Uniform-schedule fast path: emit state only at round boundaries.
 
@@ -115,12 +144,7 @@ def scan_rounds(gla: GLA, cols: dict, lanes: int, rounds: int):
     init = stack_init(gla, lanes)
 
     def round_body(st, round_cols):
-        def chunk_body(s, chunk):
-            s, _ = accumulate_chunk(gla, s, chunk, lanes)
-            return s, None
-        st, _ = lax.scan(chunk_body, st, round_cols)
-        view = fold_merge(gla.merge, st, lanes) if lanes > 1 else st
-        return st, view
+        return scan_round_step(gla, st, round_cols, lanes)
 
     last, views = lax.scan(round_body, init, rcols)
     final_view = fold_merge(gla.merge, last, lanes) if lanes > 1 else last
@@ -223,6 +247,59 @@ def kernel_prefix_states_batched(gla: GLA, shards: dict):
     return _unroll_partitions(lambda c: kernel_prefix_states(gla, c), shards)
 
 
+def kernel_scalar_round_delta(gla: GLA, slice_cols: dict):
+    """Scalar-contract SumState delta for ONE round-slice of a shard.
+
+    One ``shard_chunk_partials`` dispatch over the slice; the within-slice
+    prefix keeps the chunk-sequential association, so the delta is the
+    slice's chunk-ordered total.  Adding deltas round by round is
+    interchangeable — not bitwise-identical — with the whole-shard cumsum of
+    :func:`kernel_prefix_states` (the carry+total regrouping re-associates
+    float adds), exactly like the scalar kernel path is interchangeable with
+    the scan path.  Used by the incremental session driver only.
+    """
+    from repro.core import estimators as E
+    from repro.kernels import ops
+
+    assert gla.kernel_cols is not None, "GLA does not publish kernel_cols"
+    C, L = slice_cols["_mask"].shape
+    flat = {k: v.reshape(C * L) for k, v in slice_cols.items()}
+    vals, weight = gla.kernel_cols(flat)
+    partials = ops.shard_chunk_partials(
+        vals.reshape(C, L), weight.reshape(C, L), slice_cols["_mask"]
+    )  # [C, 4]
+    tot = jnp.cumsum(partials, axis=0)[-1]
+    return E.SumState(sum=tot[0:1], sumsq=tot[1:2], scanned=tot[2],
+                      matched=tot[3])
+
+
+def kernel_round_delta(gla: GLA, slice_cols: dict):
+    """Group-by SumState delta for ONE round-slice: a single ``group_agg``
+    dispatch with ``block_rows`` pinned to the chunk length (chunk-sequential
+    association inside the kernel).  The per-round-slice primitive shared by
+    the monolithic :func:`kernel_rounds_states` loop and the incremental
+    session driver — both fold deltas with the same sequential running sum,
+    so round-boundary states are bitwise-identical across disciplines."""
+    from repro.core import estimators as E
+    from repro.kernels import ops
+
+    assert gla.kernel_cols is not None, "GLA does not publish kernel_cols"
+    assert gla.kernel_num_groups is not None, (
+        "GLA publishes the scalar kernel contract, not the group-by one")
+    per, L = slice_cols["_mask"].shape
+    sl = {k: v.reshape(per * L) for k, v in slice_cols.items()}
+    vals, weight, gids = gla.kernel_cols(sl)
+    w = (weight * sl["_mask"]).astype(jnp.float32)
+    sums, sumsqs, matched = ops.group_agg(
+        vals, w, gids.astype(jnp.int32), num_groups=gla.kernel_num_groups,
+        block_rows=L)
+    return E.SumState(
+        sum=sums, sumsq=sumsqs,
+        scanned=jnp.sum(sl["_mask"].astype(jnp.float32)),
+        matched=matched,
+    )
+
+
 def kernel_rounds_states(gla: GLA, cols: dict, rounds: int):
     """One ``ops.group_agg`` dispatch per round-slice -> group SumState views.
 
@@ -239,31 +316,15 @@ def kernel_rounds_states(gla: GLA, cols: dict, rounds: int):
     running sum over rounds is folded sequentially for the same reason
     (see tests/test_groupby_kernel.py for the bitwise-equality check).
     """
-    from repro.core import estimators as E
-    from repro.kernels import ops
-
-    assert gla.kernel_cols is not None, "GLA does not publish kernel_cols"
-    assert gla.kernel_num_groups is not None, (
-        "GLA publishes the scalar kernel contract, not the group-by one")
     C, L = cols["_mask"].shape
     assert C % rounds == 0, (
         f"group-by kernel path needs C % rounds == 0, got {C} % {rounds}")
     per = C // rounds
-    G = gla.kernel_num_groups
-
-    deltas = []
-    for r in range(rounds):
-        sl = {k: v[r * per:(r + 1) * per].reshape(per * L)
-              for k, v in cols.items()}
-        vals, weight, gids = gla.kernel_cols(sl)
-        w = (weight * sl["_mask"]).astype(jnp.float32)
-        sums, sumsqs, matched = ops.group_agg(
-            vals, w, gids.astype(jnp.int32), num_groups=G, block_rows=L)
-        deltas.append(E.SumState(
-            sum=sums, sumsq=sumsqs,
-            scanned=jnp.sum(sl["_mask"].astype(jnp.float32)),
-            matched=matched,
-        ))
+    deltas = [
+        kernel_round_delta(
+            gla, {k: v[r * per:(r + 1) * per] for k, v in cols.items()})
+        for r in range(rounds)
+    ]
     return _fold_running_sum(deltas)
 
 
@@ -300,6 +361,57 @@ def _bundle_member_projection(member: GLA, sl: dict):
     return vals, weight, gids.astype(jnp.int32), G
 
 
+def bundle_round_deltas(gla: GLA, slice_cols: dict):
+    """Per-member SumState deltas for ONE round-slice of a bundle: every
+    member's kernel projection stacked row-wise into a single ``group_agg``
+    dispatch (gid offsets into one concatenated group table, vals zero-padded
+    to the widest member — see :func:`bundle_kernel_rounds_states` for why
+    members stay value-isolated).  The per-round-slice primitive shared by
+    the monolithic loop and the incremental session driver.  Returns a tuple
+    of one delta per member, matching the bundle's tuple-state layout."""
+    from repro.core import estimators as E
+    from repro.kernels import ops
+
+    members = gla.members
+    assert members, "bundle kernel path needs a GLABundle"
+    per, L = slice_cols["_mask"].shape
+    sl = {k: v.reshape(per * L) for k, v in slice_cols.items()}
+    mask = sl["_mask"].astype(jnp.float32)
+    scanned = jnp.sum(mask)
+    projs = [_bundle_member_projection(m, sl) for m in members]
+    A_max = max(v.shape[1] for v, _, _, _ in projs)
+    offs = []
+    vals_cat, w_cat, gids_cat = [], [], []
+    off = 0
+    for vals, weight, gids, G in projs:
+        offs.append(off)
+        if vals.shape[1] < A_max:
+            vals = jnp.concatenate(
+                [vals, jnp.zeros((vals.shape[0], A_max - vals.shape[1]),
+                                 vals.dtype)], axis=1)
+        vals_cat.append(vals)
+        w_cat.append((weight * sl["_mask"]).astype(jnp.float32))
+        gids_cat.append(gids + jnp.int32(off))
+        off += G
+    sums, sumsqs, matched = ops.group_agg(
+        jnp.concatenate(vals_cat, axis=0),
+        jnp.concatenate(w_cat, axis=0),
+        jnp.concatenate(gids_cat, axis=0),
+        num_groups=off, block_rows=L)
+    deltas = []
+    for i, (vals, _, _, G) in enumerate(projs):
+        o, A = offs[i], vals.shape[1]
+        if members[i].kernel_num_groups is None:
+            deltas.append(E.SumState(
+                sum=sums[o, :1], sumsq=sumsqs[o, :1],
+                scanned=scanned, matched=matched[o]))
+        else:
+            deltas.append(E.SumState(
+                sum=sums[o:o + G, :A], sumsq=sumsqs[o:o + G, :A],
+                scanned=scanned, matched=matched[o:o + G]))
+    return tuple(deltas)
+
+
 def bundle_kernel_rounds_states(gla: GLA, cols: dict, rounds: int):
     """ONE ``ops.group_agg`` dispatch per round-slice for a whole bundle.
 
@@ -317,9 +429,6 @@ def bundle_kernel_rounds_states(gla: GLA, cols: dict, rounds: int):
     kernel).  Returns (tuple of member finals, tuple of member [R] views)
     matching the bundle's tuple-state layout.
     """
-    from repro.core import estimators as E
-    from repro.kernels import ops
-
     members = gla.members
     assert members, "bundle kernel path needs a GLABundle"
     C, L = cols["_mask"].shape
@@ -329,40 +438,10 @@ def bundle_kernel_rounds_states(gla: GLA, cols: dict, rounds: int):
 
     deltas = [[] for _ in members]  # [member][round] -> SumState delta
     for r in range(rounds):
-        sl = {k: v[r * per:(r + 1) * per].reshape(per * L)
-              for k, v in cols.items()}
-        mask = sl["_mask"].astype(jnp.float32)
-        scanned = jnp.sum(mask)
-        projs = [_bundle_member_projection(m, sl) for m in members]
-        A_max = max(v.shape[1] for v, _, _, _ in projs)
-        offs = []
-        vals_cat, w_cat, gids_cat = [], [], []
-        off = 0
-        for vals, weight, gids, G in projs:
-            offs.append(off)
-            if vals.shape[1] < A_max:
-                vals = jnp.concatenate(
-                    [vals, jnp.zeros((vals.shape[0], A_max - vals.shape[1]),
-                                     vals.dtype)], axis=1)
-            vals_cat.append(vals)
-            w_cat.append((weight * sl["_mask"]).astype(jnp.float32))
-            gids_cat.append(gids + jnp.int32(off))
-            off += G
-        sums, sumsqs, matched = ops.group_agg(
-            jnp.concatenate(vals_cat, axis=0),
-            jnp.concatenate(w_cat, axis=0),
-            jnp.concatenate(gids_cat, axis=0),
-            num_groups=off, block_rows=L)
-        for i, (vals, _, _, G) in enumerate(projs):
-            o, A = offs[i], vals.shape[1]
-            if members[i].kernel_num_groups is None:
-                deltas[i].append(E.SumState(
-                    sum=sums[o, :1], sumsq=sumsqs[o, :1],
-                    scanned=scanned, matched=matched[o]))
-            else:
-                deltas[i].append(E.SumState(
-                    sum=sums[o:o + G, :A], sumsq=sumsqs[o:o + G, :A],
-                    scanned=scanned, matched=matched[o:o + G]))
+        per_member = bundle_round_deltas(
+            gla, {k: v[r * per:(r + 1) * per] for k, v in cols.items()})
+        for i, d in enumerate(per_member):
+            deltas[i].append(d)
 
     folded = [_fold_running_sum(member_deltas) for member_deltas in deltas]
     return (tuple(f for f, _ in folded), tuple(v for _, v in folded))
@@ -374,6 +453,16 @@ def bundle_kernel_rounds_states_batched(gla: GLA, shards: dict, rounds: int):
     :func:`_unroll_partitions`)."""
     return _unroll_partitions(
         lambda c: bundle_kernel_rounds_states(gla, c, rounds), shards)
+
+
+# The session drivers' path-name -> per-round-slice primitive table, kept
+# here next to the primitives so the vmapped and sharded steps cannot
+# diverge (repro/core/session.py, repro/dist/shard_engine.py).
+ROUND_DELTA_FNS = {
+    "kernel_scalar": kernel_scalar_round_delta,
+    "kernel_group": kernel_round_delta,
+    "kernel_bundle": bundle_round_deltas,
+}
 
 
 # ---------------------------------------------------------------------------

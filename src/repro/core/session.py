@@ -1,0 +1,579 @@
+"""Interactive OLA sessions — the paper's headline user feature, §1/§3.4.
+
+PF-OLA's promise is that "the user can stop the computation as soon as the
+estimate is accurate enough, typically early in the execution".  The classic
+engine entry points (``engine.run_query``/``run_queries``) execute every
+round of every chunk inside one fused program and only then hand back
+snapshots — confidence bounds can never actually save work.  This module is
+the missing code path: an **incremental round driver** that advances the
+scan one round-slice at a time and evaluates pluggable **stopping rules**
+between rounds, so a query over N rounds that converges at round k pays
+only k/N of the scan.
+
+Execution disciplines (DESIGN.md §7):
+
+  * *fused* — no stopping rule attached and the session is driven straight
+    to completion: one whole-scan program, byte-for-byte the classic
+    ``run_query`` path (``run_query`` itself is now a thin wrapper over a
+    fused session).
+  * *incremental* — a stopping rule is attached, or the caller advances the
+    session manually with :meth:`Session.step`.  Each step jits ONE
+    round-slice (``scan.scan_round_step`` / ``scan.kernel_round_delta`` /
+    ``scan.bundle_round_deltas`` — the same per-round-slice primitives the
+    fused paths fold over all rounds), then merges that round's states
+    across partitions and produces the round's :class:`Estimate`.  The
+    chunk-sequential accumulation order is identical to the fused program,
+    so round-boundary states and finals are bitwise-identical across
+    disciplines on the scan and group/bundle kernel paths
+    (tests/test_session.py); the scalar-kernel path is interchangeable, not
+    bitwise, exactly as it already is vs. the scan path.
+
+Incremental stepping works on **both** engines — the vmapped path here and
+the ``shard_map`` path (``repro.dist.shard_engine.session_step_sharded``)
+— and requires ``mode="async"`` with a partition-uniform schedule (the
+default): the synchronized barrier and per-partition straggler schedules
+are whole-scan semantics and stay on the fused discipline.
+
+Sessions pause and resume across processes: :meth:`Session.pause`
+serializes the per-partition round states plus the scan cursor through
+``repro.checkpoint.ckpt`` and :meth:`Session.resume` continues from the
+exact round boundary — resumed sessions produce bitwise-identical finals
+to uninterrupted ones (the carry is restored bit-exactly and the remaining
+round-slices replay the same program).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Callable, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.core import engine as EN
+from repro.core import scan as SC
+from repro.core.uda import GLA, Estimate
+
+Pytree = Any
+
+_CKPT_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# stopping rules
+# ---------------------------------------------------------------------------
+
+class RoundProgress(NamedTuple):
+    """What a stopping rule sees after each round.
+
+    ``estimates`` is the round's :class:`repro.core.uda.Estimate` — a tuple
+    with one entry per member (``None`` for members without an estimation
+    model) when the session runs a ``GLABundle``, or ``None`` when the GLA
+    publishes no estimator at all.
+    """
+
+    round: int          # rounds completed so far (1-based)
+    rounds_total: int
+    estimates: Any
+    scanned: float      # tuples scanned so far across all partitions
+    d_total: float
+    elapsed_s: float    # driver wall time, accumulated across pause/resume
+
+
+StoppingRule = Callable[[RoundProgress], bool]
+
+
+def _per_estimate(estimates, pred) -> bool:
+    """True when ``pred`` holds for every available member estimate.
+
+    ``None`` (no estimation model anywhere) can never attest convergence.
+    For bundles, members without an estimator are skipped — the members
+    that do estimate decide (this IS the all-queries-converged rule for
+    ``GLABundle`` sessions).
+    """
+    if estimates is None:
+        return False
+    # a bundle's estimates are a plain tuple of per-member Estimates;
+    # Estimate itself is a NamedTuple, so check for it first
+    members = ((estimates,) if isinstance(estimates, Estimate)
+               else tuple(estimates))
+    present = [e for e in members if e is not None]
+    if not present:
+        return False
+    return all(pred(e) for e in present)
+
+
+def _half_widths(est) -> np.ndarray:
+    lo = np.asarray(est.lower, np.float64)
+    hi = np.asarray(est.upper, np.float64)
+    return (hi - lo) / 2.0
+
+
+def rel_width(eps: float, *, min_rounds: int = 1) -> StoppingRule:
+    """Stop once every aggregate's CI half-width ≤ ``eps`` · |estimate|.
+
+    The reduction is a max over all aggregates (and groups): every entry
+    must converge.  Entries with zero half-width (e.g. empty groups, whose
+    variance estimate is exactly 0) count as converged; infinite half-widths
+    (the |S| ≤ 1 variance clamp in early rounds) never do — an undefined
+    variance cannot trigger a premature stop.
+    """
+    def converged(e):
+        half = _half_widths(e)
+        mid = np.abs(np.asarray(e.estimate, np.float64))
+        rel = np.where(half == 0.0, 0.0, half / np.maximum(mid, 1e-300))
+        return bool(rel.size == 0 or np.max(rel) <= eps)
+
+    def rule(prog: RoundProgress) -> bool:
+        if prog.round < min_rounds:
+            return False
+        return _per_estimate(prog.estimates, converged)
+
+    return rule
+
+
+def abs_width(limit: float, *, min_rounds: int = 1) -> StoppingRule:
+    """Stop once every aggregate's CI half-width ≤ ``limit`` (absolute)."""
+    def converged(e):
+        half = _half_widths(e)
+        return bool(half.size == 0 or np.max(half) <= limit)
+
+    def rule(prog: RoundProgress) -> bool:
+        if prog.round < min_rounds:
+            return False
+        return _per_estimate(prog.estimates, converged)
+
+    return rule
+
+
+def budget(*, max_seconds: Optional[float] = None,
+           max_tuples: Optional[float] = None,
+           max_rounds: Optional[int] = None) -> StoppingRule:
+    """Stop when any resource budget is exhausted, converged or not.
+
+    ``max_seconds`` counts driver wall time accumulated across
+    pause/resume; ``max_tuples`` counts scanned tuples across partitions.
+    """
+    def rule(prog: RoundProgress) -> bool:
+        if max_seconds is not None and prog.elapsed_s >= max_seconds:
+            return True
+        if max_tuples is not None and prog.scanned >= max_tuples:
+            return True
+        if max_rounds is not None and prog.round >= max_rounds:
+            return True
+        return False
+
+    return rule
+
+
+def any_of(*rules: StoppingRule) -> StoppingRule:
+    """Stop when ANY rule fires (e.g. converged OR out of time budget)."""
+    return lambda prog: any(r(prog) for r in rules)
+
+
+def all_of(*rules: StoppingRule) -> StoppingRule:
+    """Stop only when EVERY rule fires."""
+    return lambda prog: all(r(prog) for r in rules)
+
+
+# ---------------------------------------------------------------------------
+# per-round jitted step (vmapped engine); the sharded twin lives in
+# repro/dist/shard_engine.py next to the other shard_map programs.
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("gla", "path", "lanes", "confidence",
+                              "all_alive", "first")
+)
+def _step_vmapped(gla: GLA, states, slice_shards: dict, w_r: jnp.ndarray,
+                  d_local: jnp.ndarray, d_total: jnp.ndarray, *, path: str,
+                  lanes: int, confidence: float, all_alive: bool,
+                  first: bool):
+    """Advance one round-slice on the vmapped engine.
+
+    Returns (new per-partition states, per-partition round views, merged
+    round state, round Estimate-or-None).  ``first`` matters only on the
+    kernel paths: the running sum starts from the first delta (not
+    zero + delta), matching ``scan._fold_running_sum`` bit-for-bit.
+    """
+    if path == "scan":
+        new_states, views = jax.vmap(
+            lambda st, c: SC.scan_round_step(gla, st, c, lanes)
+        )(states, slice_shards)
+    else:
+        delta_fn = SC.ROUND_DELTA_FNS[path]
+        P = slice_shards["_mask"].shape[0]
+        # unrolled over partitions for the same reason as
+        # scan._unroll_partitions: Pallas calls stay out of vmap/scan.
+        deltas = [delta_fn(gla, jax.tree.map(lambda x, p=p: x[p],
+                                             slice_shards))
+                  for p in range(P)]
+        delta = jax.tree.map(lambda *xs: jnp.stack(xs), *deltas)
+        new_states = delta if first else jax.tree.map(jnp.add, states, delta)
+        views = new_states
+
+    term = jax.vmap(
+        lambda s, dl: gla.estimator_terminate(s, {"d_local": dl})
+    )(views, d_local)
+    merged = EN._merge_rounds(
+        gla, jax.tree.map(lambda x: x[:, None], term), w_r[:, None],
+        gla.estimator_merge, all_alive)
+    merged = jax.tree.map(lambda x: x[0], merged)
+    est = None
+    if gla.estimate is not None:
+        est = gla.estimate(merged, confidence, {"d_total": d_total})
+    return new_states, views, merged, est
+
+
+@functools.partial(jax.jit, static_argnames=("gla", "all_alive"))
+def _final_vmapped(gla: GLA, views, w_final: jnp.ndarray, *, all_alive: bool):
+    merged = EN._merge_over_partitions(gla, views, w_final, gla.merge,
+                                       all_alive)
+    return gla.terminate(merged)
+
+
+# ---------------------------------------------------------------------------
+# the session
+# ---------------------------------------------------------------------------
+
+class Session:
+    """A long-lived OLA query: advance round by round, stop early, pause.
+
+    Construction validates exactly like :func:`repro.core.engine.run_query`
+    (same emit/kernel contracts, same round-degrade policy).  Drive it with
+
+      * :meth:`run` — to convergence (``stop`` rule) or completion.  With no
+        stopping rule and no prior :meth:`step`, this executes the fused
+        whole-scan program — byte-for-byte the classic engine path.
+      * :meth:`step` — one round-slice; returns the :class:`RoundProgress`
+        the stopping rule saw.  Requires an incrementally-steppable config:
+        ``mode="async"`` with a partition-uniform schedule and no
+        failure-injection ``alive`` schedule.
+      * :meth:`result` — :class:`engine.QueryResult` over the rounds
+        executed so far (early-stopped sessions report the partial-scan
+        final, i.e. the best current answer).
+      * :meth:`pause` / :meth:`resume` — checkpoint between rounds and
+        continue later, bitwise-identically, even in another process.
+    """
+
+    def __init__(self, gla: GLA, shards: dict, *, rounds: int = 8,
+                 schedule: Optional[np.ndarray] = None,
+                 stop: Optional[StoppingRule] = None,
+                 confidence: float = 0.95, mode: str = "async",
+                 emit: str = "chunk", lanes: int = 1, snapshots: bool = True,
+                 alive: Optional[np.ndarray] = None, mesh=None,
+                 axis_name: str = "data", sync_cost_model: bool = True):
+        rounds, schedule = EN.normalize_plan(gla, shards, rounds, schedule,
+                                             emit)
+        self._gla = gla
+        self._shards = shards
+        self._sched = np.asarray(schedule, np.int32)
+        self._rounds = self._sched.shape[1] - 1
+        self._stop = stop
+        self._confidence = float(confidence)
+        self._mode = mode
+        self._emit = emit
+        self._lanes = lanes
+        self._snapshots = snapshots
+        self._mesh = mesh
+        self._axis_name = axis_name
+        self._sync_cost_model = sync_cost_model
+        P, C, L = shards["_mask"].shape
+        self._P, self._C, self._L = P, C, L
+
+        alive_np = None if alive is None else np.asarray(alive)
+        self._alive = alive_np
+        self._all_alive = alive_np is None or bool(np.all(alive_np))
+        alive_arr = (jnp.ones((P,), bool) if alive_np is None
+                     else jnp.asarray(alive_np, bool))
+        self._alive_arr = alive_arr
+        self._w_pr = self._w_final = None  # lazy, with the stats below
+
+        uniform = bool(np.all(self._sched == self._sched[0]))
+        self._incremental_ok = (
+            mode == "async" and uniform
+            and (alive_np is None or alive_np.ndim == 1))
+        if stop is not None and not self._incremental_ok:
+            raise ValueError(
+                "stopping rules need an incrementally-steppable session: "
+                "mode='async' with a partition-uniform schedule and no "
+                "[R, P] failure-injection alive mask (sync barriers and "
+                "straggler schedules are whole-scan semantics)")
+
+        if emit == "kernel":
+            if lanes != 1:
+                raise ValueError("emit='kernel' runs single-lane")
+            self._path = ("kernel_bundle" if gla.members
+                          else "kernel_group" if gla.kernel_num_groups
+                          is not None else "kernel_scalar")
+        else:
+            self._path = "scan"
+
+        # d_local/d_total, merge weights and the per-chunk scanned-tuple
+        # prefix are only consumed by the incremental discipline; computed
+        # lazily on the first step() so a fused-only session (every classic
+        # run_query call, possibly itself under jit) pays nothing for them
+        # — the fused program derives its own copies internally.
+        self._d_local = self._d_total = None
+        self._mask_cum: Optional[np.ndarray] = None
+
+        self._states: Optional[Pytree] = None
+        self._views: Optional[Pytree] = None
+        self._merged: List[Pytree] = []
+        self._ests: List[Any] = []
+        self._steps = 0
+        self._elapsed = 0.0
+        self._converged = False
+        self._fused = False
+        self._result: Optional[EN.QueryResult] = None
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def steps_taken(self) -> int:
+        """Round-slices executed so far (the k in 'pays only k/N')."""
+        return self._steps
+
+    @property
+    def rounds_total(self) -> int:
+        return self._rounds
+
+    @property
+    def converged(self) -> bool:
+        """True once the stopping rule has fired."""
+        return self._converged
+
+    @property
+    def done(self) -> bool:
+        return (self._converged or self._steps >= self._rounds
+                or self._result is not None)
+
+    @property
+    def elapsed_s(self) -> float:
+        return self._elapsed
+
+    # -- the incremental driver ----------------------------------------------
+
+    def _init_states(self) -> Pytree:
+        base = (SC.stack_init(self._gla, self._lanes)
+                if self._path == "scan" else self._gla.init())
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (self._P,) + x.shape), base)
+
+    def _ensure_stats(self) -> None:
+        if self._d_local is None:
+            self._d_local = jnp.sum(self._shards["_mask"], axis=(1, 2))
+            self._d_total = jnp.sum(self._d_local)
+            self._w_pr, self._w_final = SC.round_weights(
+                self._alive_arr, self._rounds)
+
+    def step(self) -> RoundProgress:
+        """Advance one round-slice; evaluate the stopping rule; return what
+        it saw.  Raises on configs that cannot step incrementally."""
+        if self._result is not None:
+            raise RuntimeError("session already ran to completion")
+        if not self._incremental_ok:
+            raise ValueError(
+                "this session cannot step incrementally (sync mode, "
+                "non-uniform schedule, or [R, P] alive schedule) — use "
+                "run(), which executes the fused whole-scan program")
+        if self.done:
+            raise RuntimeError("session is done; call result()")
+        t0 = time.perf_counter()
+        self._ensure_stats()
+        r = self._steps
+        lo, hi = int(self._sched[0, r]), int(self._sched[0, r + 1])
+        slice_shards = {k: v[:, lo:hi] for k, v in self._shards.items()}
+        first = self._path != "scan" and r == 0
+        states = self._states
+        if states is None:
+            states = self._init_states()
+        w_r = self._w_pr[:, r]
+        if self._mesh is None:
+            new_states, views, merged, est = _step_vmapped(
+                self._gla, states, slice_shards, w_r, self._d_local,
+                self._d_total, path=self._path, lanes=self._lanes,
+                confidence=self._confidence, all_alive=self._all_alive,
+                first=first)
+        else:
+            from repro.dist import shard_engine
+            new_states, views, merged, est = shard_engine.session_step_sharded(
+                self._gla, states, slice_shards, w_r, self._d_local,
+                self._d_total, mesh=self._mesh, axis_name=self._axis_name,
+                path=self._path, lanes=self._lanes,
+                confidence=self._confidence, first=first)
+        self._states, self._views = new_states, views
+        self._merged.append(merged)
+        self._ests.append(est)
+        self._steps += 1
+        if self._mask_cum is None:
+            self._mask_cum = np.cumsum(
+                np.asarray(jnp.sum(self._shards["_mask"], axis=2)), axis=1)
+        scanned = float(self._mask_cum[:, hi - 1].sum()) if hi else 0.0
+        self._elapsed += time.perf_counter() - t0
+        prog = RoundProgress(
+            round=self._steps, rounds_total=self._rounds, estimates=est,
+            scanned=scanned, d_total=float(self._d_total),
+            elapsed_s=self._elapsed)
+        if self._stop is not None and self._stop(prog):
+            self._converged = True
+        return prog
+
+    def run(self) -> EN.QueryResult:
+        """Drive to convergence or completion and return the result."""
+        if self._result is not None:
+            return self._result
+        if self._steps == 0 and (self._stop is None
+                                 or not self._incremental_ok):
+            t0 = time.perf_counter()
+            self._fused = True
+            self._result = EN._execute_full(
+                self._gla, self._shards, jnp.asarray(self._sched),
+                self._alive_arr, mode=self._mode, emit=self._emit,
+                lanes=self._lanes, snapshots=self._snapshots,
+                confidence=self._confidence, all_alive=self._all_alive,
+                mesh=self._mesh, axis_name=self._axis_name,
+                sync_cost_model=self._sync_cost_model)
+            self._elapsed += time.perf_counter() - t0
+            self._steps = self._rounds
+            return self._result
+        while not self.done:
+            self.step()
+        return self.result()
+
+    def result(self) -> EN.QueryResult:
+        """QueryResult over the rounds executed so far.
+
+        ``final`` is Terminate(Merge of the current per-partition states) —
+        the full-scan answer when the session completed.  For an
+        early-stopped session it is the raw partial aggregate over the
+        scanned prefix (Terminate does not extrapolate); the anytime
+        *answer* is the last round's ``estimates`` entry, whose CI is what
+        the stopping rule certified.  ``snapshots``/``estimates`` stack the
+        executed rounds, leaves ``[steps_taken, ...]``.
+        """
+        if self._result is not None:
+            return self._result
+        if self._steps == 0:
+            raise RuntimeError("no rounds executed yet — step() or run()")
+        if self._mesh is None:
+            final = _final_vmapped(self._gla, self._views, self._w_final,
+                                   all_alive=self._all_alive)
+        else:
+            from repro.dist import shard_engine
+            final = shard_engine.session_final_sharded(
+                self._gla, self._views, self._w_final, mesh=self._mesh,
+                axis_name=self._axis_name)
+        snaps = jax.tree.map(lambda *xs: jnp.stack(xs), *self._merged)
+        ests = None
+        if self._ests and self._ests[0] is not None:
+            ests = jax.tree.map(lambda *xs: jnp.stack(xs), *self._ests)
+        res = EN.QueryResult(final, snaps, ests, self._d_total, self._d_local)
+        if self.done:
+            self._result = res
+        return res
+
+    # -- pause / resume ------------------------------------------------------
+
+    def _meta(self) -> dict:
+        return {
+            "version": _CKPT_VERSION, "gla": self._gla.name,
+            "rounds": self._rounds, "steps": self._steps,
+            "emit": self._emit, "mode": self._mode, "lanes": self._lanes,
+            "confidence": self._confidence, "path": self._path,
+            "P": self._P, "C": self._C, "L": self._L,
+            # the scan cursor is only meaningful against the exact same
+            # round boundaries and liveness weights, so both round-trip
+            "schedule": self._sched.tolist(),
+            "alive": (None if self._alive is None
+                      else np.asarray(self._alive, int).tolist()),
+            "elapsed_s": self._elapsed, "converged": self._converged,
+        }
+
+    def _payload_like(self, steps: int) -> dict:
+        """Shape/structure skeleton of the checkpoint payload, rebuilt from
+        the session config so deserialization never needs live state.  The
+        vmapped step's output structure is identical to the sharded one
+        (global shapes), so one eval_shape serves both engines."""
+        self._ensure_stats()
+        per0 = max(1, int(self._sched[0, 1] - self._sched[0, 0]))
+        slice_like = {
+            k: jax.ShapeDtypeStruct((v.shape[0], per0) + v.shape[2:], v.dtype)
+            for k, v in self._shards.items()
+        }
+        states_like = jax.eval_shape(self._init_states)
+        st, views, merged, est = _step_vmapped.eval_shape(
+            self._gla, states_like, slice_like,
+            jax.ShapeDtypeStruct((self._P,), jnp.float32),
+            jax.ShapeDtypeStruct(self._d_local.shape, self._d_local.dtype),
+            jax.ShapeDtypeStruct(self._d_total.shape, self._d_total.dtype),
+            path=self._path, lanes=self._lanes,
+            confidence=self._confidence, all_alive=self._all_alive,
+            first=self._path != "scan")
+        return {"states": st, "views": views,
+                "merged": (merged,) * steps, "ests": (est,) * steps}
+
+    def pause(self, path) -> None:
+        """Checkpoint the session between rounds (Serialize, paper Table 1).
+
+        Stores the per-partition scan carry, per-round merged states and
+        estimates, and the scan cursor.  Resume with :meth:`Session.resume`
+        — in this process or another — and drive on: the remaining rounds
+        replay the exact program, so finals are bitwise-identical to an
+        uninterrupted session.
+        """
+        if self._fused:
+            raise RuntimeError(
+                "session ran the fused whole-scan program — there is no "
+                "incremental carry to pause; attach a stopping rule or "
+                "step() to run incrementally")
+        blob = b""
+        if self._steps:
+            payload = {"states": self._states, "views": self._views,
+                       "merged": tuple(self._merged),
+                       "ests": tuple(self._ests)}
+            blob = ckpt.serialize_state(payload)
+        ckpt.save_envelope(path, self._meta(), blob)
+
+    @classmethod
+    def resume(cls, path, gla: GLA, shards: dict, *,
+               stop: Optional[StoppingRule] = None, mesh=None,
+               axis_name: str = "data") -> "Session":
+        """Rebuild a paused session from ``path`` + the original gla/shards.
+
+        The checkpoint stores configuration and state but not code or data:
+        the caller supplies the same GLA and shards (validated against the
+        stored fingerprint).  ``stop`` is attached fresh — rules are
+        closures and do not serialize.
+        """
+        meta, blob = ckpt.load_envelope(path)
+        if meta.get("version") != _CKPT_VERSION:
+            raise ValueError(
+                f"unsupported session checkpoint version: {meta.get('version')}")
+        alive = (None if meta["alive"] is None
+                 else np.asarray(meta["alive"], bool))
+        sess = cls(gla, shards, rounds=meta["rounds"], stop=stop,
+                   schedule=np.asarray(meta["schedule"], np.int32),
+                   alive=alive, confidence=meta["confidence"],
+                   mode=meta["mode"], emit=meta["emit"],
+                   lanes=meta["lanes"], mesh=mesh, axis_name=axis_name)
+        got = {"gla": gla.name, "P": sess._P, "C": sess._C, "L": sess._L,
+               "rounds": sess._rounds}
+        for k, v in got.items():
+            if meta[k] != v:
+                raise ValueError(
+                    f"checkpoint mismatch: {k} was {meta[k]!r} at pause "
+                    f"time, got {v!r} now")
+        if meta["steps"]:
+            payload = ckpt.deserialize_state(
+                blob, like=sess._payload_like(meta["steps"]))
+            sess._states = payload["states"]
+            sess._views = payload["views"]
+            sess._merged = list(payload["merged"])
+            sess._ests = list(payload["ests"])
+        sess._steps = meta["steps"]
+        sess._elapsed = meta["elapsed_s"]
+        sess._converged = meta["converged"]
+        return sess

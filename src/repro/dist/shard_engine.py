@@ -146,6 +146,73 @@ def _run_sharded_jit(gla: GLA, shards: dict, sched: jnp.ndarray,
     return fn(shards, sched, alive2d)
 
 
+# ---------------------------------------------------------------------------
+# incremental session steps (repro/core/session.py, DESIGN.md §7): the same
+# per-round-slice primitives the fused program folds over all rounds, jitted
+# standalone with partitions on the mesh axis.  One psum per step merges the
+# round's estimator states; the scan carry stays sharded between steps.
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("gla", "mesh", "axis_name", "path", "lanes",
+                              "confidence", "first"),
+)
+def session_step_sharded(gla: GLA, states, slice_shards: dict,
+                         w_r: jnp.ndarray, d_local: jnp.ndarray,
+                         d_total: jnp.ndarray, *, mesh, axis_name: str,
+                         path: str, lanes: int, confidence: float,
+                         first: bool):
+    """Advance one round-slice with partitions on ``axis_name``.
+
+    Same contract as ``session._step_vmapped``: returns (new per-partition
+    states, per-partition round views, merged round state, round
+    Estimate-or-None).  ``first`` starts the kernel-path running sum from
+    the first delta, matching ``scan._fold_running_sum`` bit-for-bit.
+    """
+    def worker(st, cols, w_p, dl):
+        st = jax.tree.map(lambda x: x[0], st)
+        cols = jax.tree.map(lambda x: x[0], cols)
+        w = w_p[0]
+        dl = dl[0]
+        if path == "scan":
+            new_st, view = SC.scan_round_step(gla, st, cols, lanes)
+        else:
+            delta = SC.ROUND_DELTA_FNS[path](gla, cols)
+            new_st = delta if first else jax.tree.map(jnp.add, st, delta)
+            view = new_st
+        term = gla.estimator_terminate(view, {"d_local": dl})
+        merged = lax.psum(
+            jax.tree.map(lambda x: x * w.astype(x.dtype), term), axis_name)
+        return (jax.tree.map(lambda x: x[None], new_st),
+                jax.tree.map(lambda x: x[None], view), merged)
+
+    from jax.sharding import PartitionSpec as PS
+    pspec = PS(axis_name)
+    fn = _shard_map(worker, mesh, (pspec, pspec, pspec, pspec),
+                    (pspec, pspec, PS()))
+    new_states, views, merged = fn(states, slice_shards, w_r, d_local)
+    est = None
+    if gla.estimate is not None:
+        est = gla.estimate(merged, confidence, {"d_total": d_total})
+    return new_states, views, merged, est
+
+
+@functools.partial(jax.jit, static_argnames=("gla", "mesh", "axis_name"))
+def session_final_sharded(gla: GLA, views, w_final: jnp.ndarray, *, mesh,
+                          axis_name: str):
+    """Merge the current per-partition round views into the session final —
+    the same weighted psum the fused program ends with."""
+    def worker(v, w_p):
+        v = jax.tree.map(lambda x: x[0], v)
+        merged = lax.psum(
+            jax.tree.map(lambda x: x * w_p[0].astype(x.dtype), v), axis_name)
+        return merged
+
+    from jax.sharding import PartitionSpec as PS
+    fn = _shard_map(worker, mesh, (PS(axis_name), PS(axis_name)), PS())
+    return gla.terminate(fn(views, w_final))
+
+
 @functools.partial(jax.jit, static_argnames=("gla", "confidence"))
 def _estimates_jit(gla: GLA, merged_rounds, d_total, confidence: float):
     return jax.vmap(

@@ -1,0 +1,488 @@
+"""Early-termination sessions: incremental round driver vs the fused
+program (bitwise), stopping-rule semantics, pause/resume, both engines."""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, gla, randomize
+from repro.core import session as S
+from repro.data import tpch
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+ROWS = 60_000
+PARTS = 4
+ROUNDS = 16
+
+
+def _tobytes(tree):
+    return [np.asarray(x).tobytes() for x in jax.tree.leaves(tree)]
+
+
+@pytest.fixture(scope="module")
+def shards():
+    cols = tpch.generate_lineitem(ROWS, seed=11)
+    parts = randomize.randomize_global(
+        {k: jnp.asarray(v) for k, v in cols.items()}, jax.random.key(2),
+        PARTS)
+    n_chunks = -(-ROWS // PARTS // 256)
+    return randomize.pack_partitions(
+        parts, chunk_len=256, min_chunks=-(-n_chunks // ROUNDS) * ROUNDS)
+
+
+def _wide_q6(d_total=float(ROWS), window=(0, 1460)):
+    """Q6-style selective SUM that reaches 1% relative error mid-scan."""
+    def func(c):
+        return c["quantity"]
+
+    def cond(c):
+        sd = c["shipdate"]
+        return ((sd >= window[0]) & (sd < window[1])).astype(jnp.float32)
+
+    return gla.make_sum_gla(func, cond, d_total=d_total)
+
+
+def _rel_widths(res) -> np.ndarray:
+    lo = np.asarray(res.estimates.lower, np.float64)
+    hi = np.asarray(res.estimates.upper, np.float64)
+    mid = np.asarray(res.estimates.estimate, np.float64)
+    return (hi - lo) / 2.0 / np.abs(mid)
+
+
+# ---------------------------------------------------------------------------
+# incremental discipline == fused program, bitwise
+# ---------------------------------------------------------------------------
+
+def test_incremental_matches_fused_bitwise(shards):
+    """Manually stepped session == classic run_query: final, snapshots and
+    estimates byte-for-byte (same per-round-slice primitives, same
+    association order)."""
+    q = _wide_q6()
+    fused = engine.run_query(q, shards, rounds=ROUNDS, emit="chunk")
+    sess = S.Session(q, shards, rounds=ROUNDS, emit="chunk")
+    while not sess.done:
+        sess.step()
+    inc = sess.result()
+    assert _tobytes(inc.final) == _tobytes(fused.final)
+    assert _tobytes(inc.snapshots) == _tobytes(fused.snapshots)
+    assert _tobytes(inc.estimates) == _tobytes(fused.estimates)
+
+
+def test_incremental_matches_fused_kernel_group(shards):
+    """Group-by kernel dispatch: per-round-slice deltas folded incrementally
+    are bitwise-identical to the fused per-round-slice loop."""
+    gq = gla.make_groupby_gla(
+        tpch.q1_func, tpch.q1_cond, tpch.q1_group_small, num_groups=4,
+        d_total=float(ROWS), num_aggs=4)
+    fused = engine.run_query(gq, shards, rounds=ROUNDS, emit="kernel")
+    sess = S.Session(gq, shards, rounds=ROUNDS, emit="kernel",
+                     stop=S.abs_width(-1.0))
+    inc = sess.run()
+    assert sess.steps_taken == ROUNDS
+    assert _tobytes(inc.final) == _tobytes(fused.final)
+    assert _tobytes(inc.snapshots) == _tobytes(fused.snapshots)
+
+
+def test_incremental_kernel_scalar_interchangeable(shards):
+    """Scalar-kernel path: incremental deltas re-associate the whole-shard
+    cumsum, so interchangeable (allclose), not bitwise — same contract the
+    scalar kernel already has vs the scan path."""
+    q = _wide_q6()
+    fused = engine.run_query(q, shards, rounds=ROUNDS, emit="kernel")
+    sess = S.Session(q, shards, rounds=ROUNDS, emit="kernel",
+                     stop=S.abs_width(-1.0))
+    inc = sess.run()
+    np.testing.assert_allclose(float(inc.final), float(fused.final),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(inc.estimates.estimate),
+                               np.asarray(fused.estimates.estimate),
+                               rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# stopping rules
+# ---------------------------------------------------------------------------
+
+def test_q6_style_early_stop_pays_fewer_round_slices(shards):
+    """The acceptance property: a Q6-style query with a 1%-relative-error
+    stopping rule terminates after strictly fewer round-slices than the
+    full scan, at exactly the first round whose CI meets the rule — while
+    run_query without a rule stays bitwise-identical to the session-driven
+    full scan."""
+    q = _wide_q6()
+    full = engine.run_query(q, shards, rounds=ROUNDS, emit="chunk")
+    w = _rel_widths(full)
+    k_expect = int(np.argmax(w <= 0.01)) + 1
+    assert 1 < k_expect < ROUNDS, f"tune the fixture: crossing at {k_expect}"
+
+    sess = S.Session(q, shards, rounds=ROUNDS, emit="chunk",
+                     stop=S.rel_width(0.01))
+    res = sess.run()
+    assert sess.converged
+    assert sess.steps_taken == k_expect
+    assert sess.steps_taken < ROUNDS
+    assert np.asarray(res.estimates.estimate).shape[0] == k_expect
+    # the early rounds it did execute are the fused program's rounds, bitwise
+    assert _tobytes(res.snapshots) == _tobytes(
+        jax.tree.map(lambda x: x[:k_expect], full.snapshots))
+    # run_query without a stop rule is untouched by the session refactor
+    again = engine.run_query(q, shards, rounds=ROUNDS, emit="chunk")
+    assert _tobytes(again.final) == _tobytes(full.final)
+
+
+def test_eps_hit_exactly_at_round_boundary(shards):
+    """eps equal to a round's achieved width stops exactly at that round
+    (estimates are deterministic, so the comparison is exact)."""
+    q = _wide_q6()
+    w = _rel_widths(engine.run_query(q, shards, rounds=ROUNDS, emit="chunk"))
+    k = ROUNDS // 3  # 0-based round index; widths are decreasing here
+    assert np.all(w[:k] > w[k])
+    sess = S.Session(q, shards, rounds=ROUNDS, emit="chunk",
+                     stop=S.rel_width(float(w[k])))
+    sess.run()
+    assert sess.converged and sess.steps_taken == k + 1
+
+
+def test_never_hit_falls_through_to_full_scan(shards):
+    """An unsatisfiable rule runs every round; the result is the full-scan
+    answer, bitwise vs run_query."""
+    q = _wide_q6()
+    sess = S.Session(q, shards, rounds=ROUNDS, emit="chunk",
+                     stop=S.abs_width(-1.0))
+    res = sess.run()
+    assert sess.steps_taken == ROUNDS and not sess.converged
+    full = engine.run_query(q, shards, rounds=ROUNDS, emit="chunk")
+    assert _tobytes(res.final) == _tobytes(full.final)
+    assert _tobytes(res.estimates) == _tobytes(full.estimates)
+
+
+def test_rounds_one_schedule(shards):
+    """rounds=1: a single step IS the full scan, with and without a rule."""
+    q = _wide_q6()
+    full = engine.run_query(q, shards, rounds=1, emit="chunk")
+    sess = S.Session(q, shards, rounds=1, emit="chunk",
+                     stop=S.rel_width(1e9))
+    res = sess.run()
+    assert sess.steps_taken == 1
+    assert _tobytes(res.final) == _tobytes(full.final)
+    sess2 = S.Session(q, shards, rounds=1, emit="chunk")
+    sess2.step()
+    assert sess2.done
+    assert _tobytes(sess2.result().final) == _tobytes(full.final)
+
+
+def test_infinite_variance_rounds_never_stop_prematurely():
+    """|S| <= 1 clamps the variance to +inf (estimators.variance_estimate);
+    an infinite half-width must not satisfy any width rule, no matter how
+    loose — the stop fires at the first round with a defined variance."""
+    vals = np.array([3.0, 1.0, 4.0, 1.0, 5.0, 9.0], np.float32)
+    shards1 = {
+        "_mask": jnp.ones((1, 6, 1), jnp.float32),
+        "v": jnp.asarray(vals).reshape(1, 6, 1),
+    }
+    q = gla.make_sum_gla(lambda c: c["v"],
+                         lambda c: jnp.ones_like(c["v"]), d_total=6.0)
+    for rule in (S.rel_width(1e12), S.abs_width(1e12)):
+        sess = S.Session(q, shards1, rounds=6, emit="chunk", stop=rule)
+        prog = sess.step()
+        half = float(np.asarray(prog.estimates.upper)
+                     - np.asarray(prog.estimates.lower)) / 2.0
+        assert np.isinf(half)  # one scanned tuple: undefined variance
+        assert not sess.converged
+        sess.run()
+        assert sess.steps_taken == 2  # round 2: |S| = 2, variance defined
+
+
+def test_budget_rules(shards):
+    q = _wide_q6()
+    sess = S.Session(q, shards, rounds=ROUNDS, emit="chunk",
+                     stop=S.budget(max_rounds=3))
+    sess.run()
+    assert sess.steps_taken == 3
+    # tuple budget: half the dataset -> stops once scanned >= it
+    sess2 = S.Session(q, shards, rounds=ROUNDS, emit="chunk",
+                      stop=S.budget(max_tuples=ROWS / 2))
+    sess2.run()
+    assert sess2.steps_taken < ROUNDS
+    prog_scanned = float(np.asarray(
+        sess2.result().snapshots.scanned)[-1])
+    assert prog_scanned >= ROWS / 2
+    # seconds budget: 0 fires after the first round (never before one)
+    sess3 = S.Session(q, shards, rounds=ROUNDS, emit="chunk",
+                      stop=S.budget(max_seconds=0.0))
+    sess3.run()
+    assert sess3.steps_taken == 1
+    # any_of combinator: whichever fires first
+    sess4 = S.Session(q, shards, rounds=ROUNDS, emit="chunk",
+                      stop=S.any_of(S.rel_width(1e-30),
+                                    S.budget(max_rounds=2)))
+    sess4.run()
+    assert sess4.steps_taken == 2
+
+
+def test_bundle_all_queries_converged(shards):
+    """GLABundle sessions stop only when EVERY member's estimator meets the
+    rule — the all-queries-converged semantics of run_queries(stop=...)."""
+    fast, slow = _wide_q6(), _wide_q6(window=(0, 400))
+    eps = 0.02
+    ks = []
+    for q in (fast, slow):
+        w = _rel_widths(engine.run_query(q, shards, rounds=ROUNDS,
+                                         emit="round"))
+        ks.append(int(np.argmax(w <= eps)) + 1)
+    assert ks[0] < ks[1] < ROUNDS, f"tune the fixture: crossings {ks}"
+    res = engine.run_queries([fast, slow], shards, rounds=ROUNDS,
+                             emit="round", stop=S.rel_width(eps))
+    assert np.asarray(res[0].estimates.estimate).shape[0] == max(ks)
+    # each member's executed rounds are its solo rounds, bitwise
+    solo = engine.run_query(slow, shards, rounds=ROUNDS, emit="round")
+    assert _tobytes(res[1].snapshots) == _tobytes(
+        jax.tree.map(lambda x: x[:max(ks)], solo.snapshots))
+
+
+# ---------------------------------------------------------------------------
+# pause / resume
+# ---------------------------------------------------------------------------
+
+def test_pause_resume_mid_scan_bitwise(shards, tmp_path):
+    """Pause at a round boundary, resume (fresh Session object, state
+    restored through the checkpoint file), drive on: final and snapshots
+    bitwise-identical to an uninterrupted run."""
+    q = _wide_q6()
+    full = engine.run_query(q, shards, rounds=ROUNDS, emit="chunk")
+    sess = S.Session(q, shards, rounds=ROUNDS, emit="chunk")
+    for _ in range(ROUNDS // 2):
+        sess.step()
+    ck = tmp_path / "mid.ckpt"
+    sess.pause(ck)
+    res_sess = S.Session.resume(ck, q, shards)
+    assert res_sess.steps_taken == ROUNDS // 2
+    while not res_sess.done:
+        res_sess.step()
+    res = res_sess.result()
+    assert _tobytes(res.final) == _tobytes(full.final)
+    assert _tobytes(res.snapshots) == _tobytes(full.snapshots)
+    assert _tobytes(res.estimates) == _tobytes(full.estimates)
+
+
+def test_pause_resume_kernel_group_bitwise(shards, tmp_path):
+    """Same equivalence on the group-by kernel dispatch path (running-sum
+    carry restored bit-exactly, including the first-delta discipline)."""
+    gq = gla.make_groupby_gla(
+        tpch.q1_func, tpch.q1_cond, tpch.q1_group_small, num_groups=4,
+        d_total=float(ROWS), num_aggs=4)
+    fused = engine.run_query(gq, shards, rounds=ROUNDS, emit="kernel")
+    sess = S.Session(gq, shards, rounds=ROUNDS, emit="kernel")
+    sess.step()  # pause after the FIRST delta: carry = delta, not zero+delta
+    ck = tmp_path / "kern.ckpt"
+    sess.pause(ck)
+    back = S.Session.resume(ck, gq, shards)
+    while not back.done:
+        back.step()
+    assert _tobytes(back.result().final) == _tobytes(fused.final)
+
+
+def test_pause_resume_roundtrips_schedule_and_alive(shards, tmp_path):
+    """The checkpoint carries the round schedule and alive mask: a resumed
+    session must replay the SAME boundaries and liveness weights, not
+    freshly defaulted ones (regression: the cursor applied to a default
+    uniform schedule silently skips/repeats chunks)."""
+    q = _wide_q6()
+    C = shards["_mask"].shape[1]
+    # partition-uniform but non-equal round widths: steppable, != default
+    bounds = np.array([0, C // 8, C // 2, C], np.int32)
+    sched = np.broadcast_to(bounds, (PARTS, 4)).copy()
+    ref = S.Session(q, shards, schedule=sched, emit="chunk")
+    while not ref.done:
+        ref.step()
+    sess = S.Session(q, shards, schedule=sched, emit="chunk")
+    sess.step()
+    ck = tmp_path / "sched.ckpt"
+    sess.pause(ck)
+    back = S.Session.resume(ck, q, shards)
+    while not back.done:
+        back.step()
+    assert _tobytes(back.result().final) == _tobytes(ref.result().final)
+    assert _tobytes(back.result().snapshots) == _tobytes(
+        ref.result().snapshots)
+    # static alive mask: the dead partition must stay dead after resume
+    alive = np.array([True, True, True, False])
+    ref_a = S.Session(q, shards, rounds=4, emit="chunk", alive=alive)
+    while not ref_a.done:
+        ref_a.step()
+    half = S.Session(q, shards, rounds=4, emit="chunk", alive=alive)
+    half.step()
+    ck2 = tmp_path / "alive.ckpt"
+    half.pause(ck2)
+    back_a = S.Session.resume(ck2, q, shards)
+    while not back_a.done:
+        back_a.step()
+    assert _tobytes(back_a.result().final) == _tobytes(ref_a.result().final)
+
+
+def test_resume_validates_fingerprint(shards, tmp_path):
+    q = _wide_q6()
+    sess = S.Session(q, shards, rounds=ROUNDS, emit="chunk")
+    sess.step()
+    ck = tmp_path / "fp.ckpt"
+    sess.pause(ck)
+    other = _wide_q6().with_(name="imposter")
+    with pytest.raises(ValueError, match="checkpoint mismatch"):
+        S.Session.resume(ck, other, shards)
+    small = {k: v[:, :ROUNDS] for k, v in shards.items()}
+    with pytest.raises(ValueError, match="checkpoint mismatch"):
+        S.Session.resume(ck, q, small)
+
+
+# ---------------------------------------------------------------------------
+# contract errors
+# ---------------------------------------------------------------------------
+
+def test_stop_rules_need_incremental_configs(shards):
+    q = _wide_q6()
+    with pytest.raises(ValueError, match="incrementally-steppable"):
+        S.Session(q, shards, rounds=4, mode="sync", stop=S.rel_width(0.1))
+    sched = engine.straggler_schedule(PARTS, shards["_mask"].shape[1], 4,
+                                     speeds=[1, 1, 2, 4], seed=3)
+    with pytest.raises(ValueError, match="incrementally-steppable"):
+        S.Session(q, shards, schedule=sched, stop=S.rel_width(0.1))
+    # without a rule those configs still run — on the fused program
+    sess = S.Session(q, shards, rounds=4, mode="sync")
+    with pytest.raises(ValueError, match="cannot step"):
+        sess.step()
+    res = sess.run()
+    full = engine.run_query(q, shards, rounds=4, mode="sync")
+    assert _tobytes(res.final) == _tobytes(full.final)
+
+
+def test_step_and_result_lifecycle(shards):
+    q = _wide_q6()
+    sess = S.Session(q, shards, rounds=2, emit="chunk")
+    with pytest.raises(RuntimeError, match="no rounds executed"):
+        sess.result()
+    sess.step()
+    sess.step()
+    with pytest.raises(RuntimeError, match="done"):
+        sess.step()
+    sess.result()
+    # a fused run cannot be paused (there is no incremental carry)
+    done = S.Session(q, shards, rounds=2, emit="chunk")
+    done.run()
+    with pytest.raises(RuntimeError, match="fused"):
+        done.pause("/tmp/never-written.ckpt")
+    # emit='kernel' is single-lane on BOTH disciplines, rejected up front
+    with pytest.raises(ValueError, match="single-lane"):
+        S.Session(q, shards, rounds=2, emit="kernel", lanes=2)
+
+
+def test_pause_after_incremental_run(shards, tmp_path):
+    """The README sequence: run() with a rule, read the result, THEN
+    pause — an incrementally-run session stays checkpointable, and the
+    resumed session is immediately done with the same result."""
+    q = _wide_q6()
+    sess = S.Session(q, shards, rounds=ROUNDS, emit="chunk",
+                     stop=S.rel_width(0.01))
+    res = sess.run()
+    assert sess.converged
+    ck = tmp_path / "after-run.ckpt"
+    sess.pause(ck)
+    back = S.Session.resume(ck, q, shards)
+    assert back.done and back.converged
+    assert back.steps_taken == sess.steps_taken
+    assert _tobytes(back.result().final) == _tobytes(res.final)
+    assert _tobytes(back.result().snapshots) == _tobytes(res.snapshots)
+
+
+# ---------------------------------------------------------------------------
+# sharded engine (fake devices)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 devices (CI multi-device job sets "
+                           "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+def test_session_sharded_inprocess(tmp_path):
+    """Multi-device CI job: incremental sharded session == fused sharded
+    program bitwise; early stop pays fewer round-slices; pause/resume."""
+    rows = 40_000
+    cols = tpch.generate_lineitem(rows, seed=4)
+    parts = randomize.randomize_global(
+        {k: jnp.asarray(v) for k, v in cols.items()}, jax.random.key(1), 8)
+    n_chunks = -(-rows // 8 // 128)
+    shards8 = randomize.pack_partitions(
+        parts, chunk_len=128, min_chunks=-(-n_chunks // 8) * 8)
+    mesh = jax.make_mesh((8,), ("data",))
+    q = _wide_q6(d_total=float(rows))
+    fused = engine.run_query(q, shards8, rounds=8, emit="chunk", mesh=mesh)
+    sess = S.Session(q, shards8, rounds=8, emit="chunk", mesh=mesh,
+                     stop=S.abs_width(-1.0))
+    res = sess.run()
+    assert sess.steps_taken == 8
+    assert _tobytes(res.final) == _tobytes(fused.final)
+    assert _tobytes(res.snapshots) == _tobytes(fused.snapshots)
+    early = S.Session(q, shards8, rounds=8, emit="chunk", mesh=mesh,
+                      stop=S.rel_width(0.02))
+    early.run()
+    assert early.converged and early.steps_taken < 8
+    half = S.Session(q, shards8, rounds=8, emit="chunk", mesh=mesh)
+    for _ in range(4):
+        half.step()
+    ck = tmp_path / "shard.ckpt"
+    half.pause(ck)
+    back = S.Session.resume(ck, q, shards8, mesh=mesh)
+    while not back.done:
+        back.step()
+    assert _tobytes(back.result().final) == _tobytes(fused.final)
+
+
+@pytest.mark.slow
+def test_session_sharded_matches_vmapped_subprocess():
+    """Single-device environments: same assertions in a subprocess with 8
+    fake devices (XLA_FLAGS must precede the jax import)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, %r)
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import engine, gla, randomize, session as S
+        from repro.data import tpch
+        rows = 40_000
+        cols = tpch.generate_lineitem(rows, seed=4)
+        parts = randomize.randomize_global(
+            {k: jnp.asarray(v) for k, v in cols.items()}, jax.random.key(1), 8)
+        n_chunks = -(-rows // 8 // 128)
+        shards = randomize.pack_partitions(
+            parts, chunk_len=128, min_chunks=-(-n_chunks // 8) * 8)
+        mesh = jax.make_mesh((8,), ("data",))
+        def func(c): return c["quantity"]
+        def cond(c):
+            return ((c["shipdate"] >= 0) & (c["shipdate"] < 1460)).astype(jnp.float32)
+        q = gla.make_sum_gla(func, cond, d_total=float(rows))
+        fused_v = engine.run_query(q, shards, rounds=8, emit="chunk")
+        fused_s = engine.run_query(q, shards, rounds=8, emit="chunk", mesh=mesh)
+        sess = S.Session(q, shards, rounds=8, emit="chunk", mesh=mesh,
+                         stop=S.abs_width(-1.0))
+        res = sess.run()
+        assert sess.steps_taken == 8
+        for a, b in zip(jax.tree.leaves(res.final), jax.tree.leaves(fused_s.final)):
+            assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+        for a, b in zip(jax.tree.leaves(res.snapshots),
+                        jax.tree.leaves(fused_s.snapshots)):
+            assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+        # incremental sharded == vmapped too (one scan core)
+        for a, b in zip(jax.tree.leaves(res.final), jax.tree.leaves(fused_v.final)):
+            assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+        early = S.Session(q, shards, rounds=8, emit="chunk", mesh=mesh,
+                          stop=S.rel_width(0.02))
+        early.run()
+        assert early.converged and early.steps_taken < 8, early.steps_taken
+        print("OK")
+    """ % str(SRC))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
