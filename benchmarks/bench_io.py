@@ -15,9 +15,31 @@ and ``derived`` (dict of derived quantities, e.g. overhead ratios).
 from __future__ import annotations
 
 import json
+import time
 from pathlib import Path
 
 OUT_DIR = Path(__file__).resolve().parent / "out"
+
+
+def time_interleaved(fns, repeats: int, *, warmup: bool = True):
+    """Interleaved min-of-repeats over zero-arg callables, in microseconds.
+
+    The shared timing idiom of the benchmark tree: every contender runs
+    once per repeat in round-robin order, so cache/allocator drift hits
+    all of them equally, and the min discards external jitter.  Callables
+    must block on their own results (``jax.block_until_ready``).
+    """
+    fns = list(fns)
+    if warmup:
+        for fn in fns:  # compile + page caches
+            fn()
+    ts = [[] for _ in fns]
+    for _ in range(repeats):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            fn()
+            ts[i].append(time.perf_counter() - t0)
+    return [min(t) * 1e6 for t in ts]
 
 
 def emit(bench: str, rows: list, extra: dict | None = None) -> Path:

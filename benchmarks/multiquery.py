@@ -33,6 +33,11 @@ import time
 import jax
 import numpy as np
 
+try:
+    from benchmarks import bench_io
+except ImportError:  # direct script invocation: benchmarks/ is sys.path[0]
+    import bench_io
+
 from repro.analysis import hlo_cost as HC
 from repro.core import engine, gla, randomize
 from repro.data import tpch
@@ -89,14 +94,13 @@ def _finals(results):
 
 
 def _time_interleaved(fns, shards, repeats):
-    """fns: dict name -> compiled callable; min-of-repeats per name."""
-    ts = {k: [] for k in fns}
-    for _ in range(repeats):
-        for k, fn in fns.items():
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn(shards))
-            ts[k].append(time.perf_counter() - t0)
-    return {k: min(v) for k, v in ts.items()}
+    """fns: dict name -> compiled callable; min-of-repeats seconds per
+    name, via the shared bench_io interleaved timer."""
+    names = list(fns)
+    us = bench_io.time_interleaved(
+        [lambda k=k: jax.block_until_ready(fns[k](shards)) for k in names],
+        repeats, warmup=False)  # callers time pre-compiled executables
+    return {k: t / 1e6 for k, t in zip(names, us)}
 
 
 def run(out=sys.stdout, rows=ROWS, repeats=5):
@@ -199,10 +203,6 @@ def run(out=sys.stdout, rows=ROWS, repeats=5):
             "note": "interpret mode on CPU; dispatch structure is the "
                     "platform-independent mechanism (DESIGN.md §6)"})
 
-    try:
-        from benchmarks import bench_io
-    except ImportError:  # direct script invocation: benchmarks/ is sys.path[0]
-        import bench_io
     path = bench_io.emit("multiquery", bench_rows)
     print(f"# wrote {path}", file=out)
 

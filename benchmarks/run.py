@@ -13,6 +13,9 @@ Sections:
                    solo passes (DESIGN.md §6)
   * early_stop   — time-to-ε and fraction of the scan saved by the
                    incremental session driver (DESIGN.md §7)
+  * streaming    — out-of-core chunk sources vs in-memory: steady-state
+                   throughput + the O(slice) transfer certificate
+                   (DESIGN.md §8)
   * convergence  — paper Figs. 1–3 (relative CI width curves)
   * roofline     — §Roofline table from the dry-run artifacts (if present)
 
@@ -98,6 +101,13 @@ def main(argv=None):
         early_stop.run(rows=100_000, repeats=2)
     else:
         early_stop.run()
+
+    print("# === streaming (out-of-core chunk sources, DESIGN.md §8) ===")
+    from benchmarks import streaming
+    if smoke:
+        streaming.run(rows=streaming.SMOKE_ROWS, repeats=2)
+    else:
+        streaming.run()
 
     print("# === convergence (paper Figs 1-3) ===")
     from benchmarks import convergence

@@ -425,6 +425,21 @@ def count_ops(hlo_text: str, opcode: str, *, trip_scaled: bool = True) -> float:
     return total
 
 
+def entry_param_bytes(hlo_text: str) -> float:
+    """Total bytes of the ENTRY computation's parameters.
+
+    This is the program's per-invocation operand surface — everything a
+    call must have resident on (or transferred to) the device.  Used by
+    benchmarks/streaming.py to certify the incremental session step is
+    O(slice): the step program's parameters are one round-slice of
+    columns plus the (small) carry/weights, never the whole dataset.
+    """
+    hc = HloCost(hlo_text)
+    return float(sum(_shape_bytes(i.type_str)
+                     for i in hc.comps.get(hc.entry, [])
+                     if i.opcode == "parameter"))
+
+
 def while_trip_counts(hlo_text: str) -> List[int]:
     """Trip counts of every while op reachable from the entry (each counted
     once, nested or not; unknown trips report as 1).

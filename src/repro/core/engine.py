@@ -212,12 +212,14 @@ def _run_vmapped(gla: GLA, shards: dict, sched: jnp.ndarray, alive: jnp.ndarray,
 # public API
 # ---------------------------------------------------------------------------
 
-def normalize_plan(gla: GLA, shards: dict, rounds: int,
+def normalize_plan(gla: GLA, data, rounds: int,
                    schedule: Optional[np.ndarray], emit: str):
     """Validate emit/kernel contracts and resolve the round schedule.
 
     Shared by :func:`run_query` and :class:`repro.core.session.Session` so
-    both entry points enforce identical contracts.  Round-emission paths
+    both entry points enforce identical contracts.  ``data`` is a resident
+    [P, C, L] shards dict or a ``repro.data.source.ChunkSource`` (only the
+    shape contract is consulted — no data is read).  Round-emission paths
     ("round", and group-by/bundle "kernel") emit at uniform round boundaries
     only: ``rounds`` degrades to the largest divisor of C with a warning,
     and an explicit ``schedule`` that is indivisible or non-uniform is a
@@ -225,7 +227,9 @@ def normalize_plan(gla: GLA, shards: dict, rounds: int,
 
     Returns ``(rounds, schedule)`` with ``schedule`` a [P, R+1] ndarray.
     """
-    P, C, L = shards["_mask"].shape
+    spec = getattr(data, "spec", None)  # duck-typed: core stays data-free
+    P, C, L = ((spec.P, spec.C, spec.L) if spec is not None
+               else data["_mask"].shape[:3])
     if emit == "kernel":
         if gla.members:
             missing = [m.name for m in gla.members if m.kernel_cols is None]
@@ -287,7 +291,7 @@ def _execute_full(gla: GLA, shards: dict, sched: jnp.ndarray,
 
 def run_query(
     gla: GLA,
-    shards: dict,
+    data,
     *,
     rounds: int = 8,
     schedule: Optional[np.ndarray] = None,
@@ -313,7 +317,12 @@ def run_query(
 
     Args:
       gla: the UDA bundle (repro.core.gla constructors or custom).
-      shards: columnar dict, leaves [P, C, L], must include "_mask".
+      data: columnar dict, leaves [P, C, L] incl. "_mask", OR any
+        ``repro.data.source.ChunkSource`` (DESIGN.md §8).  Streaming
+        sources (``NpyMmapSource``/``ParquetSource``) are scanned
+        out-of-core on the incremental discipline with O(slice) device
+        footprint; finals/snapshots/bounds stay bitwise-identical to the
+        resident path on the scan and group/bundle kernel paths.
       rounds: number of snapshot points (ignored if ``schedule`` given).
         Round-emission paths ("round", and group-by "kernel") emit at
         uniform round boundaries only: the engine degrades ``rounds`` to
@@ -347,7 +356,7 @@ def run_query(
     from repro.core import session as SN  # local: session imports engine
 
     sess = SN.Session(
-        gla, shards, rounds=rounds, schedule=schedule, stop=stop,
+        gla, data, rounds=rounds, schedule=schedule, stop=stop,
         confidence=confidence, mode=mode, emit=emit, lanes=lanes,
         snapshots=snapshots, alive=alive, mesh=mesh, axis_name=axis_name,
         sync_cost_model=sync_cost_model,
@@ -357,7 +366,7 @@ def run_query(
 
 def run_queries(
     glas,
-    shards: dict,
+    data,
     *,
     rounds: int = 8,
     schedule: Optional[np.ndarray] = None,
@@ -385,8 +394,9 @@ def run_queries(
     ``run_query`` (tests/test_multiquery.py) — a second query no longer
     pays a second pass over the data.
 
-    Args are as for :func:`run_query`; they apply to the shared scan (one
-    schedule, one mode, one emission discipline for the whole bundle).
+    Args are as for :func:`run_query` — including ``data`` as a shards
+    dict or a ``repro.data.source.ChunkSource`` — and apply to the shared
+    scan (one schedule, one mode, one emission discipline for the bundle).
     ``emit`` defaults to ``"round"`` because the bundle state is as large
     as its largest member — per-chunk prefix emission (``"chunk"``) is only
     sensible when every member is small.  ``emit="kernel"`` requires every
@@ -403,7 +413,7 @@ def run_queries(
     glas = list(glas)
     bundle = GLABundle(glas)
     res = run_query(
-        bundle, shards, rounds=rounds, schedule=schedule,
+        bundle, data, rounds=rounds, schedule=schedule,
         confidence=confidence, mode=mode, emit=emit, lanes=lanes,
         snapshots=snapshots, alive=alive, mesh=mesh, axis_name=axis_name,
         sync_cost_model=sync_cost_model, stop=stop,

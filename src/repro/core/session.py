@@ -39,12 +39,29 @@ serializes the per-partition round states plus the scan cursor through
 ``repro.checkpoint.ckpt`` and :meth:`Session.resume` continues from the
 exact round boundary — resumed sessions produce bitwise-identical finals
 to uninterrupted ones (the carry is restored bit-exactly and the remaining
-round-slices replay the same program).
+round-slices replay the same program).  The checkpoint meta carries the
+data source's **content fingerprint** (DESIGN.md §8), so resuming against
+different data — even same-shape data — raises instead of silently
+producing wrong finals.
+
+Data arrives either as a resident ``[P, C, L]`` shards dict (the classic
+path, wrapped in a ``repro.data.source.InMemorySource``) or as any other
+:class:`repro.data.source.ChunkSource` (``NpyMmapSource``,
+``ParquetSource``): streaming sources are scanned **out-of-core** — each
+:meth:`Session.step` pulls one round-slice through a double-buffered
+host→device prefetcher (`jax.device_put` of slice r+1 overlaps round r's
+compute), so peak device footprint is O(slice), not O(dataset), and the
+engine scales past accelerator RAM.  Streaming runs the incremental
+discipline by definition (there is nothing resident for a fused
+whole-scan program to close over), which is exactly why it stays
+bitwise-identical to the fused in-memory path on the scan and
+group/bundle kernel paths.
 """
 from __future__ import annotations
 
 import functools
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, List, NamedTuple, Optional
 
 import jax
@@ -55,10 +72,11 @@ from repro.checkpoint import ckpt
 from repro.core import engine as EN
 from repro.core import scan as SC
 from repro.core.uda import GLA, Estimate
+from repro.data import source as DSRC
 
 Pytree = Any
 
-_CKPT_VERSION = 1
+_CKPT_VERSION = 2
 
 
 # ---------------------------------------------------------------------------
@@ -235,11 +253,70 @@ def _final_vmapped(gla: GLA, views, w_final: jnp.ndarray, *, all_alive: bool):
 
 
 # ---------------------------------------------------------------------------
+# host -> device slice prefetch (streaming sources, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+class _SlicePrefetcher:
+    """Double-buffered host→device pipeline for streaming sources.
+
+    One worker thread reads round-slice r+1 from the source and
+    ``device_put``s it while the main thread's round-r compute runs;
+    :meth:`get` hands over the ready buffer and immediately schedules the
+    next fetch.  Depth 1 == double buffering: at most two slices are alive
+    on device at once, so steady-state device footprint is O(slice) and
+    the scan never stalls on I/O once warmed.
+    """
+
+    def __init__(self, source: DSRC.ChunkSource, bounds, put):
+        self._source = source
+        self._bounds = list(bounds)   # [(lo, hi)] per round
+        self._put = put               # host cols dict -> device arrays
+        self._ex = ThreadPoolExecutor(max_workers=1)
+        self._fut = None
+        self._next_r = None
+
+    def _fetch(self, r: int):
+        lo, hi = self._bounds[r]
+        return self._put(self._source.slice_cols(lo, hi))
+
+    def get(self, r: int):
+        """Device buffers for round r; kicks off the fetch of round r+1
+        before blocking, so (with the single worker) slice r+1 transfers
+        while round r's jitted step runs."""
+        if self._fut is not None and self._next_r == r:
+            fut = self._fut
+        else:
+            fut = self._ex.submit(self._fetch, r)
+        if r + 1 < len(self._bounds):
+            self._fut, self._next_r = self._ex.submit(self._fetch, r + 1), r + 1
+        else:
+            self._fut = self._next_r = None
+        return fut.result()
+
+    def close(self) -> None:
+        """Drop the pending buffer and retire the worker thread (sessions
+        close the prefetcher when they finish, converge, or pause — a
+        long-lived process must not accumulate one idle thread and one
+        captured device slice per completed session).  Waits for an
+        in-flight fetch: pause() reads the source from the main thread
+        right after closing (fingerprint sampling), and e.g. pyarrow file
+        handles are not safe to read from two threads at once."""
+        self._fut = self._next_r = None
+        self._ex.shutdown(wait=True, cancel_futures=True)
+
+
+# ---------------------------------------------------------------------------
 # the session
 # ---------------------------------------------------------------------------
 
 class Session:
     """A long-lived OLA query: advance round by round, stop early, pause.
+
+    ``data`` is a resident ``[P, C, L]`` shards dict or any
+    :class:`repro.data.source.ChunkSource`; streaming sources
+    (``NpyMmapSource``/``ParquetSource``) are scanned out-of-core through
+    the double-buffered prefetcher — O(slice) device footprint — and
+    always run the incremental discipline (DESIGN.md §8).
 
     Construction validates exactly like :func:`repro.core.engine.run_query`
     (same emit/kernel contracts, same round-degrade policy).  Drive it with
@@ -258,17 +335,20 @@ class Session:
         continue later, bitwise-identically, even in another process.
     """
 
-    def __init__(self, gla: GLA, shards: dict, *, rounds: int = 8,
+    def __init__(self, gla: GLA, data, *, rounds: int = 8,
                  schedule: Optional[np.ndarray] = None,
                  stop: Optional[StoppingRule] = None,
                  confidence: float = 0.95, mode: str = "async",
                  emit: str = "chunk", lanes: int = 1, snapshots: bool = True,
                  alive: Optional[np.ndarray] = None, mesh=None,
                  axis_name: str = "data", sync_cost_model: bool = True):
-        rounds, schedule = EN.normalize_plan(gla, shards, rounds, schedule,
+        source = DSRC.as_source(data)
+        rounds, schedule = EN.normalize_plan(gla, source, rounds, schedule,
                                              emit)
         self._gla = gla
-        self._shards = shards
+        self._source = source
+        self._resident = source.resident
+        self._shards = source.shards if source.resident else None
         self._sched = np.asarray(schedule, np.int32)
         self._rounds = self._sched.shape[1] - 1
         self._stop = stop
@@ -280,7 +360,7 @@ class Session:
         self._mesh = mesh
         self._axis_name = axis_name
         self._sync_cost_model = sync_cost_model
-        P, C, L = shards["_mask"].shape
+        P, C, L = source.spec.P, source.spec.C, source.spec.L
         self._P, self._C, self._L = P, C, L
 
         alive_np = None if alive is None else np.asarray(alive)
@@ -301,6 +381,12 @@ class Session:
                 "mode='async' with a partition-uniform schedule and no "
                 "[R, P] failure-injection alive mask (sync barriers and "
                 "straggler schedules are whole-scan semantics)")
+        if not self._resident and not self._incremental_ok:
+            raise ValueError(
+                "streaming sources scan incrementally and need an "
+                "incrementally-steppable config: mode='async' with a "
+                "partition-uniform schedule and no [R, P] alive schedule "
+                "(whole-scan semantics require resident shards)")
 
         if emit == "kernel":
             if lanes != 1:
@@ -318,6 +404,7 @@ class Session:
         # — the fused program derives its own copies internally.
         self._d_local = self._d_total = None
         self._mask_cum: Optional[np.ndarray] = None
+        self._prefetch: Optional[_SlicePrefetcher] = None
 
         self._states: Optional[Pytree] = None
         self._views: Optional[Pytree] = None
@@ -364,10 +451,44 @@ class Session:
 
     def _ensure_stats(self) -> None:
         if self._d_local is None:
-            self._d_local = jnp.sum(self._shards["_mask"], axis=(1, 2))
-            self._d_total = jnp.sum(self._d_local)
+            # Per-(partition, chunk) live-tuple counts come from the source
+            # (host float64, exact for integer counts) — not from a resident
+            # _mask array — so progress accounting and budget(max_tuples)
+            # work without whole-dataset residency.  Counts are integers, so
+            # the f32 casts match the device-side jnp.sum the fused program
+            # computes, bit-for-bit, up to 2**24 tuples per reduction.
+            ms = self._source.mask_chunk_sums()
+            self._d_local = jnp.asarray(ms.sum(axis=1), jnp.float32)
+            self._d_total = jnp.asarray(ms.sum(), jnp.float32)
             self._w_pr, self._w_final = SC.round_weights(
                 self._alive_arr, self._rounds)
+
+    def _slice_shards(self, r: int, lo: int, hi: int):
+        """Round-r slice as device-consumable arrays.
+
+        Resident sources keep the classic lazy device-array slicing;
+        streaming sources go through the double-buffered prefetcher (the
+        mesh path places each partition's block on its device via
+        ``shard_engine.device_put_slice``)."""
+        if self._resident:
+            return {k: v[:, lo:hi] for k, v in self._shards.items()}
+        if self._prefetch is None:
+            if self._mesh is None:
+                put = jax.device_put
+            else:
+                from repro.dist import shard_engine
+                put = functools.partial(shard_engine.device_put_slice,
+                                        mesh=self._mesh,
+                                        axis_name=self._axis_name)
+            bounds = [(int(self._sched[0, i]), int(self._sched[0, i + 1]))
+                      for i in range(self._rounds)]
+            self._prefetch = _SlicePrefetcher(self._source, bounds, put)
+        return self._prefetch.get(r)
+
+    def _close_prefetch(self) -> None:
+        if self._prefetch is not None:
+            self._prefetch.close()
+            self._prefetch = None
 
     def step(self) -> RoundProgress:
         """Advance one round-slice; evaluate the stopping rule; return what
@@ -385,7 +506,7 @@ class Session:
         self._ensure_stats()
         r = self._steps
         lo, hi = int(self._sched[0, r]), int(self._sched[0, r + 1])
-        slice_shards = {k: v[:, lo:hi] for k, v in self._shards.items()}
+        slice_shards = self._slice_shards(r, lo, hi)
         first = self._path != "scan" and r == 0
         states = self._states
         if states is None:
@@ -405,12 +526,19 @@ class Session:
                 path=self._path, lanes=self._lanes,
                 confidence=self._confidence, first=first)
         self._states, self._views = new_states, views
-        self._merged.append(merged)
-        self._ests.append(est)
+        if self._snapshots:
+            # snapshots off = non-interactive mode: the round's merged
+            # state and estimate still exist transiently (stop rules read
+            # ``est`` from RoundProgress) but no per-round history is
+            # retained — O(state), not O(rounds x state), matching the
+            # fused program's snapshots=False semantics
+            self._merged.append(merged)
+            self._ests.append(est)
         self._steps += 1
         if self._mask_cum is None:
-            self._mask_cum = np.cumsum(
-                np.asarray(jnp.sum(self._shards["_mask"], axis=2)), axis=1)
+            # per-slice mask sums folded on the host (source-provided, no
+            # whole-dataset residency) — feeds scanned/budget(max_tuples)
+            self._mask_cum = np.cumsum(self._source.mask_chunk_sums(), axis=1)
         scanned = float(self._mask_cum[:, hi - 1].sum()) if hi else 0.0
         self._elapsed += time.perf_counter() - t0
         prog = RoundProgress(
@@ -419,14 +547,20 @@ class Session:
             elapsed_s=self._elapsed)
         if self._stop is not None and self._stop(prog):
             self._converged = True
+        if self.done:
+            self._close_prefetch()
         return prog
 
     def run(self) -> EN.QueryResult:
-        """Drive to convergence or completion and return the result."""
+        """Drive to convergence or completion and return the result.
+
+        Resident sources with no stopping rule execute the fused
+        whole-scan program; streaming sources always run the incremental
+        discipline (one prefetched round-slice on device at a time)."""
         if self._result is not None:
             return self._result
-        if self._steps == 0 and (self._stop is None
-                                 or not self._incremental_ok):
+        if self._resident and self._steps == 0 and (
+                self._stop is None or not self._incremental_ok):
             t0 = time.perf_counter()
             self._fused = True
             self._result = EN._execute_full(
@@ -466,8 +600,9 @@ class Session:
             final = shard_engine.session_final_sharded(
                 self._gla, self._views, self._w_final, mesh=self._mesh,
                 axis_name=self._axis_name)
-        snaps = jax.tree.map(lambda *xs: jnp.stack(xs), *self._merged)
-        ests = None
+        snaps = ests = None
+        if self._merged:
+            snaps = jax.tree.map(lambda *xs: jnp.stack(xs), *self._merged)
         if self._ests and self._ests[0] is not None:
             ests = jax.tree.map(lambda *xs: jnp.stack(xs), *self._ests)
         res = EN.QueryResult(final, snaps, ests, self._d_total, self._d_local)
@@ -482,6 +617,7 @@ class Session:
             "version": _CKPT_VERSION, "gla": self._gla.name,
             "rounds": self._rounds, "steps": self._steps,
             "emit": self._emit, "mode": self._mode, "lanes": self._lanes,
+            "snapshots": self._snapshots,
             "confidence": self._confidence, "path": self._path,
             "P": self._P, "C": self._C, "L": self._L,
             # the scan cursor is only meaningful against the exact same
@@ -490,19 +626,22 @@ class Session:
             "alive": (None if self._alive is None
                       else np.asarray(self._alive, int).tolist()),
             "elapsed_s": self._elapsed, "converged": self._converged,
+            # content fingerprint (DESIGN.md §8): resume refuses different
+            # data, including same-shape impostors
+            "source": self._source.spec.meta(),
+            "fingerprint": self._source.fingerprint(),
         }
 
     def _payload_like(self, steps: int) -> dict:
         """Shape/structure skeleton of the checkpoint payload, rebuilt from
         the session config so deserialization never needs live state.  The
         vmapped step's output structure is identical to the sharded one
-        (global shapes), so one eval_shape serves both engines."""
+        (global shapes), so one eval_shape serves both engines.  The slice
+        skeleton comes from the source's chunk spec, never from resident
+        arrays — deserialization works for streaming sources too."""
         self._ensure_stats()
         per0 = max(1, int(self._sched[0, 1] - self._sched[0, 0]))
-        slice_like = {
-            k: jax.ShapeDtypeStruct((v.shape[0], per0) + v.shape[2:], v.dtype)
-            for k, v in self._shards.items()
-        }
+        slice_like = self._source.spec.slice_like(per0)
         states_like = jax.eval_shape(self._init_states)
         st, views, merged, est = _step_vmapped.eval_shape(
             self._gla, states_like, slice_like,
@@ -512,8 +651,9 @@ class Session:
             path=self._path, lanes=self._lanes,
             confidence=self._confidence, all_alive=self._all_alive,
             first=self._path != "scan")
+        hist = steps if self._snapshots else 0  # no history retained
         return {"states": st, "views": views,
-                "merged": (merged,) * steps, "ests": (est,) * steps}
+                "merged": (merged,) * hist, "ests": (est,) * hist}
 
     def pause(self, path) -> None:
         """Checkpoint the session between rounds (Serialize, paper Table 1).
@@ -529,6 +669,7 @@ class Session:
                 "session ran the fused whole-scan program — there is no "
                 "incremental carry to pause; attach a stopping rule or "
                 "step() to run incrementally")
+        self._close_prefetch()  # paused sessions hold no worker thread
         blob = b""
         if self._steps:
             payload = {"states": self._states, "views": self._views,
@@ -538,15 +679,23 @@ class Session:
         ckpt.save_envelope(path, self._meta(), blob)
 
     @classmethod
-    def resume(cls, path, gla: GLA, shards: dict, *,
+    def resume(cls, path, gla: GLA, data, *,
                stop: Optional[StoppingRule] = None, mesh=None,
                axis_name: str = "data") -> "Session":
-        """Rebuild a paused session from ``path`` + the original gla/shards.
+        """Rebuild a paused session from ``path`` + the original gla/data.
 
         The checkpoint stores configuration and state but not code or data:
-        the caller supplies the same GLA and shards (validated against the
-        stored fingerprint).  ``stop`` is attached fresh — rules are
-        closures and do not serialize.
+        the caller supplies the same GLA and the same dataset — as a shards
+        dict or any ChunkSource; the **content fingerprint** stored at
+        pause time is re-derived from the supplied source and must match,
+        so resuming against different data (even same-shape data, which
+        would silently produce wrong finals) raises ``ValueError``.  The
+        check is best-effort by design — per-chunk tuple counts plus
+        strided column samples, not a full-content hash (repro.data.source
+        docstring spells out what escapes it).  The fingerprint is
+        storage-independent: a session paused over in-memory shards
+        resumes over an ``.npy``/parquet copy of the same rows.  ``stop``
+        is attached fresh — rules are closures and do not serialize.
         """
         meta, blob = ckpt.load_envelope(path)
         if meta.get("version") != _CKPT_VERSION:
@@ -554,11 +703,12 @@ class Session:
                 f"unsupported session checkpoint version: {meta.get('version')}")
         alive = (None if meta["alive"] is None
                  else np.asarray(meta["alive"], bool))
-        sess = cls(gla, shards, rounds=meta["rounds"], stop=stop,
+        sess = cls(gla, data, rounds=meta["rounds"], stop=stop,
                    schedule=np.asarray(meta["schedule"], np.int32),
                    alive=alive, confidence=meta["confidence"],
                    mode=meta["mode"], emit=meta["emit"],
-                   lanes=meta["lanes"], mesh=mesh, axis_name=axis_name)
+                   lanes=meta["lanes"], snapshots=meta["snapshots"],
+                   mesh=mesh, axis_name=axis_name)
         got = {"gla": gla.name, "P": sess._P, "C": sess._C, "L": sess._L,
                "rounds": sess._rounds}
         for k, v in got.items():
@@ -566,6 +716,12 @@ class Session:
                 raise ValueError(
                     f"checkpoint mismatch: {k} was {meta[k]!r} at pause "
                     f"time, got {v!r} now")
+        if meta["fingerprint"] != sess._source.fingerprint():
+            raise ValueError(
+                "checkpoint mismatch: data content fingerprint differs — "
+                "the supplied shards/source do not hold the data this "
+                "session was paused over (same shapes are not enough; "
+                "resuming would silently produce wrong finals)")
         if meta["steps"]:
             payload = ckpt.deserialize_state(
                 blob, like=sess._payload_like(meta["steps"]))

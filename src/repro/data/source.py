@@ -1,0 +1,411 @@
+"""Streaming chunk sources — out-of-core scans (DESIGN.md §8).
+
+The paper's headline claim is early estimates over an **8 TB** TPC-H
+instance — data far larger than any node's memory — yet the engine's
+native input is a resident columnar dict with `[P, C, L]` device arrays,
+capping scale at accelerator RAM.  This module decouples the *scan* from
+data *residency*: a :class:`ChunkSource` yields round-slices of
+`[P, slice, L]` column batches (plus per-chunk ``_mask`` tuple counts for
+progress accounting) and the incremental session driver
+(`repro/core/session.py`) pulls one slice per round, double-buffered
+through a host→device prefetcher, so peak device footprint is O(slice) —
+not O(dataset) — while finals, snapshots and per-round bounds stay
+bitwise-identical to the in-memory path on both engines
+(tests/test_source.py).
+
+Three implementations:
+
+  * :class:`InMemorySource` — wraps today's shard dicts; the compatibility
+    default (`as_source` wraps any plain dict in one).  Slicing stays the
+    lazy device-array slicing the engine always did.
+  * :class:`NpyMmapSource` — memory-mapped columnar ``.npy`` files, one
+    `[P, C, L]` array per column (``NpyMmapSource.save`` writes the
+    layout).  Reads page in only the requested slice.
+  * :class:`ParquetSource` — optional ``pyarrow``; one ``part-*.parquet``
+    file of live rows per partition, read via columnar row-group batches
+    (predicate-free projection pushdown — only requested columns and the
+    covering row groups are materialized).  The padded `[P, C, L]` layout
+    it reconstructs is exactly ``randomize.pack_partitions`` of the same
+    ragged partitions, so results are bitwise-identical to packing the
+    rows in memory.
+
+Every source also publishes a cheap **content fingerprint** (per-partition
+per-chunk ``_mask`` sums + strided column samples, hashed) used by
+``Session.pause``/``resume`` to reject resuming against different data —
+same-shape-different-content silently produces wrong finals otherwise.
+It is a *best-effort sampled check*, not a full-content hash (a full read
+at pause time would defeat the out-of-core design): it catches shape or
+tuple-count mismatches and any content change at the sampled positions,
+but an edit confined to unsampled elements that also preserves per-chunk
+live counts passes undetected.  The fingerprint is a function of the
+*logical data*, not the storage, so a session paused over in-memory
+shards can resume over an ``.npy`` or parquet copy of the same dataset.
+"""
+from __future__ import annotations
+
+import hashlib
+from pathlib import Path
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+# Bound on host bytes touched per fingerprint/mask-sum pass; keeps the
+# strided sample cheap even for multi-GB mmaps.
+_SAMPLE_CHUNKS = 8
+_SAMPLE_ELEMS = 256
+
+
+class ColumnSpec(NamedTuple):
+    name: str
+    # np.dtype(...).name, e.g. "float32": unlike .str it round-trips JAX
+    # extension dtypes (np.dtype(bfloat16).str is the opaque "<V2", but
+    # .name is "bfloat16", which np.dtype() resolves while ml_dtypes is
+    # registered — i.e. whenever jax is importable)
+    dtype: str
+    trailing: Tuple[int, ...] = ()  # dims after [P, C, L] (usually none)
+
+
+class ChunkSpec(NamedTuple):
+    """Static shape contract of a source: [P, C, L] plus column table."""
+
+    P: int
+    C: int
+    L: int
+    columns: Tuple[ColumnSpec, ...]   # sorted by name; includes "_mask"
+
+    def slice_like(self, width: int):
+        """jax.ShapeDtypeStruct skeleton of one [P, width, L] slice —
+        what ``Session._payload_like`` feeds eval_shape, so checkpoint
+        deserialization never needs live data."""
+        import jax
+
+        return {
+            c.name: jax.ShapeDtypeStruct(
+                (self.P, width, self.L) + c.trailing, np.dtype(c.dtype))
+            for c in self.columns
+        }
+
+    def meta(self) -> dict:
+        """msgpack-able form for checkpoint envelopes."""
+        return {"P": self.P, "C": self.C, "L": self.L,
+                "columns": [[c.name, c.dtype, list(c.trailing)]
+                            for c in self.columns]}
+
+
+class ChunkSource:
+    """Base class: a [P, C, L] columnar dataset readable in chunk slices.
+
+    Subclasses set ``spec`` and implement :meth:`slice_cols`.  ``resident``
+    is True when the whole dataset already lives on device (the in-memory
+    compatibility path) — the engine then keeps its classic fused
+    whole-scan programs; streaming sources run the incremental discipline.
+    """
+
+    spec: ChunkSpec
+    resident: bool = False
+
+    def slice_cols(self, lo: int, hi: int) -> Dict[str, np.ndarray]:
+        """Columns of chunk range [lo, hi): dict of [P, hi-lo, L] arrays
+        (host ndarrays for streaming sources), including ``_mask``."""
+        raise NotImplementedError
+
+    # -- tuple-count accounting (progress / d_local without residency) ------
+
+    def mask_chunk_sums(self) -> np.ndarray:
+        """Per-(partition, chunk) live-tuple counts, float64 [P, C].
+
+        Computed once (streamed in bounded slices for on-disk sources) and
+        cached.  Counts are integers, so float64 is exact and the f32
+        casts downstream match the device-side ``jnp.sum`` of the resident
+        mask bit-for-bit up to 2**24 tuples per reduction.
+        """
+        if getattr(self, "_mask_sums", None) is None:
+            P, C, _ = self.spec.P, self.spec.C, self.spec.L
+            out = np.zeros((P, C), np.float64)
+            step = max(1, _SAMPLE_CHUNKS * 64)
+            for lo in range(0, C, step):
+                hi = min(C, lo + step)
+                m = np.asarray(self.slice_cols(lo, hi)["_mask"])
+                out[:, lo:hi] = m.sum(axis=2, dtype=np.float64)
+            self._mask_sums = out
+        return self._mask_sums
+
+    # -- content fingerprint (DESIGN.md §8) ---------------------------------
+
+    def fingerprint(self) -> str:
+        """Cheap content hash: sha256 over the shape spec, the per-chunk
+        ``_mask`` sums, and strided element samples of every column at up
+        to ``_SAMPLE_CHUNKS`` evenly-spaced chunks.  Identical data yields
+        the identical fingerprint regardless of the storage backend.
+        Best-effort by design — O(samples) reads, not a full-content
+        hash; see the module docstring for what escapes it."""
+        if getattr(self, "_fingerprint", None) is None:
+            spec = self.spec
+            h = hashlib.sha256()
+            h.update(repr(spec).encode())
+            h.update(np.ascontiguousarray(self.mask_chunk_sums()).tobytes())
+            n_samp = min(spec.C, _SAMPLE_CHUNKS)
+            sample_chunks = sorted(
+                {int(i) for i in np.linspace(0, spec.C - 1, n_samp)})
+            stride = max(1, spec.L // _SAMPLE_ELEMS)
+            for c in sample_chunks:
+                sl = self.slice_cols(c, c + 1)
+                for name in sorted(sl):
+                    v = np.asarray(sl[name])[:, 0, ::stride]
+                    h.update(name.encode())
+                    h.update(np.ascontiguousarray(v).tobytes())
+            self._fingerprint = h.hexdigest()
+        return self._fingerprint
+
+
+def _spec_from_arrays(arrays: Dict[str, np.ndarray]) -> ChunkSpec:
+    P, C, L = arrays["_mask"].shape[:3]
+    cols = tuple(
+        ColumnSpec(k, np.dtype(arrays[k].dtype).name,
+                   tuple(arrays[k].shape[3:]))
+        for k in sorted(arrays))
+    return ChunkSpec(int(P), int(C), int(L), cols)
+
+
+class InMemorySource(ChunkSource):
+    """Wraps a resident [P, C, L] shards dict — the compatibility default.
+
+    ``slice_cols`` is the same lazy device-array slicing the session always
+    did, so the in-memory path is byte- and schedule-identical to the
+    pre-source engine.
+    """
+
+    resident = True
+
+    def __init__(self, shards: Dict[str, "np.ndarray"]):
+        if "_mask" not in shards:
+            raise ValueError("shards dict must include a '_mask' column")
+        self.shards = shards
+        self.spec = _spec_from_arrays(shards)
+
+    def slice_cols(self, lo: int, hi: int):
+        return {k: v[:, lo:hi] for k, v in self.shards.items()}
+
+    def mask_chunk_sums(self) -> np.ndarray:
+        # one device-side reduction; only the [P, C] result crosses to host
+        if getattr(self, "_mask_sums", None) is None:
+            import jax.numpy as jnp
+
+            self._mask_sums = np.asarray(
+                jnp.sum(self.shards["_mask"], axis=2), np.float64)
+        return self._mask_sums
+
+
+class NpyMmapSource(ChunkSource):
+    """Memory-mapped columnar ``.npy`` files: ``<dir>/<column>.npy``, each
+    a [P, C, L] array, ``_mask.npy`` required.  ``np.load(mmap_mode='r')``
+    keeps the OS page cache in charge — a slice read touches only the
+    pages of that chunk range."""
+
+    def __init__(self, directory):
+        self.directory = Path(directory)
+        paths = sorted(self.directory.glob("*.npy"))
+        if not paths:
+            raise FileNotFoundError(f"no .npy columns under {self.directory}")
+        self._cols = {p.stem: np.load(p, mmap_mode="r") for p in paths}
+        if "_mask" not in self._cols:
+            raise ValueError(f"{self.directory} lacks _mask.npy")
+        shape = self._cols["_mask"].shape
+        for k, v in self._cols.items():
+            if v.shape[:3] != shape[:3]:
+                raise ValueError(
+                    f"column {k!r} shape {v.shape} does not match _mask "
+                    f"{shape}")
+        self.spec = _spec_from_arrays(self._cols)
+
+    @staticmethod
+    def save(shards: Dict[str, "np.ndarray"], directory) -> Path:
+        """Write a resident shards dict as the mmap-able column layout."""
+        directory = Path(directory)
+        directory.mkdir(parents=True, exist_ok=True)
+        for k, v in shards.items():
+            np.save(directory / f"{k}.npy", np.asarray(v))
+        return directory
+
+    def slice_cols(self, lo: int, hi: int):
+        # np.ascontiguousarray materializes ONLY the slice on host; the
+        # prefetcher device_puts it, so device footprint stays O(slice).
+        return {k: np.ascontiguousarray(v[:, lo:hi])
+                for k, v in self._cols.items()}
+
+    def mask_chunk_sums(self) -> np.ndarray:
+        # Only the mask column is summed — the generic fallback would
+        # materialize every column of every chunk just to read _mask,
+        # a full-dataset host read on the backend built to avoid one.
+        if getattr(self, "_mask_sums", None) is None:
+            mask = self._cols["_mask"]
+            C = self.spec.C
+            out = np.zeros((self.spec.P, C), np.float64)
+            step = max(1, _SAMPLE_CHUNKS * 64)
+            for lo in range(0, C, step):
+                hi = min(C, lo + step)
+                out[:, lo:hi] = mask[:, lo:hi].sum(axis=2,
+                                                   dtype=np.float64)
+            self._mask_sums = out
+        return self._mask_sums
+
+
+class ParquetSource(ChunkSource):
+    """Columnar parquet partitions: ``<dir>/part-*.parquet``, one file of
+    *live* rows per partition (no mask column — liveness is derived from
+    row counts, exactly like ``randomize.pack_partitions``).
+
+    Reads go through pyarrow's columnar batches: a slice [lo, hi) maps to
+    the row range [lo·L, hi·L) of each partition, satisfied by reading the
+    covering row groups with column projection — never the whole file.
+    ``read_row_groups`` has a fixed per-call cost, so sequential scans
+    read **ahead**: each physical read covers up to ``readahead`` row
+    groups and later slices are served from the cached block until they
+    run past it.  One block is cached per partition, so the extension
+    past the covering groups is additionally clamped to
+    ``readahead_bytes / P`` per partition — total host cache stays under
+    ``readahead_bytes`` (plus one covering read) no matter how large the
+    writer's row groups are, never O(dataset).  Requires the optional
+    ``pyarrow`` dependency.
+    """
+
+    def __init__(self, directory, *, chunk_len: int,
+                 min_chunks: Optional[int] = None,
+                 columns: Optional[List[str]] = None,
+                 readahead: int = 8, readahead_bytes: int = 64 << 20):
+        try:
+            import pyarrow.parquet as pq
+        except ImportError as e:  # optional dependency
+            raise ImportError(
+                "ParquetSource needs the optional 'pyarrow' package "
+                "(pip install pyarrow)") from e
+        self.directory = Path(directory)
+        paths = sorted(self.directory.glob("part-*.parquet"))
+        if not paths:
+            raise FileNotFoundError(
+                f"no part-*.parquet files under {self.directory}")
+        self._pq = pq
+        self._files = [pq.ParquetFile(p, memory_map=True) for p in paths]
+        self._rows = [f.metadata.num_rows for f in self._files]
+        self._readahead = max(1, int(readahead))
+        self._readahead_bytes = int(readahead_bytes)
+        self._block: List[Optional[tuple]] = [None] * len(self._files)
+        L = int(chunk_len)
+        C = max(-(-n // L) for n in self._rows)
+        if min_chunks is not None:
+            C = max(C, int(min_chunks))
+        self.chunk_len = L
+        schema = self._files[0].schema_arrow
+        names = columns if columns is not None else list(schema.names)
+        self._names = sorted(names)
+        dtypes = {name: np.dtype(schema.field(name).type.to_pandas_dtype())
+                  for name in self._names}
+        cols = tuple(ColumnSpec(n, dtypes[n].name) for n in self._names)
+        cols += (ColumnSpec("_mask", np.dtype(np.float32).name),)
+        self.spec = ChunkSpec(len(self._files), C, L,
+                              tuple(sorted(cols)))
+        # row-group boundaries per file, for covering-group reads
+        self._rg_starts = []
+        for f in self._files:
+            starts = np.zeros(f.metadata.num_row_groups + 1, np.int64)
+            for g in range(f.metadata.num_row_groups):
+                starts[g + 1] = starts[g] + f.metadata.row_group(g).num_rows
+            self._rg_starts.append(starts)
+
+    @staticmethod
+    def save(parts: List[Dict[str, "np.ndarray"]], directory, *,
+             row_group_len: int = 1 << 16) -> Path:
+        """Write ragged partition dicts (randomize.* output) as
+        ``part-*.parquet`` files of live rows.  ``_mask`` columns are
+        dropped — parquet stores live rows only."""
+        import pyarrow as pa
+        import pyarrow.parquet as pq
+
+        directory = Path(directory)
+        directory.mkdir(parents=True, exist_ok=True)
+        for i, p in enumerate(parts):
+            table = pa.table({k: np.asarray(v) for k, v in p.items()
+                              if k != "_mask"})
+            pq.write_table(table, directory / f"part-{i:05d}.parquet",
+                           row_group_size=row_group_len)
+        return directory
+
+    def _covering_block(self, part: int, row_lo: int, row_hi: int):
+        """Cached (block_lo, block_hi, column ndarrays) covering
+        [row_lo, row_hi), reading ``readahead`` row groups past the
+        requested range so a sequential scan pays the fixed
+        read_row_groups + arrow->numpy cost once per block, not once per
+        slice."""
+        blk = self._block[part]
+        if blk is not None and blk[0] <= row_lo and row_hi <= blk[1]:
+            return blk
+        f, starts = self._files[part], self._rg_starts[part]
+        g_lo = int(np.searchsorted(starts, row_lo, side="right")) - 1
+        g_hi = int(np.searchsorted(starts, row_hi, side="left"))
+        # extend past the covering groups for read-ahead, clamped both by
+        # group count and by the per-partition share of the byte budget —
+        # P cached blocks must never sum past readahead_bytes even when
+        # the writer used huge row groups
+        row_bytes = max(1, sum(np.dtype(c.dtype).itemsize
+                               for c in self.spec.columns
+                               if c.name in self._names))
+        budget_rows = self._readahead_bytes // (len(self._files) * row_bytes)
+        while (g_hi < f.metadata.num_row_groups
+               and g_hi - g_lo < self._readahead
+               and int(starts[g_hi + 1] - starts[g_lo]) <= budget_rows):
+            g_hi += 1
+        table = f.read_row_groups(list(range(g_lo, g_hi)),
+                                  columns=self._names)
+        arrs = {n: table.column(n).to_numpy(zero_copy_only=False)
+                for n in self._names}
+        blk = (int(starts[g_lo]), int(starts[g_hi]), arrs)
+        self._block[part] = blk
+        return blk
+
+    def _read_rows(self, part: int, row_lo: int, row_hi: int):
+        """Live rows [row_lo, row_hi) of one partition as a columnar dict,
+        via the covering row groups (columnar-batch read, projected)."""
+        row_hi = min(row_hi, self._rows[part])
+        if row_lo >= row_hi:
+            return {}, 0
+        blk_lo, _, arrs = self._covering_block(part, row_lo, row_hi)
+        out = {n: v[row_lo - blk_lo:row_hi - blk_lo]
+               for n, v in arrs.items()}
+        return out, row_hi - row_lo
+
+    def slice_cols(self, lo: int, hi: int):
+        P, L = self.spec.P, self.chunk_len
+        width = hi - lo
+        dtypes = {c.name: np.dtype(c.dtype) for c in self.spec.columns}
+        bufs = {n: np.zeros((P, width * L), dtypes[n]) for n in self._names}
+        mask = np.zeros((P, width * L), np.float32)
+        for p in range(P):
+            rows, n = self._read_rows(p, lo * L, hi * L)
+            for name, v in rows.items():
+                bufs[name][p, :n] = v
+            mask[p, :n] = 1.0
+        out = {n: b.reshape(P, width, L) for n, b in bufs.items()}
+        out["_mask"] = mask.reshape(P, width, L)
+        return out
+
+    def mask_chunk_sums(self) -> np.ndarray:
+        # Liveness is a pure function of row counts — no I/O needed.
+        if getattr(self, "_mask_sums", None) is None:
+            P, C, L = self.spec.P, self.spec.C, self.spec.L
+            c = np.arange(C, dtype=np.int64)
+            n = np.asarray(self._rows, np.int64)[:, None]
+            self._mask_sums = np.clip(n - c[None, :] * L, 0, L).astype(
+                np.float64)
+        return self._mask_sums
+
+
+def as_source(data) -> ChunkSource:
+    """Normalize the engine's data argument: a ChunkSource passes through,
+    a plain [P, C, L] shards dict wraps into an :class:`InMemorySource`."""
+    if isinstance(data, ChunkSource):
+        return data
+    if isinstance(data, dict):
+        return InMemorySource(data)
+    raise TypeError(
+        f"expected a ChunkSource or a [P, C, L] shards dict, got "
+        f"{type(data).__name__}")

@@ -130,18 +130,63 @@ def q1_large_scenario(rows: int, *, num_suppliers: int = Q1_LARGE_SUPPLIERS,
     return cols, g
 
 
-def exact_answer(cols: Dict[str, np.ndarray], func, cond, group=None,
-                 num_groups: int | None = None):
-    """Ground truth on host numpy (the oracle for all correctness tests)."""
-    chunk = {k: jnp.asarray(v) for k, v in cols.items()}
-    chunk["_mask"] = jnp.ones_like(chunk["shipdate"], jnp.float32)
-    vals = np.asarray(func(chunk), np.float64)
-    w = np.asarray(cond(chunk), np.float64)
-    if vals.ndim == 1:
-        vals = vals[:, None]
-    if group is None:
-        return (vals * w[:, None]).sum(axis=0)
-    g = np.asarray(group(chunk))
-    out = np.zeros((num_groups, vals.shape[1]))
-    np.add.at(out, g, vals * w[:, None])
-    return out
+def _exact_batches(cols, batch_rows: int):
+    """Yield bounded row-batch chunk dicts (with ``_mask``) from either a
+    flat columnar dict or a ``repro.data.source.ChunkSource``.
+
+    Streaming sources are read one chunk-slice group at a time and
+    flattened to rows with their real mask, so the reference never holds
+    more than O(batch) rows on host or device — the same out-of-core
+    discipline as the engine (DESIGN.md §8).
+    """
+    from repro.data import source as _source  # local: optional coupling
+
+    if isinstance(cols, _source.ChunkSource):
+        P, C, L = cols.spec.P, cols.spec.C, cols.spec.L
+        step = max(1, batch_rows // max(1, P * L))
+        for lo in range(0, C, step):
+            sl = cols.slice_cols(lo, min(C, lo + step))
+            chunk = {}
+            for k, v in sl.items():
+                a = np.asarray(v)  # one host materialization per column
+                chunk[k] = jnp.asarray(a.reshape((-1,) + a.shape[3:]))
+            yield chunk
+        return
+    n = next(iter(cols.values())).shape[0]
+    for lo in range(0, n, batch_rows):
+        chunk = {k: jnp.asarray(v[lo:lo + batch_rows]) for k, v in cols.items()}
+        if "_mask" not in chunk:
+            first = next(iter(chunk.values()))
+            chunk["_mask"] = jnp.ones(first.shape[:1], jnp.float32)
+        yield chunk
+
+
+def exact_answer(cols, func, cond, group=None,
+                 num_groups: int | None = None, *,
+                 batch_rows: int = 1 << 18):
+    """Ground truth in float64 (the oracle for all correctness tests).
+
+    ``cols`` is a flat columnar dict (host rows) OR any
+    ``repro.data.source.ChunkSource``.  The reference is accumulated over
+    bounded host batches in float64 rather than materializing the entire
+    dataset as one device chunk — which OOMed exactly at the out-of-core
+    scales the source layer unlocks.  Padded rows contribute nothing: the
+    batch's ``_mask`` folds into the predicate weight.
+    """
+    acc = None
+    out = None
+    for chunk in _exact_batches(cols, batch_rows):
+        vals = np.asarray(func(chunk), np.float64)
+        w = (np.asarray(cond(chunk), np.float64)
+             * np.asarray(chunk["_mask"], np.float64))
+        if vals.ndim == 1:
+            vals = vals[:, None]
+        contrib = vals * w[:, None]
+        if group is None:
+            s = contrib.sum(axis=0)
+            acc = s if acc is None else acc + s
+        else:
+            if out is None:
+                out = np.zeros((num_groups, vals.shape[1]))
+            np.add.at(out, np.asarray(group(chunk)), contrib)
+    return out if group is not None else acc

@@ -30,10 +30,27 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.core import scan as SC
 from repro.core.uda import GLA
+
+
+def device_put_slice(cols: dict, *, mesh, axis_name: str = "data"):
+    """Place one streaming round-slice on the mesh (DESIGN.md §8).
+
+    ``cols`` is a host-side [P, width, L] columnar batch from a
+    ``repro.data.source.ChunkSource``; each partition's block lands on its
+    own device along ``axis_name``, so the per-host/per-device footprint
+    is O(slice / P).  Called from the session prefetcher's worker thread —
+    the transfer of slice r+1 overlaps round r's compute, and the fetched
+    arrays feed :func:`session_step_sharded` without a re-layout.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    sh = NamedSharding(mesh, PartitionSpec(axis_name))
+    return {k: jax.device_put(np.asarray(v), sh) for k, v in cols.items()}
 
 
 def _shard_map(worker, mesh, in_specs, out_specs):
