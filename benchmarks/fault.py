@@ -1,0 +1,130 @@
+"""Fault tolerance: what losing shards mid-scan costs (DESIGN.md §9).
+
+The runtime fault path (``repro.core.session.FaultPolicy``) renormalizes
+the ``single``-estimator merge over the surviving partitions, so a query
+that loses shards still finishes with finite variance-floored bounds —
+over less data.  This benchmark measures the two prices of survival on a
+P=8 session that loses {0, 1, 2, 4} partitions at the mid-scan round:
+
+    us_per_call       — wall time of the full degraded run (median)
+    bound_width       — confidence-interval width (upper - lower) at the
+                        failure round: by scan end a no-failure run
+                        collapses the interval to zero (the variance
+                        floor's |D| - |S| term vanishes), so mid-scan is
+                        where the rows compare
+    width_inflation   — bound_width / the no-failure run's width
+    recovery_step_us  — wall time of the failure-absorbing round itself
+                        (the step that drops to the alive-mask program)
+
+The no-failure row (lost=0) is the baseline the inflation ratios divide
+by; width inflation should grow roughly like 1/sqrt(alive/P) while wall
+time stays flat — failure handling is a reweighting, not a re-scan.
+
+Output: CSV to stdout + benchmarks/out/BENCH_fault.json.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gla, randomize
+from repro.core import session as S
+from repro.data import tpch
+
+ROWS = 500_000
+SMOKE_ROWS = 100_000
+PARTS = 8
+ROUNDS = 8
+CHUNK = 1024
+FAIL_ROUND = ROUNDS // 2
+LOST = (0, 1, 2, 4)
+
+
+def _shards(rows):
+    cols = tpch.generate_lineitem(rows, seed=13)
+    parts = randomize.randomize_global(
+        {k: jnp.asarray(v) for k, v in cols.items()}, jax.random.key(13),
+        PARTS)
+    n_chunks = -(-rows // PARTS // CHUNK)
+    return randomize.pack_partitions(
+        parts, chunk_len=CHUNK, min_chunks=-(-n_chunks // ROUNDS) * ROUNDS)
+
+
+def _q6(rows):
+    def func(c):
+        return c["quantity"]
+
+    def cond(c):
+        sd = c["shipdate"]
+        return ((sd >= 0) & (sd < 1460)).astype(jnp.float32)
+
+    return gla.make_sum_gla(func, cond, d_total=float(rows),
+                            estimator="single")
+
+
+def _drive_timed(g, shards, fail_at):
+    """One full chaos run; returns (total_us, fail_round_step_us, width)."""
+    sess = S.Session(g, shards, rounds=ROUNDS,
+                     fault=S.FaultPolicy("single", fail_at=fail_at))
+    step_us = 0.0
+    t0 = time.perf_counter()
+    while not sess.done:
+        r = sess.steps_taken
+        t1 = time.perf_counter()
+        prog = sess.step()
+        jax.block_until_ready(jax.tree.leaves(prog.estimates))
+        if r == FAIL_ROUND:
+            step_us = (time.perf_counter() - t1) * 1e6
+    res = sess.result()
+    jax.block_until_ready(res.final)
+    total_us = (time.perf_counter() - t0) * 1e6
+    est = res.estimates
+    width = float(np.max(np.asarray(est.upper)[FAIL_ROUND]
+                         - np.asarray(est.lower)[FAIL_ROUND]))
+    return total_us, step_us, width
+
+
+def run(rows=ROWS, repeats=3, out=sys.stdout):
+    shards = _shards(rows)
+    g = _q6(rows)
+    bench_rows = []
+    base_width = None
+    print("name,us_per_call,derived", file=out)
+    for lost in LOST:
+        fail_at = {p: FAIL_ROUND for p in range(lost)}
+        _drive_timed(g, shards, fail_at)  # warm (compile both programs)
+        totals, steps, width = [], [], None
+        for _ in range(repeats):
+            total_us, step_us, width = _drive_timed(g, shards, fail_at)
+            totals.append(total_us)
+            steps.append(step_us)
+        total_us = float(np.median(totals))
+        step_us = float(np.median(steps))
+        if lost == 0:
+            base_width = width
+        inflation = width / base_width if base_width else float("inf")
+        derived = {
+            "lost": lost, "alive": PARTS - lost, "fail_round": FAIL_ROUND,
+            "bound_width": width, "width_inflation": inflation,
+            "recovery_step_us": step_us,
+        }
+        print(f"fault_lost{lost}_of{PARTS},{total_us:.0f},"
+              f"width={width:.4g};inflation={inflation:.3f};"
+              f"recovery_us={step_us:.0f}", file=out)
+        bench_rows.append({"name": f"fault_lost{lost}_of{PARTS}",
+                           "us_per_call": total_us, "derived": derived})
+
+    try:
+        from benchmarks import bench_io
+    except ImportError:  # direct script invocation: benchmarks/ is sys.path[0]
+        import bench_io
+    path = bench_io.emit("fault", bench_rows)
+    print(f"# wrote {path}", file=out)
+
+
+if __name__ == "__main__":
+    run(rows=int(sys.argv[1]) if len(sys.argv) > 1 else ROWS)

@@ -13,6 +13,9 @@ Sections:
                    solo passes (DESIGN.md §6)
   * early_stop   — time-to-ε and fraction of the scan saved by the
                    incremental session driver (DESIGN.md §7)
+  * fault        — mid-scan shard loss: bound-width inflation vs shards
+                   lost + the cost of the failure-absorbing round
+                   (DESIGN.md §9)
   * streaming    — out-of-core chunk sources vs in-memory: steady-state
                    throughput + the O(slice) transfer certificate
                    (DESIGN.md §8)
@@ -101,6 +104,13 @@ def main(argv=None):
         early_stop.run(rows=100_000, repeats=2)
     else:
         early_stop.run()
+
+    print("# === fault (mid-scan shard loss, DESIGN.md §9) ===")
+    from benchmarks import fault
+    if smoke:
+        fault.run(rows=fault.SMOKE_ROWS, repeats=2)
+    else:
+        fault.run()
 
     print("# === streaming (out-of-core chunk sources, DESIGN.md §8) ===")
     from benchmarks import streaming

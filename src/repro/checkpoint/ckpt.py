@@ -99,6 +99,22 @@ def load_envelope(path: str | Path) -> tuple:
     return d["meta"], d["blob"]
 
 
+def require_version(meta: dict, supported, *, what: str = "checkpoint"):
+    """Validate an envelope's ``version`` against the supported set.
+
+    Returns the version so the caller can feature-gate on it: readers
+    accept *older* formats whose fields are a subset of the current one
+    (the session layer's v3 reader accepts v2 envelopes — DESIGN.md §9
+    records the compatibility rule) but never newer or unknown ones.
+    """
+    version = meta.get("version")
+    if version not in tuple(supported):
+        raise ValueError(
+            f"unsupported {what} version: {version!r} "
+            f"(supported: {sorted(supported)})")
+    return version
+
+
 def save(path: str | Path, state: Any) -> None:
     Path(path).parent.mkdir(parents=True, exist_ok=True)
     tmp = Path(str(path) + ".tmp")

@@ -483,3 +483,47 @@ def round_weights(alive: jnp.ndarray, rounds: int) -> Tuple[jnp.ndarray, jnp.nda
         return w.astype(jnp.float32), alive.astype(jnp.float32)
     w = alive.T.astype(jnp.float32)  # [P, R]
     return w, w[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# elastic carry algebra (resume on a different partition count, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def merge_carries(states: Pytree, group: int) -> Pytree:
+    """Fold a [P, ...] carry pytree to [P/group, ...] partitions.
+
+    New partition i is the left-fold Merge (additive add, the same
+    association order as :func:`fold_merge`) of old partitions
+    [i*group, (i+1)*group).  Valid for additive merges only — exactly the
+    contract the engines' weighted liveness merges already require.
+    ``merge_carries(split_carries(x, k), k)`` is the identity on the carry
+    pytree (x + 0 is exact), property-tested in tests/test_elastic.py.
+    """
+    def m(x):
+        assert x.shape[0] % group == 0, (x.shape, group)
+        g = x.reshape((x.shape[0] // group, group) + x.shape[1:])
+        acc = g[:, 0]
+        for j in range(1, group):
+            acc = acc + g[:, j]
+        return acc
+
+    return jax.tree.map(m, states)
+
+
+def split_carries(states: Pytree, group: int) -> Pytree:
+    """Expand a [P, ...] carry pytree to [P*group, ...] partitions.
+
+    Child p*group inherits parent p's whole carry; the other children
+    start from the additive identity (zeros).  A carry cannot be unsummed
+    into the sub-streams that produced it, but to an additive merge *where*
+    a carry lives is unobservable — any weighted sum over the children
+    equals the parent's contribution exactly, so merged snapshots, finals
+    and estimates are preserved.  Inverse of :func:`merge_carries`.
+    """
+    def s(x):
+        z = jnp.zeros_like(x)
+        cols = [x] + [z] * (group - 1)
+        return jnp.stack(cols, axis=1).reshape(
+            (x.shape[0] * group,) + x.shape[1:])
+
+    return jax.tree.map(s, states)

@@ -62,7 +62,7 @@ from __future__ import annotations
 import functools
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Callable, List, NamedTuple, Optional
+from typing import Any, Callable, List, Mapping, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -76,7 +76,11 @@ from repro.data import source as DSRC
 
 Pytree = Any
 
-_CKPT_VERSION = 2
+# v3 adds per-partition cursors, the runtime failure record and the fault
+# estimator family to the meta (elastic resume + §4.6 runtime semantics,
+# DESIGN.md §9); v2 envelopes stay readable — their fields are a subset.
+_CKPT_VERSION = 3
+_READABLE_VERSIONS = (2, _CKPT_VERSION)
 
 
 # ---------------------------------------------------------------------------
@@ -194,6 +198,73 @@ def any_of(*rules: StoppingRule) -> StoppingRule:
 def all_of(*rules: StoppingRule) -> StoppingRule:
     """Stop only when EVERY rule fires."""
     return lambda prog: all(r(prog) for r in rules)
+
+
+# ---------------------------------------------------------------------------
+# runtime failure handling (paper §4.6 live, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+class FaultPolicy:
+    """Make mid-scan partition loss survivable instead of fatal.
+
+    Attach to a :class:`Session` (``fault=FaultPolicy(...)``) and failures
+    degrade the answer instead of crashing the driver.  They arrive two
+    ways:
+
+      * *injected* — ``fail_at`` maps partition -> failure round, the
+        ``repro.dist.fault.failure_schedule`` convention: ``fail_at[p] ==
+        0`` is dead from the start, and partition p's state (everything it
+        accumulated) is excluded from every merge from round ``fail_at[p]``
+        on.
+      * *detected* — a streaming source read raises
+        :class:`repro.data.source.PartitionLostError` (chaos wrapper
+        ``repro.dist.fault.FailingSource``, or a real storage/device
+        error); the session records the current round as that partition's
+        failure round and retries the read against the survivors.
+
+    ``estimator`` names the estimation model the GLA was built with — the
+    bound handling after a failure depends on it, not on the state
+    (``repro.dist.fault`` module docstring spells out why):
+
+      * ``single`` — survives: the alive-mask-weighted merge IS the
+        renormalization (Horvitz–Thompson over the surviving uniform
+        sample), and the variance floor — |S| is capped below |D|, so the
+        (|D|-|S|) factor in Eq. (4) never vanishes — keeps bounds finite
+        and honest.
+      * ``multiple`` — poisoned: bounds are (-inf, +inf) from the failure
+        round on.
+      * ``synchronized`` — frozen: estimates stall at the last pre-failure
+        round (infinite bounds if the failure precedes the first round).
+
+    Excluding dead partitions is a weighted merge, so the session requires
+    ``gla.merge_is_additive``.
+    """
+
+    _ESTIMATORS = ("single", "multiple", "synchronized")
+
+    def __init__(self, estimator: str = "single", *,
+                 fail_at: Optional[Mapping[int, int]] = None):
+        if estimator not in self._ESTIMATORS:
+            raise ValueError(
+                f"unknown estimator model {estimator!r}; expected one of "
+                f"{self._ESTIMATORS}")
+        self.estimator = estimator
+        self.fail_at = {int(p): int(r) for p, r in (fail_at or {}).items()}
+        for p, r in self.fail_at.items():
+            if p < 0 or r < 0:
+                raise ValueError(
+                    f"fail_at maps partition -> failure round, both >= 0; "
+                    f"got {{{p}: {r}}}")
+
+
+def _map_member_ests(fn, est):
+    """Apply ``fn`` to an Estimate, member-wise for a bundle's tuple
+    (members without an estimation model pass through as None)."""
+    if est is None:
+        return None
+    if isinstance(est, Estimate):
+        return fn(est)
+    return tuple(None if e is None else fn(e) for e in est)
 
 
 # ---------------------------------------------------------------------------
@@ -340,7 +411,8 @@ class Session:
                  stop: Optional[StoppingRule] = None,
                  confidence: float = 0.95, mode: str = "async",
                  emit: str = "chunk", lanes: int = 1, snapshots: bool = True,
-                 alive: Optional[np.ndarray] = None, mesh=None,
+                 alive: Optional[np.ndarray] = None,
+                 fault: Optional[FaultPolicy] = None, mesh=None,
                  axis_name: str = "data", sync_cost_model: bool = True):
         source = DSRC.as_source(data)
         rounds, schedule = EN.normalize_plan(gla, source, rounds, schedule,
@@ -370,6 +442,25 @@ class Session:
                      else jnp.asarray(alive_np, bool))
         self._alive_arr = alive_arr
         self._w_pr = self._w_final = None  # lazy, with the stats below
+
+        self._policy = fault
+        self._fail_at = {} if fault is None else dict(fault.fail_at)
+        self._prefail_est = None  # last all-alive round's Estimate
+        if fault is not None:
+            if alive_np is not None:
+                raise ValueError(
+                    "pass failures either as a static alive mask or "
+                    "through a FaultPolicy, not both")
+            if not gla.merge_is_additive:
+                raise ValueError(
+                    "FaultPolicy needs additive merges: excluding dead "
+                    "partitions is a weighted merge, which non-additive "
+                    "GLAs cannot honor")
+            for p in self._fail_at:
+                if p >= P:
+                    raise ValueError(
+                        f"FaultPolicy.fail_at names partition {p}, but "
+                        f"the data has P={P}")
 
         uniform = bool(np.all(self._sched == self._sched[0]))
         self._incremental_ok = (
@@ -490,6 +581,67 @@ class Session:
             self._prefetch.close()
             self._prefetch = None
 
+    # -- runtime failure bookkeeping (FaultPolicy, DESIGN.md §9) -------------
+
+    def _record_failure(self, p: int, r: int) -> None:
+        if not 0 <= p < self._P:
+            raise ValueError(
+                f"source reported lost partition {p}, but the data has "
+                f"P={self._P}")
+        # first failure round wins: a partition cannot die twice, and a
+        # retried read re-reporting the same loss must not move the round
+        self._fail_at.setdefault(int(p), int(r))
+
+    def _alive_now(self, r: int) -> np.ndarray:
+        """[P] bool — partition p contributes to round r's merge iff it has
+        not failed at or before r (``failure_schedule`` convention)."""
+        a = np.ones(self._P, bool)
+        for p, fr in self._fail_at.items():
+            if fr <= r:
+                a[p] = False
+        return a
+
+    def _first_fail_round(self) -> Optional[int]:
+        return min(self._fail_at.values()) if self._fail_at else None
+
+    def _fetch_slice(self, r: int, lo: int, hi: int):
+        """Round-r slice, surviving partition loss when a policy is
+        attached: a :class:`repro.data.source.PartitionLostError` records
+        the newly-dead partitions at this round and the read retries
+        against the survivors (the source serves them zeroed from then
+        on).  Bounded by P+1 attempts — each retry must name at least one
+        new partition, so the loop cannot spin."""
+        for _ in range(self._P + 1):
+            try:
+                return self._slice_shards(r, lo, hi)
+            except DSRC.PartitionLostError as e:
+                if self._policy is None:
+                    raise
+                for p in e.partitions:
+                    self._record_failure(p, r)
+        raise RuntimeError(
+            f"source kept losing partitions at round {r} — more loss "
+            f"reports than partitions")
+
+    def _apply_policy_est(self, est, r: int):
+        """Per-round §4.6 estimator consequences.  ``single`` passes
+        through (the alive-weighted merge already renormalized, and the
+        variance floor keeps bounds finite); ``multiple`` poisons bounds
+        from the failure round on; ``synchronized`` freezes at the last
+        pre-failure round (infinite bounds when nothing preceded it)."""
+        fr = self._first_fail_round()
+        if fr is None or r < fr:
+            self._prefail_est = est
+            return est
+        if self._policy is None or self._policy.estimator == "single":
+            return est
+        from repro.dist import fault  # local: fault imports engine
+        if self._policy.estimator == "multiple":
+            return _map_member_ests(fault.poison_bounds, est)
+        if self._prefail_est is None:  # failed before the first round
+            return _map_member_ests(fault.poison_bounds, est)
+        return self._prefail_est
+
     def step(self) -> RoundProgress:
         """Advance one round-slice; evaluate the stopping rule; return what
         it saw.  Raises on configs that cannot step incrementally."""
@@ -506,17 +658,25 @@ class Session:
         self._ensure_stats()
         r = self._steps
         lo, hi = int(self._sched[0, r]), int(self._sched[0, r + 1])
-        slice_shards = self._slice_shards(r, lo, hi)
+        slice_shards = self._fetch_slice(r, lo, hi)
         first = self._path != "scan" and r == 0
         states = self._states
         if states is None:
             states = self._init_states()
         w_r = self._w_pr[:, r]
+        all_alive = self._all_alive
+        if self._fail_at:
+            alive_now = self._alive_now(r)
+            if not alive_now.all():
+                # dead partitions drop out of this round's merge; their
+                # carry keeps stepping (harmless — weight 0 forever after)
+                w_r = w_r * jnp.asarray(alive_now, jnp.float32)
+                all_alive = False
         if self._mesh is None:
             new_states, views, merged, est = _step_vmapped(
                 self._gla, states, slice_shards, w_r, self._d_local,
                 self._d_total, path=self._path, lanes=self._lanes,
-                confidence=self._confidence, all_alive=self._all_alive,
+                confidence=self._confidence, all_alive=all_alive,
                 first=first)
         else:
             from repro.dist import shard_engine
@@ -525,6 +685,8 @@ class Session:
                 self._d_total, mesh=self._mesh, axis_name=self._axis_name,
                 path=self._path, lanes=self._lanes,
                 confidence=self._confidence, first=first)
+        if self._policy is not None:
+            est = self._apply_policy_est(est, r)
         self._states, self._views = new_states, views
         if self._snapshots:
             # snapshots off = non-interactive mode: the round's merged
@@ -563,13 +725,31 @@ class Session:
                 self._stop is None or not self._incremental_ok):
             t0 = time.perf_counter()
             self._fused = True
+            alive_arr, all_alive = self._alive_arr, self._all_alive
+            if self._fail_at:
+                # injected failures on the fused program: ship the policy
+                # as an [R, P] schedule, exactly the dist.fault path
+                from repro.dist import fault
+                alive_arr = jnp.asarray(fault.failure_schedule(
+                    self._P, self._rounds, self._fail_at))
+                all_alive = False
             self._result = EN._execute_full(
                 self._gla, self._shards, jnp.asarray(self._sched),
-                self._alive_arr, mode=self._mode, emit=self._emit,
+                alive_arr, mode=self._mode, emit=self._emit,
                 lanes=self._lanes, snapshots=self._snapshots,
-                confidence=self._confidence, all_alive=self._all_alive,
+                confidence=self._confidence, all_alive=all_alive,
                 mesh=self._mesh, axis_name=self._axis_name,
                 sync_cost_model=self._sync_cost_model)
+            if self._fail_at and self._result.estimates is not None:
+                from repro.dist import fault
+                fr = self._first_fail_round()
+                post = {"multiple": lambda e: fault._poison(e, fr),
+                        "synchronized": lambda e: fault._stall(e, fr)}.get(
+                            self._policy.estimator)
+                if post is not None and fr < self._rounds:
+                    self._result = self._result._replace(
+                        estimates=_map_member_ests(
+                            post, self._result.estimates))
             self._elapsed += time.perf_counter() - t0
             self._steps = self._rounds
             return self._result
@@ -592,13 +772,22 @@ class Session:
             return self._result
         if self._steps == 0:
             raise RuntimeError("no rounds executed yet — step() or run()")
+        w_final, all_alive = self._w_final, self._all_alive
+        if self._fail_at:
+            alive_now = self._alive_now(self._steps - 1)
+            if not alive_now.all():
+                # the final is over surviving partitions' data only — a
+                # dead partition's carry (data it scanned before dying)
+                # is lost with it, per the §4.6 failure model
+                w_final = w_final * jnp.asarray(alive_now, jnp.float32)
+                all_alive = False
         if self._mesh is None:
-            final = _final_vmapped(self._gla, self._views, self._w_final,
-                                   all_alive=self._all_alive)
+            final = _final_vmapped(self._gla, self._views, w_final,
+                                   all_alive=all_alive)
         else:
             from repro.dist import shard_engine
             final = shard_engine.session_final_sharded(
-                self._gla, self._views, self._w_final, mesh=self._mesh,
+                self._gla, self._views, w_final, mesh=self._mesh,
                 axis_name=self._axis_name)
         snaps = ests = None
         if self._merged:
@@ -625,6 +814,17 @@ class Session:
             "schedule": self._sched.tolist(),
             "alive": (None if self._alive is None
                       else np.asarray(self._alive, int).tolist()),
+            # v3 (DESIGN.md §9): per-partition scan cursors (chunk index
+            # each partition has consumed up to — the elastic resume
+            # re-derives these for a new partition count), the runtime
+            # failure record as [partition, round] pairs (msgpack maps
+            # cannot key on ints), and the fault estimator family
+            "cursors": [int(self._sched[p, self._steps])
+                        for p in range(self._P)],
+            "fail_at": sorted([int(p), int(r)]
+                              for p, r in self._fail_at.items()),
+            "fault_estimator": (None if self._policy is None
+                                else self._policy.estimator),
             "elapsed_s": self._elapsed, "converged": self._converged,
             # content fingerprint (DESIGN.md §8): resume refuses different
             # data, including same-shape impostors
@@ -680,7 +880,9 @@ class Session:
 
     @classmethod
     def resume(cls, path, gla: GLA, data, *,
-               stop: Optional[StoppingRule] = None, mesh=None,
+               stop: Optional[StoppingRule] = None,
+               partitions: Optional[int] = None,
+               fault: Optional[FaultPolicy] = None, mesh=None,
                axis_name: str = "data") -> "Session":
         """Rebuild a paused session from ``path`` + the original gla/data.
 
@@ -696,39 +898,151 @@ class Session:
         storage-independent: a session paused over in-memory shards
         resumes over an ``.npy``/parquet copy of the same rows.  ``stop``
         is attached fresh — rules are closures and do not serialize.
+
+        Every plan mismatch (gla name, shape, rounds, estimator family,
+        data content) raises a ``ValueError`` naming the field *before any
+        device work* — never a shape error from deep inside
+        ``deserialize_state``.
+
+        **Elastic resume** (DESIGN.md §9): ``partitions=P'`` continues the
+        scan on a different partition count — P'|P merges carries
+        (round-robin chunk interleave, ``scan.merge_carries``), P|P'
+        splits them (``scan.split_carries``) — so a checkpoint taken on an
+        8-way mesh resumes on a 4-way one, or vice versa.  Requires an
+        all-alive checkpoint with a partition-uniform schedule; finals
+        match the uninterrupted run up to merge-association order
+        (bitwise for count-like monoids).
+
+        A v3 checkpoint carries the runtime failure record and estimator
+        family; ``fault`` overrides/extends the restored policy (it must
+        agree on the estimator family).  ``synchronized`` sessions restore
+        the frozen estimate from the snapshot history; with
+        ``snapshots=False`` there is no history and post-failure rounds
+        degrade to infinite bounds.
         """
         meta, blob = ckpt.load_envelope(path)
-        if meta.get("version") != _CKPT_VERSION:
+        ckpt.require_version(meta, _READABLE_VERSIONS,
+                             what="session checkpoint")
+
+        # -- validate the supplied plan against the envelope BEFORE any
+        # session construction or device work, naming the field
+        src = DSRC.as_source(data)
+        if meta["gla"] != gla.name:
             raise ValueError(
-                f"unsupported session checkpoint version: {meta.get('version')}")
-        alive = (None if meta["alive"] is None
-                 else np.asarray(meta["alive"], bool))
-        sess = cls(gla, data, rounds=meta["rounds"], stop=stop,
-                   schedule=np.asarray(meta["schedule"], np.int32),
-                   alive=alive, confidence=meta["confidence"],
-                   mode=meta["mode"], emit=meta["emit"],
-                   lanes=meta["lanes"], snapshots=meta["snapshots"],
-                   mesh=mesh, axis_name=axis_name)
-        got = {"gla": gla.name, "P": sess._P, "C": sess._C, "L": sess._L,
-               "rounds": sess._rounds}
-        for k, v in got.items():
-            if meta[k] != v:
+                f"checkpoint mismatch: gla was {meta['gla']!r} at pause "
+                f"time, got {gla.name!r} now")
+        if meta["L"] != src.spec.L:
+            raise ValueError(
+                f"checkpoint mismatch: L was {meta['L']!r} at pause "
+                f"time, got {src.spec.L!r} now")
+        if src.spec.P != int(meta["P"]):
+            # the dataset may arrive in its original layout while the
+            # session was paused on an elastic view of it (or vice versa):
+            # re-wrap to the pause-time layout when the counts are
+            # repartition-compatible, else name the field
+            try:
+                src = DSRC.repartition(src, int(meta["P"]))
+            except ValueError as err:
                 raise ValueError(
-                    f"checkpoint mismatch: {k} was {meta[k]!r} at pause "
-                    f"time, got {v!r} now")
-        if meta["fingerprint"] != sess._source.fingerprint():
+                    f"checkpoint mismatch: P was {meta['P']!r} at pause "
+                    f"time, got {src.spec.P!r} now ({err})") from None
+        if meta["C"] != src.spec.C:
+            raise ValueError(
+                f"checkpoint mismatch: C was {meta['C']!r} at pause "
+                f"time, got {src.spec.C!r} now")
+        sched = np.asarray(meta["schedule"], np.int32)
+        if (sched.ndim != 2 or sched.shape[0] != meta["P"]
+                or meta["rounds"] != sched.shape[1] - 1
+                or not 0 <= meta["steps"] <= meta["rounds"]):
+            raise ValueError(
+                f"checkpoint mismatch: rounds {meta['rounds']!r} / steps "
+                f"{meta['steps']!r} do not agree with the stored "
+                f"{list(sched.shape)}-shaped schedule")
+        # fingerprint on the ORIGINAL layout — it hashes the chunk spec,
+        # so it must be checked before any repartitioning view wraps src
+        if meta["fingerprint"] != src.fingerprint():
             raise ValueError(
                 "checkpoint mismatch: data content fingerprint differs — "
                 "the supplied shards/source do not hold the data this "
                 "session was paused over (same shapes are not enough; "
                 "resuming would silently produce wrong finals)")
+
+        # -- rehydrate the fault record (v2 envelopes: no failures, no
+        # policy); a caller-supplied policy must agree on the family
+        rec_fail = {int(p): int(r) for p, r in (meta.get("fail_at") or [])}
+        rec_est = meta.get("fault_estimator")
+        if (fault is not None and rec_est is not None
+                and fault.estimator != rec_est):
+            raise ValueError(
+                f"checkpoint mismatch: fault estimator family was "
+                f"{rec_est!r} at pause time, got {fault.estimator!r} now")
+        if fault is None and rec_est is not None:
+            fault = FaultPolicy(rec_est, fail_at=rec_fail)
+        elif fault is not None and rec_fail:
+            merged_at = dict(fault.fail_at)
+            for p, r in rec_fail.items():
+                merged_at[p] = min(r, merged_at.get(p, r))
+            fault = FaultPolicy(fault.estimator, fail_at=merged_at)
+
+        alive = (None if meta["alive"] is None
+                 else np.asarray(meta["alive"], bool))
+
+        # -- elastic resume: re-derive source view + schedule for P'
+        P_old = int(meta["P"])
+        factor, split = 1, False
+        if partitions is not None and int(partitions) != P_old:
+            P_new = int(partitions)
+            if alive is not None or rec_fail:
+                raise ValueError(
+                    "elastic resume requires an all-alive checkpoint: "
+                    "dead partitions' carries are lost and cannot be "
+                    "merged or split into a new layout")
+            bounds = sched[0]
+            if not np.all(sched == bounds):
+                raise ValueError(
+                    "elastic resume requires a partition-uniform schedule")
+            src = DSRC.repartition(src, P_new)  # validates divisibility
+            if P_new <= P_old:
+                factor, split = P_old // P_new, False
+                bounds = bounds * factor
+            else:
+                factor, split = P_new // P_old, True
+                if np.any(bounds % factor):
+                    raise ValueError(
+                        f"cannot split {P_old} -> {P_new} partitions: "
+                        f"round boundaries {bounds.tolist()} are not all "
+                        f"divisible by {factor}")
+                bounds = bounds // factor
+            sched = np.broadcast_to(
+                bounds, (P_new, bounds.size)).astype(np.int32)
+
+        sess = cls(gla, src, rounds=int(sched.shape[1] - 1), stop=stop,
+                   schedule=sched, alive=alive, fault=fault,
+                   confidence=meta["confidence"],
+                   mode=meta["mode"], emit=meta["emit"],
+                   lanes=meta["lanes"], snapshots=meta["snapshots"],
+                   mesh=mesh, axis_name=axis_name)
         if meta["steps"]:
             payload = ckpt.deserialize_state(
                 blob, like=sess._payload_like(meta["steps"]))
-            sess._states = payload["states"]
-            sess._views = payload["views"]
+            states, views = payload["states"], payload["views"]
+            if factor > 1:
+                xform = SC.split_carries if split else SC.merge_carries
+                states = xform(states, factor)
+                views = xform(views, factor)
+            if mesh is not None:
+                from repro.dist import shard_engine
+                states = shard_engine.device_put_carry(
+                    states, mesh=mesh, axis_name=axis_name)
+                views = shard_engine.device_put_carry(
+                    views, mesh=mesh, axis_name=axis_name)
+            sess._states, sess._views = states, views
+            # merged/est history is partition-independent (already merged
+            # over P) — restored as-is under any elastic relayout
             sess._merged = list(payload["merged"])
             sess._ests = list(payload["ests"])
+            if sess._ests:
+                sess._prefail_est = sess._ests[-1]
         sess._steps = meta["steps"]
         sess._elapsed = meta["elapsed_s"]
         sess._converged = meta["converged"]

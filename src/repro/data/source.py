@@ -29,6 +29,13 @@ Three implementations:
     ragged partitions, so results are bitwise-identical to packing the
     rows in memory.
 
+Two cross-cutting pieces live here too: :class:`RepartitionedSource`, a
+P'-way *view* of a P-way source (round-robin chunk interleaving that keeps
+scanned prefixes prefixes — the data half of elastic checkpoint resume,
+DESIGN.md §9), and :class:`PartitionLostError`, the exception a source
+raises when a partition's storage dies mid-scan (the detection half of the
+session's ``FaultPolicy``).
+
 Every source also publishes a cheap **content fingerprint** (per-partition
 per-chunk ``_mask`` sums + strided column samples, hashed) used by
 ``Session.pause``/``resume`` to reject resuming against different data —
@@ -53,6 +60,24 @@ import numpy as np
 # strided sample cheap even for multi-GB mmaps.
 _SAMPLE_CHUNKS = 8
 _SAMPLE_ELEMS = 256
+
+
+class PartitionLostError(RuntimeError):
+    """A partition's storage/device vanished mid-scan (DESIGN.md §9).
+
+    Raised by sources (and surfaced through the session's prefetcher) when
+    a slice read touches a partition that no longer exists.  Sessions with
+    a ``repro.core.session.FaultPolicy`` attached catch it, record the
+    failure round, and retry the read; sources must serve subsequent reads
+    with the dead partitions' columns and masks zeroed — the data is gone,
+    not stale.  Without a policy the error propagates: losing data is not
+    silently survivable by default.
+    """
+
+    def __init__(self, partitions):
+        self.partitions = tuple(sorted(int(p) for p in partitions))
+        super().__init__(
+            f"partitions lost mid-scan: {list(self.partitions)}")
 
 
 class ColumnSpec(NamedTuple):
@@ -399,6 +424,93 @@ class ParquetSource(ChunkSource):
         return self._mask_sums
 
 
+class RepartitionedSource(ChunkSource):
+    """A P'-way view of a P-way source — elastic resume (DESIGN.md §9).
+
+    Merging (P' < P, P % P' == 0, k = P / P'): new partition i
+    round-robin-interleaves the chunk streams of old partitions
+    [i·k, (i+1)·k) — new chunk j is old (partition i·k + j mod k, chunk
+    j // k) — so C' = k·C.  Splitting (P' > P, P' % P == 0, k = P' / P,
+    k | C): new partition p·k + j de-interleaves old partition p's
+    stream, taking old chunks j, j+k, j+2k, …, so C' = C / k.
+
+    The round-robin convention is what makes checkpoints elastic: when
+    every old partition has scanned the same chunk prefix [0, cur) — which
+    the uniform schedules incremental sessions require — the scanned set
+    maps to the *prefix* [0, cur·k) (merge) or [0, cur/k) (split, k | cur)
+    of every new stream, so a resumed scan continues exactly where the
+    paused one stopped, with slice bounds re-derived for the new
+    partitioning.  Merge and split with the same factor are mutual
+    inverses, so repartitioning back recovers the original layout
+    bit-for-bit (tests/test_elastic.py).
+
+    Slices are gathered on the host, so the view is a streaming source
+    (``resident`` False) even over a resident inner — elastic resume runs
+    the incremental discipline by definition.
+    """
+
+    def __init__(self, inner: ChunkSource, partitions: int):
+        if not isinstance(inner, ChunkSource):
+            raise TypeError("RepartitionedSource wraps a ChunkSource; use "
+                            "repartition() for plain shards dicts")
+        P, C, L = inner.spec.P, inner.spec.C, inner.spec.L
+        P_new = int(partitions)
+        if P_new <= 0:
+            raise ValueError(f"partitions must be positive, got {partitions}")
+        if P_new <= P:
+            if P % P_new:
+                raise ValueError(
+                    f"cannot repartition {P} -> {P_new}: the new partition "
+                    "count must divide the old one (merge) or be a multiple "
+                    "of it (split)")
+            k = P // P_new
+            C_new = C * k
+        else:
+            if P_new % P:
+                raise ValueError(
+                    f"cannot repartition {P} -> {P_new}: the new partition "
+                    "count must divide the old one (merge) or be a multiple "
+                    "of it (split)")
+            k = P_new // P
+            if C % k:
+                raise ValueError(
+                    f"cannot split {P} -> {P_new}: the factor {k} must "
+                    f"divide the per-partition chunk count C={C}")
+            C_new = C // k
+        self.inner = inner
+        self._factor = k
+        self._is_merge = P_new <= P
+        self.spec = ChunkSpec(P_new, C_new, L, inner.spec.columns)
+
+    def _index_maps(self, lo: int, hi: int):
+        """Old (partition, chunk-within-block) index grids for new chunks
+        [lo, hi) of every new partition, plus the covering old range."""
+        k = self._factor
+        j = np.arange(lo, hi)
+        i = np.arange(self.spec.P)
+        if self._is_merge:
+            olo, ohi = lo // k, (hi - 1) // k + 1
+            rows = i[:, None] * k + (j % k)[None, :]
+            cols = np.broadcast_to((j // k)[None, :] - olo, rows.shape)
+        else:
+            olo, ohi = lo * k, hi * k
+            rows = np.broadcast_to((i // k)[:, None], (i.size, j.size))
+            cols = (j[None, :] - lo) * k + (i % k)[:, None]
+        return rows, cols, olo, ohi
+
+    def slice_cols(self, lo: int, hi: int):
+        rows, cols, olo, ohi = self._index_maps(lo, hi)
+        block = self.inner.slice_cols(olo, ohi)
+        return {name: np.asarray(v)[rows, cols] for name, v in block.items()}
+
+    def mask_chunk_sums(self) -> np.ndarray:
+        # pure index remap of the inner counts — no data read
+        if getattr(self, "_mask_sums", None) is None:
+            rows, cols, _, _ = self._index_maps(0, self.spec.C)
+            self._mask_sums = self.inner.mask_chunk_sums()[rows, cols]
+        return self._mask_sums
+
+
 def as_source(data) -> ChunkSource:
     """Normalize the engine's data argument: a ChunkSource passes through,
     a plain [P, C, L] shards dict wraps into an :class:`InMemorySource`."""
@@ -409,3 +521,12 @@ def as_source(data) -> ChunkSource:
     raise TypeError(
         f"expected a ChunkSource or a [P, C, L] shards dict, got "
         f"{type(data).__name__}")
+
+
+def repartition(data, partitions: int) -> ChunkSource:
+    """P'-way :class:`RepartitionedSource` view of ``data`` — pass-through
+    when the partition count already matches."""
+    src = as_source(data)
+    if int(partitions) == src.spec.P:
+        return src
+    return RepartitionedSource(src, int(partitions))

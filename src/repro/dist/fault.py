@@ -27,6 +27,13 @@ that round on).  This module owns the masks and, crucially, the
 The final (non-estimate) result is always the aggregate over surviving
 partitions' data — exact for what was scanned, silent about what was lost;
 that is precisely why the estimator-level accounting above matters.
+
+This module covers the *fused* path (:func:`run_with_failures` injects a
+whole-scan schedule and post-processes the stacked estimates).  The *live*
+counterpart — failures injected or detected mid-scan on a running session —
+is ``repro.core.session.FaultPolicy`` (DESIGN.md §9), which consumes the
+same schedules and the per-round helpers here; :class:`FailingSource` is
+the chaos wrapper that makes a streaming source actually die mid-scan.
 """
 from __future__ import annotations
 
@@ -39,6 +46,12 @@ import numpy as np
 from repro.core import engine
 from repro.core import estimators as E
 from repro.core.uda import GLA, Estimate
+from repro.data import source as DSRC
+
+# canonical home is the import-light data layer (sources raise it from
+# worker threads without importing any engine code); re-exported here
+# because callers think of it as part of the failure model
+PartitionLostError = DSRC.PartitionLostError
 
 
 def alive_mask(num_partitions: int, dead_partitions: Sequence[int]) -> np.ndarray:
@@ -110,6 +123,24 @@ def _stall(est: Estimate, fail_round: int) -> Estimate:
     )
 
 
+def poison_bounds(est: Estimate) -> Estimate:
+    """One round's Estimate with bounds forced to (-inf, +inf).
+
+    Per-round sibling of :func:`_poison`/:func:`_stall` (which operate on
+    round-stacked estimates): the live session driver applies the §4.6
+    consequences round by round as failures happen, and this is both the
+    ``multiple`` poison and the ``synchronized`` stall-before-first-round
+    for a single round's estimate.  The point estimate is kept — it is the
+    honest bounds, not the number, that §4.6 takes away.
+    """
+    return Estimate(
+        estimate=est.estimate,
+        lower=jax.tree.map(lambda x: jnp.full_like(x, -jnp.inf), est.lower),
+        upper=jax.tree.map(lambda x: jnp.full_like(x, jnp.inf), est.upper),
+        info=est.info,
+    )
+
+
 def run_with_failures(
     gla: GLA,
     shards: dict,
@@ -174,3 +205,57 @@ def variance_floor(
     full = jax.tree.map(lambda x: x[-1], res.snapshots)
     var = E.variance_estimate(full.sum, full.sumsq, full.scanned, res.d_total)
     return float(np.max(np.asarray(var)))
+
+
+class FailingSource(DSRC.ChunkSource):
+    """Chaos wrapper: partition p's storage dies at chunk ``fail_chunk[p]``.
+
+    The first ``slice_cols`` call whose range touches a partition's fail
+    chunk raises :class:`PartitionLostError` naming every newly-dead
+    partition — surfacing through the session's streaming prefetcher
+    exactly like a real read/device error would (the exception crosses the
+    worker thread via the future).  Once a partition's loss has been
+    *observed* this way, subsequent reads serve its columns and masks
+    zeroed: the data is gone, not stale, and a zeroed mask contributes
+    nothing to any additive merge.  Dataset-level stats — mask-chunk sums
+    (|D| is a property of the data, not of which replicas survive) and the
+    content fingerprint — delegate to the inner source.
+
+    ``resident`` is False even over in-memory data so the wrapper always
+    exercises the detection path the real failure would take.
+    """
+
+    resident = False
+
+    def __init__(self, inner, fail_chunk: Mapping[int, int]):
+        self.inner = DSRC.as_source(inner)
+        self.spec = self.inner.spec
+        for p in fail_chunk:
+            if not 0 <= int(p) < self.spec.P:
+                raise ValueError(
+                    f"fail_chunk names partition {p}, but the source has "
+                    f"P={self.spec.P}")
+        self._fail = {int(p): int(c) for p, c in fail_chunk.items()}
+        self._dead: set = set()
+
+    def slice_cols(self, lo: int, hi: int) -> dict:
+        newly = sorted(p for p, c in self._fail.items()
+                       if c < hi and p not in self._dead)
+        if newly:
+            # record the deaths BEFORE raising: the exception may be
+            # consumed on another thread while the next prefetch already
+            # runs here, and that read must see the partitions dead
+            self._dead.update(newly)
+            raise PartitionLostError(newly)
+        cols = {k: np.array(v, copy=True)
+                for k, v in self.inner.slice_cols(lo, hi).items()}
+        for p in self._dead:
+            for v in cols.values():
+                v[p] = 0
+        return cols
+
+    def mask_chunk_sums(self) -> np.ndarray:
+        return self.inner.mask_chunk_sums()
+
+    def fingerprint(self) -> str:
+        return self.inner.fingerprint()

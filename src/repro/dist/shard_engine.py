@@ -53,6 +53,23 @@ def device_put_slice(cols: dict, *, mesh, axis_name: str = "data"):
     return {k: jax.device_put(np.asarray(v), sh) for k, v in cols.items()}
 
 
+def device_put_carry(states, *, mesh, axis_name: str = "data"):
+    """Place a [P, ...] session carry pytree on the mesh (DESIGN.md §9).
+
+    Resumed carries arrive host-backed from the checkpoint — possibly
+    merged/split to a new partition count by the elastic carry algebra
+    (``repro.core.scan.merge_carries``/``split_carries``) — and placing
+    them explicitly along ``axis_name`` keeps the first resumed step free
+    of implicit host→device resharding; the sibling of
+    :func:`device_put_slice` for carries instead of data slices.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    sh = NamedSharding(mesh, PartitionSpec(axis_name))
+    return jax.tree.map(
+        lambda x: jax.device_put(jnp.asarray(x), sh), states)
+
+
 def _shard_map(worker, mesh, in_specs, out_specs):
     """jax-version-tolerant shard_map with replication checking off (the
     scan carry starts replicated from gla.init and becomes device-varying

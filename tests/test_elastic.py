@@ -1,0 +1,438 @@
+"""Elastic checkpoints: pause on a P-way layout, resume on P' (DESIGN.md §9).
+
+The v3 envelope records per-partition carries + cursors; ``Session.resume
+(partitions=P')`` merges (P'|P) or splits (P|P') the carries with the
+round-robin chunk interleave from ``data.source.repartition`` and
+re-derives the schedule, so the resumed scan continues over exactly the
+not-yet-scanned suffix.  Finals match the uninterrupted run — bitwise for
+count-like monoids (integer-valued f32 sums are associativity-proof),
+allclose otherwise (merge-association order changes).
+
+Also here: the named-ValueError validation contract of ``resume`` (every
+plan mismatch is reported by field, before any device work) and the v2→v3
+envelope compatibility rule.
+"""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.checkpoint import ckpt
+from repro.core import gla, randomize
+from repro.core import scan as SC
+from repro.core import session as S
+from repro.data import source as DSRC
+from repro.data import tpch
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+ROWS = 8192
+PARTS = 4
+ROUNDS = 4  # C=8 chunks/partition at chunk_len=256 -> 2 chunks per round
+
+
+@pytest.fixture(scope="module")
+def shards():
+    cols = tpch.generate_lineitem(ROWS, seed=21)
+    parts = randomize.randomize_global(
+        {k: jnp.asarray(v) for k, v in cols.items()}, jax.random.key(4),
+        PARTS)
+    return randomize.pack_partitions(parts, chunk_len=256)
+
+
+def _q6():
+    return gla.make_sum_gla(tpch.q6_func, tpch.q6_cond(tpch.Q6_LOW_WINDOW),
+                            d_total=float(ROWS))
+
+
+def _count():
+    """COUNT(*) — an integer-valued monoid whose f32 partial sums are
+    exact, so any merge association yields bitwise-equal finals."""
+    def one(c):
+        return jnp.ones_like(c["quantity"])
+
+    return gla.make_sum_gla(one, one, d_total=float(ROWS))
+
+
+def _drive(sess):
+    while not sess.done:
+        sess.step()
+    return sess.result()
+
+
+def _tobytes(tree):
+    return [np.asarray(x).tobytes() for x in jax.tree.leaves(tree)]
+
+
+def _ref_final(g, shards):
+    return np.asarray(_drive(S.Session(g, shards, rounds=ROUNDS)).final)
+
+
+# ---------------------------------------------------------------------------
+# the repartitioned source view
+# ---------------------------------------------------------------------------
+
+def test_repartition_view_data_roundtrip(shards):
+    src = DSRC.as_source(shards)
+    for pnew in (2, 8):
+        view = DSRC.repartition(shards, pnew)
+        assert view.spec.P == pnew
+        assert view.spec.P * view.spec.C == src.spec.P * src.spec.C
+        # same bag of chunks: per-chunk tuple counts are a permutation
+        assert (np.sort(view.mask_chunk_sums(), axis=None).tolist()
+                == np.sort(src.mask_chunk_sums(), axis=None).tolist())
+        # and mapping back is the identity on the data itself
+        back = DSRC.RepartitionedSource(view, src.spec.P)
+        a = back.slice_cols(0, src.spec.C)
+        b = src.slice_cols(0, src.spec.C)
+        for k in b:
+            np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+def test_repartition_preserves_scanned_prefix(shards):
+    """The round-robin interleave keeps a scanned chunk-prefix a prefix:
+    old chunks [0, c) hold exactly the rows of new chunks [0, c*k) under a
+    split (and [0, c/k) under a merge) — the invariant that lets a cursor
+    transfer across layouts by pure arithmetic."""
+    src = DSRC.as_source(shards)
+    half = src.spec.C // 2
+    olds = src.slice_cols(0, half)
+    split = DSRC.repartition(shards, 8).slice_cols(0, half // 2)
+    merged = DSRC.repartition(shards, 2).slice_cols(0, half * 2)
+    for k in olds:
+        want = np.sort(np.asarray(olds[k]), axis=None)
+        for got in (split[k], merged[k]):
+            np.testing.assert_array_equal(
+                np.sort(np.asarray(got), axis=None), want)
+
+
+def test_repartition_validates():
+    src = DSRC.as_source({"_mask": jnp.ones((4, 6, 8), jnp.float32)})
+    with pytest.raises(ValueError, match="divide"):
+        DSRC.repartition(src, 3)
+    with pytest.raises(ValueError, match="chunk count"):
+        DSRC.RepartitionedSource(src, 16)  # split factor 4 but C=6: 4 !| 6
+    assert DSRC.repartition(src, 4) is src
+
+
+# ---------------------------------------------------------------------------
+# elastic resume, vmapped engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pnew", [2, 1, 8])
+def test_resume_on_new_partition_count(shards, pnew, tmp_path):
+    g = _q6()
+    ref = _ref_final(g, shards)
+    sess = S.Session(g, shards, rounds=ROUNDS)
+    sess.step()
+    sess.step()
+    ck = tmp_path / "elastic.ckpt"
+    sess.pause(ck)
+    back = S.Session.resume(ck, g, shards, partitions=pnew)
+    assert back._P == pnew and back.steps_taken == 2
+    np.testing.assert_allclose(np.asarray(_drive(back).final), ref,
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("pnew", [2, 8])
+def test_resume_count_monoid_bitwise(shards, pnew, tmp_path):
+    g = _count()
+    ref = _ref_final(g, shards)
+    sess = S.Session(g, shards, rounds=ROUNDS)
+    sess.step()
+    ck = tmp_path / "count.ckpt"
+    sess.pause(ck)
+    final = np.asarray(_drive(S.Session.resume(ck, g, shards,
+                                               partitions=pnew)).final)
+    assert final.tobytes() == ref.tobytes()
+
+
+def test_resume_roundtrip_p_pprime_p(shards, tmp_path):
+    """4 -> P' -> 4: pause the elastically-resumed session again and come
+    back to the original layout; the final still matches."""
+    g = _q6()
+    ref = _ref_final(g, shards)
+    for pnew in (2, 8):
+        sess = S.Session(g, shards, rounds=ROUNDS)
+        sess.step()
+        a = tmp_path / f"a{pnew}.ckpt"
+        sess.pause(a)
+        mid = S.Session.resume(a, g, shards, partitions=pnew)
+        mid.step()
+        b = tmp_path / f"b{pnew}.ckpt"
+        mid.pause(b)
+        back = S.Session.resume(b, g, shards, partitions=PARTS)
+        assert back._P == PARTS and back.steps_taken == 2
+        np.testing.assert_allclose(np.asarray(_drive(back).final), ref,
+                                   rtol=1e-6)
+
+
+def test_resume_elastic_kernel_group(shards, tmp_path):
+    """The carry algebra holds for kernel running-sum carries too."""
+    g = gla.make_groupby_gla(
+        tpch.q1_func, tpch.q1_cond, tpch.q1_group_small, num_groups=4,
+        d_total=float(ROWS), num_aggs=4)
+    ref = np.asarray(
+        _drive(S.Session(g, shards, rounds=ROUNDS, emit="kernel")).final)
+    sess = S.Session(g, shards, rounds=ROUNDS, emit="kernel")
+    sess.step()
+    ck = tmp_path / "kern.ckpt"
+    sess.pause(ck)
+    back = S.Session.resume(ck, g, shards, partitions=2)
+    np.testing.assert_allclose(np.asarray(_drive(back).final), ref,
+                               rtol=1e-5)
+
+
+def test_resume_with_fault_record(shards, tmp_path):
+    """A v3 checkpoint carries the failure record and estimator family:
+    resuming restores the FaultPolicy without the caller re-supplying it,
+    and the finished run matches the uninterrupted chaos run."""
+    g = _q6()
+    ref = _drive(S.Session(g, shards, rounds=ROUNDS,
+                           fault=S.FaultPolicy("single", fail_at={2: 1})))
+    sess = S.Session(g, shards, rounds=ROUNDS,
+                     fault=S.FaultPolicy("single", fail_at={2: 1}))
+    sess.step()
+    sess.step()
+    ck = tmp_path / "fault.ckpt"
+    sess.pause(ck)
+    back = S.Session.resume(ck, g, shards)
+    assert back._policy is not None and back._policy.estimator == "single"
+    assert back._fail_at == {2: 1}
+    res = _drive(back)
+    assert _tobytes(res.final) == _tobytes(ref.final)
+    assert _tobytes(res.estimates) == _tobytes(ref.estimates)
+
+
+# ---------------------------------------------------------------------------
+# validation: every mismatch is a named ValueError before device work
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def paused(shards, tmp_path):
+    sess = S.Session(_q6(), shards, rounds=ROUNDS)
+    sess.step()
+    ck = tmp_path / "v.ckpt"
+    sess.pause(ck)
+    return ck
+
+
+def test_resume_names_mismatched_field(paused, shards):
+    g = _q6()
+    # estimator family changes the gla name -> named before any state work
+    gm = gla.make_sum_gla(tpch.q6_func, tpch.q6_cond(tpch.Q6_LOW_WINDOW),
+                          d_total=float(ROWS), estimator="multiple")
+    with pytest.raises(ValueError, match="checkpoint mismatch: gla"):
+        S.Session.resume(paused, gm, shards)
+    # partition-count mismatch of the supplied data: named P error, not a
+    # shape error from deserialize_state / normalize_plan (3-way data is
+    # not repartition-compatible with the 4-way checkpoint)
+    other = jax.tree.map(lambda x: x[:3], shards)
+    with pytest.raises(ValueError, match="checkpoint mismatch: P"):
+        S.Session.resume(paused, g, other)
+    # 2-way data IS repartition-compatible with P=4 — the wrap is
+    # attempted, and the surviving disagreement (C) is the one named
+    half = jax.tree.map(lambda x: x[:2], shards)
+    with pytest.raises(ValueError, match="checkpoint mismatch: C"):
+        S.Session.resume(paused, g, half)
+    wider = jax.tree.map(lambda x: jnp.concatenate([x, x], axis=2), shards)
+    with pytest.raises(ValueError, match="checkpoint mismatch: L"):
+        S.Session.resume(paused, g, wider)
+
+
+def test_resume_rounds_consistency_checked(paused, shards):
+    meta, blob = ckpt.load_envelope(paused)
+    meta["rounds"] = 7  # no longer agrees with the stored schedule
+    ckpt.save_envelope(paused, meta, blob)
+    with pytest.raises(ValueError, match="rounds 7"):
+        S.Session.resume(paused, _q6(), shards)
+
+
+def test_resume_fault_family_mismatch(shards, tmp_path):
+    sess = S.Session(_q6(), shards, rounds=ROUNDS,
+                     fault=S.FaultPolicy("single"))
+    sess.step()
+    ck = tmp_path / "fam.ckpt"
+    sess.pause(ck)
+    with pytest.raises(ValueError, match="fault estimator family"):
+        S.Session.resume(ck, _q6(), shards,
+                         fault=S.FaultPolicy("synchronized"))
+
+
+def test_elastic_resume_rejections(paused, shards, tmp_path):
+    g = _q6()
+    with pytest.raises(ValueError, match="repartition 4 -> 3"):
+        S.Session.resume(paused, g, shards, partitions=3)
+    # a checkpoint with recorded failures cannot be re-laid-out: the dead
+    # partition's carry is lost and cannot be merged into a new layout
+    sess = S.Session(g, shards, rounds=ROUNDS,
+                     fault=S.FaultPolicy("single", fail_at={1: 0}))
+    sess.step()
+    ck = tmp_path / "dead.ckpt"
+    sess.pause(ck)
+    with pytest.raises(ValueError, match="all-alive"):
+        S.Session.resume(ck, g, shards, partitions=2)
+
+
+def test_v3_envelope_format(shards, tmp_path):
+    sess = S.Session(_q6(), shards, rounds=ROUNDS,
+                     fault=S.FaultPolicy("single", fail_at={2: 3}))
+    sess.step()
+    ck = tmp_path / "v3.ckpt"
+    sess.pause(ck)
+    meta, _ = ckpt.load_envelope(ck)
+    assert meta["version"] == 3
+    # cursors: chunk index each partition has consumed up to (1 round of a
+    # C=8 / 4-round uniform schedule = 2 chunks)
+    assert meta["cursors"] == [2] * PARTS
+    assert meta["fail_at"] == [[2, 3]]
+    assert meta["fault_estimator"] == "single"
+
+
+def test_v2_envelope_still_readable(paused, shards):
+    """Compatibility rule: v3 readers accept v2 envelopes (the v2 fields
+    are a subset); unknown/newer versions are rejected by number."""
+    meta, blob = ckpt.load_envelope(paused)
+    for key in ("cursors", "fail_at", "fault_estimator"):
+        del meta[key]
+    meta["version"] = 2
+    ckpt.save_envelope(paused, meta, blob)
+    back = S.Session.resume(paused, _q6(), shards)
+    assert back.steps_taken == 1 and back._policy is None
+    meta["version"] = 4
+    ckpt.save_envelope(paused, meta, blob)
+    with pytest.raises(ValueError, match="unsupported session checkpoint"):
+        S.Session.resume(paused, _q6(), shards)
+
+
+# ---------------------------------------------------------------------------
+# carry algebra properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20)
+@given(st.integers(min_value=0, max_value=3),
+       st.lists(st.floats(min_value=-1e6, max_value=1e6),
+                min_size=8, max_size=8))
+def test_carry_split_merge_roundtrip_identity(kpow, vals):
+    """P -> P*k -> P is the identity on the carry pytree: a split places
+    each parent carry whole on one child (zeros elsewhere), and the merge
+    re-adds exactly x + 0.  That sum is bit-exact for every float except
+    -0.0 (IEEE canonicalizes -0.0 + 0.0 to +0.0), so equality is exact up
+    to the sign of zeros — arithmetically indistinguishable for
+    aggregation."""
+    k = 2 ** kpow
+    x = {"a": jnp.asarray(np.asarray(vals, np.float32)),
+         "b": jnp.asarray(np.asarray(vals, np.float32).reshape(8, 1)
+                          * np.arange(3.0, dtype=np.float32))}
+    rt = SC.merge_carries(SC.split_carries(x, k), k)
+    for got, want in zip(jax.tree.leaves(rt), jax.tree.leaves(x)):
+        got, want = np.asarray(got), np.asarray(want)
+        assert np.array_equal(got, want)  # -0.0 == 0.0: sign-blind
+        nz = want != 0.0
+        assert got[nz].tobytes() == want[nz].tobytes()  # bitwise elsewhere
+
+
+@settings(max_examples=20)
+@given(st.lists(st.floats(min_value=-1e6, max_value=1e6),
+                min_size=8, max_size=8))
+def test_carry_merge_then_split_preserves_observable(vals):
+    """P -> P/k -> P cannot restore per-partition placement (carries do
+    not unsum), but additive merges cannot observe placement: merging the
+    re-split carry reproduces the merged carry bitwise."""
+    x = {"a": jnp.asarray(np.asarray(vals, np.float32))}
+    down = SC.merge_carries(x, 2)
+    again = SC.merge_carries(SC.split_carries(down, 2), 2)
+    for got, want in zip(jax.tree.leaves(again), jax.tree.leaves(down)):
+        assert np.asarray(got).tobytes() == np.asarray(want).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# mesh elasticity: 8-way mesh checkpoint resumed on a 4-way mesh
+# ---------------------------------------------------------------------------
+
+needs8 = pytest.mark.skipif(jax.device_count() < 8,
+                            reason="needs 8 devices (fake-device CI lane)")
+
+
+@needs8
+def test_mesh_checkpoint_resumes_on_smaller_mesh(shards, tmp_path):
+    """ISSUE acceptance: a checkpoint written on an 8-way mesh resumes on
+    a 4-way mesh with finals equal to the uninterrupted 8-way run —
+    bitwise for the count monoid, allclose for the float sum."""
+    from jax.sharding import Mesh
+
+    cols = tpch.generate_lineitem(ROWS, seed=21)
+    parts = randomize.randomize_global(
+        {k: jnp.asarray(v) for k, v in cols.items()}, jax.random.key(4), 8)
+    shards8 = randomize.pack_partitions(parts, chunk_len=256)
+    mesh8 = Mesh(np.array(jax.devices()[:8]), ("data",))
+    mesh4 = Mesh(np.array(jax.devices()[:4]), ("data",))
+    for g, exact in ((_count(), True), (_q6(), False)):
+        ref = np.asarray(
+            _drive(S.Session(g, shards8, rounds=ROUNDS, mesh=mesh8)).final)
+        sess = S.Session(g, shards8, rounds=ROUNDS, mesh=mesh8)
+        sess.step()
+        sess.step()
+        ck = tmp_path / f"mesh-{g.name}-{exact}.ckpt"
+        sess.pause(ck)
+        back = S.Session.resume(ck, g, shards8, partitions=4, mesh=mesh4)
+        final = np.asarray(_drive(back).final)
+        if exact:
+            assert final.tobytes() == ref.tobytes()
+        else:
+            np.testing.assert_allclose(final, ref, rtol=1e-5)
+
+
+@pytest.mark.slow
+def test_elastic_8_to_4_to_8_subprocess():
+    """Full fleet-resize cycle on fake devices: scan on an 8-way mesh,
+    shrink to 4, grow back to 8, finals equal the uninterrupted run."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, %r)
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.core import gla, randomize
+        from repro.core import session as S
+        from repro.data import tpch
+        rows = 8192
+        cols = tpch.generate_lineitem(rows, seed=21)
+        parts = randomize.randomize_global(
+            {k: jnp.asarray(v) for k, v in cols.items()},
+            jax.random.key(4), 8)
+        shards = randomize.pack_partitions(parts, chunk_len=256)
+        mesh8 = Mesh(np.array(jax.devices()[:8]), ("data",))
+        mesh4 = Mesh(np.array(jax.devices()[:4]), ("data",))
+        g = gla.make_sum_gla(tpch.q6_func, tpch.q6_cond(tpch.Q6_LOW_WINDOW),
+                             d_total=float(rows))
+        def drive(s):
+            while not s.done:
+                s.step()
+            return s.result()
+        ref = drive(S.Session(g, shards, rounds=4, mesh=mesh8))
+        sess = S.Session(g, shards, rounds=4, mesh=mesh8)
+        sess.step()
+        sess.pause("/tmp/elastic-a.ckpt")
+        mid = S.Session.resume("/tmp/elastic-a.ckpt", g, shards,
+                               partitions=4, mesh=mesh4)
+        mid.step()
+        mid.pause("/tmp/elastic-b.ckpt")
+        back = S.Session.resume("/tmp/elastic-b.ckpt", g, shards,
+                                partitions=8, mesh=mesh8)
+        assert back.steps_taken == 2
+        res = drive(back)
+        np.testing.assert_allclose(np.asarray(res.final),
+                                   np.asarray(ref.final), rtol=1e-5)
+        print("OK")
+    """ % str(SRC))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
