@@ -13,6 +13,11 @@ Exit status 0 when every file conforms, 1 otherwise (CI gates on it after
                 ... ] }
 
 Row keys beyond those are benchmark-specific and pass through unchecked.
+
+Beyond per-file conformance, the validator fails when any benchmark in
+:data:`EXPECTED_BENCHES` is missing its ``BENCH_<name>.json`` — a section
+that silently emits nothing (crashed mid-run, or its ``bench_io.emit``
+call was dropped) must not pass CI.
 """
 from __future__ import annotations
 
@@ -20,6 +25,14 @@ import json
 import math
 import sys
 from pathlib import Path
+
+# every section of ``python -m benchmarks.run --smoke`` that emits a
+# BENCH_*.json; grow this set when a new section lands (kernels prints
+# CSV only; roofline depends on optional dry-run artifacts)
+EXPECTED_BENCHES = frozenset({
+    "overhead", "groupby", "multiquery", "early_stop", "fault",
+    "streaming", "convergence",
+})
 
 
 def check_payload(payload, expected_bench: str) -> list:
@@ -69,6 +82,13 @@ def main(argv=None) -> int:
         print(f"FAIL: no BENCH_*.json found under {out_dir}")
         return 1
     failed = False
+    present = {p.stem[len("BENCH_"):] for p in files}
+    missing = sorted(EXPECTED_BENCHES - present)
+    if missing:
+        failed = True
+        for name in missing:
+            print(f"FAIL BENCH_{name}.json: expected after --smoke but "
+                  f"missing from {out_dir} — the section emitted nothing")
     for path in files:
         expected = path.stem[len("BENCH_"):]
         try:

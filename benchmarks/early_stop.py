@@ -90,11 +90,11 @@ def run(rows=ROWS, repeats=3, out=sys.stdout):
     bench_rows = []
     print("name,us_per_call,derived", file=out)
     for name, (g, eps, emit) in _families(rows).items():
-        def run_full():
+        def run_full(g=g, emit=emit):
             res = engine.run_query(g, shards, rounds=ROUNDS, emit=emit)
             jax.block_until_ready(res.final)
 
-        def run_session():
+        def run_session(g=g, emit=emit, eps=eps):
             sess = S.Session(g, shards, rounds=ROUNDS, emit=emit,
                              stop=S.rel_width(eps))
             res = sess.run()

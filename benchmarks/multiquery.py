@@ -38,7 +38,7 @@ try:
 except ImportError:  # direct script invocation: benchmarks/ is sys.path[0]
     import bench_io
 
-from repro.analysis import hlo_cost as HC
+from repro.analysis import audit
 from repro.core import engine, gla, randomize
 from repro.data import tpch
 
@@ -124,16 +124,13 @@ def run(out=sys.stdout, rows=ROWS, repeats=5):
 
     # -- shared scan vs N passes over the round-emission scan path --------
     # The chunk-stream loop is the while op with trip count C/R (the
-    # round loop wraps it with trip R); per-query fix-up loops (scatter
-    # expansions, estimate assembly) have item-scale trips and are told
-    # apart by trip count.  ONE chunk pass == exactly one trip-C/R loop.
+    # round loop wraps it with trip R); the shared audit catalog
+    # (repro/analysis/audit.py) counts and certifies it.  ONE chunk pass
+    # == exactly one trip-C/R loop.
     per = C // ROUNDS
     assert per != ROUNDS, (
         "pick sizes where chunks-per-round != rounds, or the round loop "
         "is indistinguishable from the chunk loop by trip count")
-
-    def chunk_loops(compiled):
-        return sum(t == per for t in HC.while_trip_counts(compiled.as_text()))
 
     solo_compiled = [
         jax.jit(lambda sh, g=g: _finals(engine.run_query(
@@ -155,10 +152,15 @@ def run(out=sys.stdout, rows=ROWS, repeats=5):
             {"shared": shared, "n_pass": n_pass}, shards, repeats)
 
         # THE multi-query invariant: the shared program loops over the
-        # chunk stream once — N queries, one data pass.
-        shared_passes = chunk_loops(shared)
-        n_pass_passes = sum(chunk_loops(c) for c in solo_compiled[:n])
-        assert shared_passes == 1, (n, shared_passes)
+        # chunk stream once — N queries, one data pass (catalog check
+        # one_chunk_pass, the acceptance gate for N=4).
+        res = audit.check_one_chunk_pass(
+            shared.as_text(), chunk_trip=per, where=f"shared N={n}")
+        if res.failed:
+            raise AssertionError(str(res))
+        shared_passes = res.data["chunk_loops"]
+        n_pass_passes = sum(audit.chunk_loop_count(c.as_text(), per)
+                            for c in solo_compiled[:n])
         assert n_pass_passes == n, (n, n_pass_passes)
 
         # bitwise check: the shared pass returns exactly the solo results
@@ -184,12 +186,14 @@ def run(out=sys.stdout, rows=ROWS, repeats=5):
     fused = jax.jit(lambda sh: _finals(engine.run_queries(
         kernel_pool, sh, rounds=ROUNDS, emit="kernel"))
     ).lower(shards).compile()
-    fused_whiles = HC.count_ops(fused.as_text(), "while", trip_scaled=False)
-    interpret_lowering = jax.default_backend() == "cpu"
-    if interpret_lowering:
-        # every while op left in the fused kernel program is a Pallas grid
-        # loop: one dispatch per (partition, round-slice) for ALL members
-        assert fused_whiles == P * ROUNDS, fused_whiles
+    # catalog check single_kernel_dispatch: every while op left in the
+    # fused kernel program is a Pallas grid loop — one dispatch per
+    # (partition, round-slice) for ALL members (skips off-CPU backends)
+    disp = audit.check_kernel_dispatch(
+        fused.as_text(), dispatches=P * ROUNDS, where="fused bundle")
+    if disp.failed:
+        raise AssertionError(str(disp))
+    fused_whiles = disp.data.get("while_ops", -1)
     jax.block_until_ready(fused(shards))
     t0 = time.perf_counter()
     jax.block_until_ready(fused(shards))
@@ -199,7 +203,7 @@ def run(out=sys.stdout, rows=ROWS, repeats=5):
             "kernel_dispatches": P * ROUNDS,
             "kernel_dispatches_solo_total": len(kernel_pool) * P * ROUNDS,
             "hlo_while_loops": int(fused_whiles),
-            "dispatch_counts_hlo_verified": interpret_lowering,
+            "dispatch_counts_hlo_verified": disp.passed,
             "note": "interpret mode on CPU; dispatch structure is the "
                     "platform-independent mechanism (DESIGN.md §6)"})
 

@@ -45,7 +45,6 @@ try:
 except ImportError:  # direct script invocation: benchmarks/ is sys.path[0]
     import bench_io
 
-from repro.analysis import hlo_cost
 from repro.core import engine, gla, randomize
 from repro.core import session as S
 from repro.data import source as DS
@@ -95,23 +94,6 @@ def _bytes_of(spec, width):
                for c in spec.columns)
 
 
-def _step_transfer_bytes(q, src, rounds, emit):
-    """ENTRY parameter bytes of the compiled incremental step — the
-    per-round device-transfer surface, certified O(slice)."""
-    spec = src.spec
-    per = spec.C // rounds
-    sess = S.Session(q, src, rounds=rounds, emit=emit)
-    states_like = jax.eval_shape(sess._init_states)
-    lowered = S._step_vmapped.lower(
-        q, states_like, spec.slice_like(per),
-        jax.ShapeDtypeStruct((spec.P,), jnp.float32),
-        jax.ShapeDtypeStruct((spec.P,), jnp.float32),
-        jax.ShapeDtypeStruct((), jnp.float32),
-        path=sess._path, lanes=1, confidence=0.95, all_alive=True,
-        first=False)
-    return hlo_cost.entry_param_bytes(lowered.compile().as_text())
-
-
 def run(rows=ROWS, repeats=3, out=sys.stdout):
     shards, parts = _shards(rows)
     spec = DS.InMemorySource(shards).spec
@@ -156,26 +138,19 @@ def run(rows=ROWS, repeats=3, out=sys.stdout):
                     sess.step()
                 jax.block_until_ready(sess.result().final)
 
-            step_param_bytes = _step_transfer_bytes(q, sources[0][1],
-                                                    ROUNDS, emit)
-            # the O(slice) certificate: step operands are one round-slice
-            # (+ small carry/weights), never the resident dataset.  XLA
-            # DCEs columns the query never reads, so the lower bound is
-            # one live f32 column — it guards against entry_param_bytes
-            # degrading to 0 on an HLO text-format change and making the
-            # upper-bound asserts vacuous.
-            assert step_param_bytes >= spec.P * per * spec.L * 4, (
-                f"step ENTRY params {step_param_bytes}B below one column "
-                "of the slice — hlo_cost.entry_param_bytes is no longer "
-                "reading the compiled program")
-            assert step_param_bytes <= slice_bytes * 1.5 + (1 << 20), (
-                f"incremental step transfers {step_param_bytes}B, "
-                f"expected O(slice) ~ {slice_bytes}B")
-            assert step_param_bytes < dataset_bytes / 8
+            # the O(slice) certificate (catalog check o_slice_footprint):
+            # step operands are one round-slice (+ small carry/weights),
+            # never the resident dataset — floor/ceiling/out-of-core
+            # bounds live in repro/analysis/audit.py
+            report = engine.audit_plan(
+                q, sources[0][1], rounds=ROUNDS, emit=emit,
+                checks=("o_slice_footprint",), raise_on_failure=True)
+            step_param_bytes = (
+                report.result("o_slice_footprint").data["entry_param_bytes"])
 
             timings = bench_io.time_interleaved(
-                [lambda: run_fused(shards), lambda: run_inc(shards)]
-                + [lambda s=s: run_fused(s) for _, s in sources], repeats)
+                [lambda: run_fused(shards), lambda: run_inc(shards),
+                 *(lambda s=s: run_fused(s) for _, s in sources)], repeats)
             fused_us, inc_us, stream_us_list = (timings[0], timings[1],
                                                 timings[2:])
 

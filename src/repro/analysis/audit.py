@@ -1,0 +1,742 @@
+"""Compiled-program invariant auditor — the catalog behind DESIGN.md §10.
+
+PF-OLA's "virtually no overhead" claim (paper §5) is not a wall-time
+accident: it rests on structural invariants of the *compiled* program —
+one pass over the chunk stream, an O(slice) device footprint per
+incremental step, one kernel dispatch per round-slice, one merge
+collective per round, no recompilation as the session advances.  Until
+now those invariants were spot-asserted by private HLO greps buried in
+three benchmarks; this module names them, makes each one a reusable
+check over optimized HLO text (built on ``repro.analysis.hlo_cost``),
+and certifies any plan pre-execution:
+
+    from repro.core import engine
+    report = engine.audit_plan(q, shards, rounds=8, emit="chunk")
+    report.raise_for_failures()
+
+or at session construction::
+
+    Session(q, shards, rounds=8, audit=True)   # raises AuditError on fail
+
+The catalog (check names accepted by ``checks=``):
+
+  ``one_chunk_pass``            exactly one while loop over the chunk
+                                stream, regardless of how many queries or
+                                estimators ride the scan (from
+                                benchmarks/multiquery.py).
+  ``o_slice_footprint``         the incremental step program's ENTRY
+                                parameters are one round-slice plus the
+                                small carry/weights — never the dataset
+                                (from benchmarks/streaming.py).
+  ``single_kernel_dispatch``    kernel plans issue exactly one
+                                ``ops.group_agg``/partials dispatch per
+                                (partition, round-slice) (from
+                                benchmarks/groupby.py; CPU interpret mode
+                                shows dispatches as Pallas grid loops).
+  ``one_collective_per_round``  a sharded session step lowers its single
+                                ``lax.psum`` to at most one all-reduce
+                                per merged-state leaf, and none of them
+                                sits inside the chunk loop (collective
+                                count is O(1) per round, not O(C)).
+  ``dtype_discipline``          no estimator state or estimate leaf is
+                                silently carried below float32.
+  ``no_recompile_across_rounds``  driving a session through all its
+                                rounds adds at most one jit cache entry
+                                per distinct slice shape (plus the
+                                kernel paths' first-round variant) —
+                                the no-recompile-storm certificate.
+                                Dynamic (executes the scan), so it is
+                                NOT in the default check set; request it
+                                explicitly or via ``ALL_CHECKS``.
+
+Checks report ``pass`` / ``fail`` / ``skip`` — skip means the invariant
+does not apply to the plan (e.g. kernel dispatch counts on a scan plan,
+collectives without a mesh) and carries the reason, so a CI lane can
+assert "nothing failed" without lying about what it certified.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import hlo_cost
+from repro.core import engine as EN
+from repro.core import scan as SC
+from repro.data import source as DSRC
+
+
+class AuditError(RuntimeError):
+    """Raised by :meth:`AuditReport.raise_for_failures` when any check failed."""
+
+
+@dataclass(frozen=True)
+class CheckResult:
+    """Outcome of one named invariant check.
+
+    ``status`` is ``"pass"``, ``"fail"`` or ``"skip"``; ``detail`` is a
+    human-readable sentence (the skip reason, or what was measured);
+    ``data`` carries the measured quantities (loop counts, byte totals,
+    cache deltas) for benchmarks and tests to consume.
+    """
+
+    name: str
+    status: str
+    detail: str = ""
+    data: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def passed(self) -> bool:
+        return self.status == "pass"
+
+    @property
+    def failed(self) -> bool:
+        return self.status == "fail"
+
+    @property
+    def skipped(self) -> bool:
+        return self.status == "skip"
+
+    def __str__(self) -> str:
+        return f"[{self.status:>4}] {self.name}: {self.detail}"
+
+
+@dataclass(frozen=True)
+class AuditReport:
+    """Structured result of :func:`audit_plan` over one plan."""
+
+    plan: Dict[str, Any]
+    results: Tuple[CheckResult, ...]
+
+    @property
+    def ok(self) -> bool:
+        """True when no check failed (skips do not count against a plan)."""
+        return not self.failures
+
+    @property
+    def failures(self) -> Tuple[CheckResult, ...]:
+        return tuple(r for r in self.results if r.failed)
+
+    def result(self, name: str) -> CheckResult:
+        for r in self.results:
+            if r.name == name:
+                return r
+        raise KeyError(f"no check named {name!r} in this report "
+                       f"(ran: {[r.name for r in self.results]})")
+
+    def raise_for_failures(self) -> None:
+        if self.failures:
+            lines = [f"plan {self.plan} failed "
+                     f"{len(self.failures)} invariant check(s):"]
+            lines += [f"  {r}" for r in self.failures]
+            raise AuditError("\n".join(lines))
+
+    def summary(self) -> str:
+        head = (f"audit {self.plan.get('gla')} [{self.plan.get('engine')}, "
+                f"emit={self.plan.get('emit')}]: "
+                f"{'OK' if self.ok else 'FAIL'}")
+        return "\n".join([head, *(f"  {r}" for r in self.results)])
+
+
+# ---------------------------------------------------------------------------
+# the reusable checks: pure functions over optimized HLO text
+# ---------------------------------------------------------------------------
+
+def chunk_loop_count(hlo_text: str, trip: int) -> int:
+    """Number of while loops with exactly ``trip`` iterations.
+
+    The chunk-stream loop is identified by its trip count (chunks per
+    round-slice, or C for whole-shard scans); per-query fix-up loops
+    (scatter expansions, estimate assembly) have item-scale trips and are
+    told apart by it — the multiquery benchmark's original discriminator.
+    """
+    return sum(t == trip for t in hlo_cost.while_trip_counts(hlo_text))
+
+
+def check_one_chunk_pass(hlo_text: str, *, chunk_trip: int,
+                         expected: int = 1, where: str = "") -> CheckResult:
+    """ONE loop over the chunk stream, no matter how many queries ride it."""
+    n = chunk_loop_count(hlo_text, chunk_trip)
+    loc = f" ({where})" if where else ""
+    if n == expected:
+        return CheckResult(
+            "one_chunk_pass", "pass",
+            f"{n} loop(s) with trip {chunk_trip}{loc}",
+            {"chunk_loops": n, "chunk_trip": chunk_trip})
+    return CheckResult(
+        "one_chunk_pass", "fail",
+        f"expected {expected} chunk loop(s) with trip {chunk_trip}, found "
+        f"{n}{loc} — the program re-scans (or never scans) the chunk stream",
+        {"chunk_loops": n, "chunk_trip": chunk_trip,
+         "trips": hlo_cost.while_trip_counts(hlo_text)})
+
+
+def check_slice_footprint(hlo_text: str, *, slice_bytes: int,
+                          floor_bytes: int, dataset_bytes: Optional[int] = None,
+                          where: str = "") -> CheckResult:
+    """ENTRY parameter bytes of the step program are O(slice), not O(data).
+
+    ``floor_bytes`` (one live column of the slice) guards against the HLO
+    text format drifting and ``entry_param_bytes`` degrading to ~0, which
+    would make the upper bound vacuous.  The ceiling allows 1.5x the slice
+    plus 1 MiB of carry/weights.  When ``dataset_bytes`` shows the plan is
+    out-of-core by >= 8x, the step must also stay below dataset/8.
+    """
+    got = hlo_cost.entry_param_bytes(hlo_text)
+    ceil = slice_bytes * 1.5 + (1 << 20)
+    data = {"entry_param_bytes": got, "slice_bytes": slice_bytes,
+            "floor_bytes": floor_bytes, "ceiling_bytes": ceil,
+            "dataset_bytes": dataset_bytes}
+    loc = f" ({where})" if where else ""
+    if got < floor_bytes:
+        return CheckResult(
+            "o_slice_footprint", "fail",
+            f"step ENTRY params {got:.0f}B below one live column "
+            f"({floor_bytes}B){loc} — entry_param_bytes is no longer "
+            "reading the compiled program", data)
+    if got > ceil:
+        return CheckResult(
+            "o_slice_footprint", "fail",
+            f"step transfers {got:.0f}B, expected O(slice) ~ "
+            f"{slice_bytes}B{loc}", data)
+    if (dataset_bytes is not None and dataset_bytes >= 8 * slice_bytes
+            and got >= dataset_bytes / 8):
+        return CheckResult(
+            "o_slice_footprint", "fail",
+            f"step transfers {got:.0f}B >= dataset/8 "
+            f"({dataset_bytes}B total){loc} — the scan is not "
+            "out-of-core", data)
+    return CheckResult(
+        "o_slice_footprint", "pass",
+        f"step ENTRY params {got:.0f}B within "
+        f"[{floor_bytes}, {ceil:.0f}]B{loc}", data)
+
+
+def check_kernel_dispatch(hlo_text: str, *, dispatches: int,
+                          backend: Optional[str] = None,
+                          where: str = "") -> CheckResult:
+    """Exactly ``dispatches`` Pallas launches — and NO leftover scan loops.
+
+    In interpret mode (the CPU backend) every while op remaining in an
+    optimized kernel-path program is a Pallas grid loop, so the total
+    while count IS the dispatch count (benchmarks/groupby.py).  On other
+    backends dispatches lower to custom-calls the text of which is not
+    stable across versions, so the check is skipped rather than guessed.
+    """
+    backend = backend if backend is not None else jax.default_backend()
+    if backend != "cpu":
+        return CheckResult(
+            "single_kernel_dispatch", "skip",
+            f"dispatch structure is only countable in Pallas interpret "
+            f"mode (backend is {backend!r})", {"backend": backend})
+    n = int(hlo_cost.count_ops(hlo_text, "while", trip_scaled=False))
+    loc = f" ({where})" if where else ""
+    data = {"while_ops": n, "expected": dispatches, "backend": backend}
+    if n == dispatches:
+        return CheckResult(
+            "single_kernel_dispatch", "pass",
+            f"{n} grid loop(s) == one dispatch per (partition, "
+            f"round-slice){loc}", data)
+    return CheckResult(
+        "single_kernel_dispatch", "fail",
+        f"expected {dispatches} Pallas grid loops, found {n} while "
+        f"op(s){loc} — extra scan loops or missing/duplicated dispatches",
+        data)
+
+
+def check_collectives(hlo_text: str, *, max_reductions: int,
+                      where: str = "") -> CheckResult:
+    """One psum per sharded step: <= one all-reduce per merged-state leaf,
+    and none of them trip-scaled (i.e. inside the chunk loop).
+
+    A single ``lax.psum`` of a k-leaf state lowers to at most k all-reduce
+    ops (XLA may combine them further), so "one collective per round"
+    compiles to ``1 <= n <= k``.  The trip-invariance clause is the real
+    performance contract: the synchronized barrier's per-chunk psum shows
+    up precisely as a trip-scaled count of O(C), not O(1).
+    """
+    flat = sum(int(hlo_cost.count_ops(hlo_text, op, trip_scaled=False))
+               for op in ("all-reduce", "all-reduce-start"))
+    scaled = sum(int(hlo_cost.count_ops(hlo_text, op, trip_scaled=True))
+                 for op in ("all-reduce", "all-reduce-start"))
+    loc = f" ({where})" if where else ""
+    data = {"all_reduce_ops": flat, "trip_scaled": scaled,
+            "max_reductions": max_reductions}
+    if flat == 0:
+        return CheckResult(
+            "one_collective_per_round", "fail",
+            f"no all-reduce in the sharded step{loc} — the merge "
+            "collective was lost (states would stay per-device)", data)
+    if flat > max_reductions:
+        return CheckResult(
+            "one_collective_per_round", "fail",
+            f"{flat} all-reduce ops for a {max_reductions}-leaf merged "
+            f"state{loc} — more than one collective round per step", data)
+    if scaled != flat:
+        return CheckResult(
+            "one_collective_per_round", "fail",
+            f"all-reduce count is trip-scaled ({flat} -> {scaled}){loc} — "
+            "a collective sits inside the chunk loop (per-chunk barrier "
+            "semantics leaked into the async step)", data)
+    return CheckResult(
+        "one_collective_per_round", "pass",
+        f"{flat} all-reduce op(s) <= {max_reductions} state leaves, none "
+        f"inside loops{loc}", data)
+
+
+def check_dtype_discipline(shapes_by_role: Dict[str, Any]) -> CheckResult:
+    """No floating leaf of the estimator state/estimate below float32.
+
+    ``shapes_by_role`` maps a role name ("init", "states", "merged",
+    "estimate", ...) to a pytree of ``jax.ShapeDtypeStruct`` (from
+    ``jax.eval_shape`` — the check never touches real data).
+    """
+    narrow = []
+    for role, tree in shapes_by_role.items():
+        if tree is None:
+            continue
+        for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+            dt = np.dtype(leaf.dtype)
+            if np.issubdtype(dt, np.floating) and dt.itemsize < 4:
+                narrow.append(f"{role}{jax.tree_util.keystr(path)}: {dt}")
+    if narrow:
+        return CheckResult(
+            "dtype_discipline", "fail",
+            "estimator state carried below float32: " + ", ".join(narrow),
+            {"narrow_leaves": narrow})
+    n = sum(len(jax.tree_util.tree_leaves(t))
+            for t in shapes_by_role.values() if t is not None)
+    return CheckResult(
+        "dtype_discipline", "pass",
+        f"{n} state/estimate leaves all >= float32",
+        {"leaves_checked": n})
+
+
+# ---------------------------------------------------------------------------
+# the plan driver
+# ---------------------------------------------------------------------------
+
+STATIC_CHECKS: Tuple[str, ...] = (
+    "one_chunk_pass", "o_slice_footprint", "single_kernel_dispatch",
+    "one_collective_per_round", "dtype_discipline")
+ALL_CHECKS: Tuple[str, ...] = (*STATIC_CHECKS, "no_recompile_across_rounds")
+
+
+class _Plan:
+    """Lowered-program cache + shared shape math for one audited plan."""
+
+    def __init__(self, gla, source, sched: np.ndarray, *, emit: str,
+                 mode: str, lanes: int, snapshots: bool, confidence: float,
+                 mesh, axis_name: str):
+        self.gla = gla
+        self.source = source
+        self.sched = sched
+        self.emit, self.mode, self.lanes = emit, mode, lanes
+        self.snapshots, self.confidence = snapshots, confidence
+        self.mesh, self.axis_name = mesh, axis_name
+        spec = source.spec
+        self.P, self.C, self.L = spec.P, spec.C, spec.L
+        self.R = sched.shape[1] - 1
+        self.uniform = bool(np.all(sched == sched[0]))
+        self.widths = sorted({int(sched[0, r + 1] - sched[0, r])
+                              for r in range(self.R)}) if self.uniform else []
+        self.steppable = mode == "async" and self.uniform
+        if emit == "kernel":
+            self.path = ("kernel_bundle" if gla.members
+                         else "kernel_group" if gla.kernel_num_groups
+                         is not None else "kernel_scalar")
+        else:
+            self.path = "scan"
+        self._step = None       # (hlo_text, eval_shape outputs)
+        self._fused_hlo = None
+
+    # -- shape math ----------------------------------------------------------
+
+    def col_bytes(self, width: int) -> int:
+        """Bytes of every column over [P, width, L] (+ trailing dims)."""
+        total = 0
+        for c in self.source.spec.columns:
+            n = self.P * width * self.L
+            for t in c.trailing:
+                n *= t
+            total += n * np.dtype(c.dtype).itemsize
+        return total
+
+    def states_like(self):
+        base = (SC.stack_init(self.gla, self.lanes)
+                if self.path == "scan" else self.gla.init())
+        return jax.eval_shape(lambda: jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (self.P, *x.shape)), base))
+
+    # -- lowered programs ----------------------------------------------------
+
+    def step(self):
+        """(optimized HLO text, eval_shape outputs) of the per-round step
+        program — the same lowering the session's incremental driver jits.
+        Returns None for plans that cannot step (sync mode, non-uniform
+        schedule)."""
+        if not self.steppable:
+            return None
+        if self._step is None:
+            w = max(self.widths)
+            args = (self.gla, self.states_like(),
+                    self.source.spec.slice_like(w),
+                    jax.ShapeDtypeStruct((self.P,), jnp.float32),
+                    jax.ShapeDtypeStruct((self.P,), jnp.float32),
+                    jax.ShapeDtypeStruct((), jnp.float32))
+            if self.mesh is None:
+                from repro.core import session as SN
+                fn = SN._step_vmapped
+                kw = dict(path=self.path, lanes=self.lanes,
+                          confidence=self.confidence, all_alive=True,
+                          first=False)
+            else:
+                from repro.dist import shard_engine
+                fn = shard_engine.session_step_sharded
+                kw = dict(mesh=self.mesh, axis_name=self.axis_name,
+                          path=self.path, lanes=self.lanes,
+                          confidence=self.confidence, first=False)
+            hlo = fn.lower(*args, **kw).compile().as_text()
+            self._step = (hlo, fn.eval_shape(*args, **kw))
+        return self._step
+
+    def fused(self) -> Optional[str]:
+        """Optimized HLO text of the fused whole-scan program.  Lowered
+        from shapes only (no data), but reported only for resident sources
+        — a streaming plan never runs it."""
+        if not self.source.resident:
+            return None
+        if self._fused_hlo is None:
+            shards_like = self.source.spec.slice_like(self.C)
+            sched_like = jax.ShapeDtypeStruct((self.P, self.R + 1), jnp.int32)
+            if self.mesh is None:
+                low = EN._run_vmapped.lower(
+                    self.gla, shards_like, sched_like,
+                    jax.ShapeDtypeStruct((self.P,), jnp.bool_),
+                    mode=self.mode, emit=self.emit, lanes=self.lanes,
+                    snapshots=self.snapshots, confidence=self.confidence,
+                    all_alive=True)
+            else:
+                from repro.dist import shard_engine
+                low = shard_engine._run_sharded_jit.lower(
+                    self.gla, shards_like, sched_like,
+                    jax.ShapeDtypeStruct((self.P, self.R), jnp.float32),
+                    mesh=self.mesh, axis_name=self.axis_name, mode=self.mode,
+                    emit=self.emit, lanes=self.lanes,
+                    snapshots=self.snapshots, sync_cost_model=True)
+            self._fused_hlo = low.compile().as_text()
+        return self._fused_hlo
+
+
+def _skip(name: str, reason: str) -> CheckResult:
+    return CheckResult(name, "skip", reason)
+
+
+def _merge_results(name: str, parts) -> CheckResult:
+    """Combine per-program results for one check into a single verdict."""
+    parts = [p for p in parts if p is not None]
+    if not parts:
+        return _skip(name, "no program to audit for this plan")
+    fails = [p for p in parts if p.failed]
+    if fails:
+        return fails[0]
+    passes = [p for p in parts if p.passed]
+    if passes:
+        detail = "; ".join(p.detail for p in passes)
+        data = {}
+        for p in passes:
+            data.update(p.data)
+        return CheckResult(name, "pass", detail, data)
+    return CheckResult(name, "skip", "; ".join(p.detail for p in parts))
+
+
+def _audit_one_chunk_pass(p: _Plan) -> CheckResult:
+    if p.path != "scan":
+        return _skip("one_chunk_pass",
+                     "kernel plans have no chunk scan loop — dispatch "
+                     "structure is certified by single_kernel_dispatch")
+    if p.emit == "round_masked":
+        return _skip("one_chunk_pass",
+                     "emit='round_masked' re-scans all chunks per round — "
+                     "O(R*C) by design (DESIGN.md §3)")
+    if p.emit not in ("chunk", "round"):
+        return _skip("one_chunk_pass", f"emit={p.emit!r} not audited")
+    parts = []
+    fused = p.fused()
+    if fused is not None:
+        trip = p.C if p.emit == "chunk" else p.C // p.R
+        if p.emit == "round" and (p.C % p.R or trip == p.R):
+            parts.append(_skip(
+                "one_chunk_pass",
+                f"fused round loop (trip {p.R}) indistinguishable from "
+                f"the chunk loop (trip {trip}) at these sizes"))
+        else:
+            parts.append(check_one_chunk_pass(
+                fused, chunk_trip=trip, where="fused program"))
+    step = p.step()
+    if step is not None:
+        w = max(p.widths)
+        parts.append(check_one_chunk_pass(
+            step[0], chunk_trip=w, where="step program"))
+    elif fused is None:
+        parts.append(_skip("one_chunk_pass",
+                           "plan is neither fused-executable nor "
+                           "incrementally steppable"))
+    return _merge_results("one_chunk_pass", parts)
+
+
+def _audit_slice_footprint(p: _Plan) -> CheckResult:
+    step = p.step()
+    if step is None:
+        return _skip("o_slice_footprint",
+                     "plan cannot step incrementally — no per-round "
+                     "transfer surface to certify")
+    w = max(p.widths)
+    # the sharded step's optimized HLO is the *per-device* module: its
+    # ENTRY params hold 1/ndev of every partition-sharded operand
+    ndev = 1 if p.mesh is None else int(p.mesh.devices.size)
+    return check_slice_footprint(
+        step[0], slice_bytes=p.col_bytes(w) // ndev,
+        floor_bytes=p.P * w * p.L * 4 // ndev,
+        dataset_bytes=p.col_bytes(p.C) // ndev, where="step program")
+
+
+def _audit_kernel_dispatch(p: _Plan) -> CheckResult:
+    if p.path == "scan":
+        return _skip("single_kernel_dispatch",
+                     "not a kernel plan (emit != 'kernel')")
+    per_shard = p.R if (p.path != "kernel_scalar" and p.snapshots) else 1
+    parts = []
+    fused = p.fused()
+    if fused is not None:
+        trip = p.C // per_shard if p.C % per_shard == 0 else 0
+        if trip < 2:
+            parts.append(_skip(
+                "single_kernel_dispatch",
+                f"grid of {trip} step(s) per dispatch is unrolled in "
+                "interpret mode — nothing to count"))
+        else:
+            expected = (p.P if p.mesh is None else 1) * per_shard
+            parts.append(check_kernel_dispatch(
+                fused, dispatches=expected, where="fused program"))
+    step = p.step()
+    if step is not None:
+        w = max(p.widths)
+        if w < 2:
+            parts.append(_skip(
+                "single_kernel_dispatch",
+                "1-chunk round-slices are unrolled in interpret mode"))
+        else:
+            parts.append(check_kernel_dispatch(
+                step[0], dispatches=p.P if p.mesh is None else 1,
+                where="step program"))
+    return _merge_results("single_kernel_dispatch", parts)
+
+
+def _audit_collectives(p: _Plan) -> CheckResult:
+    if p.mesh is None:
+        return _skip("one_collective_per_round",
+                     "vmapped engine merges with a tensordot — no "
+                     "collectives to count (pass mesh= for the sharded "
+                     "engine)")
+    if p.mesh.devices.size <= 1:
+        return _skip("one_collective_per_round",
+                     "1-device mesh — psum lowers to a no-op")
+    step = p.step()
+    if step is None:
+        return _skip("one_collective_per_round",
+                     "plan cannot step incrementally — per-round "
+                     "collective structure undefined")
+    merged_like = step[1][2]
+    leaves = len(jax.tree_util.tree_leaves(merged_like))
+    return check_collectives(step[0], max_reductions=leaves,
+                             where="sharded step")
+
+
+def _audit_dtype(p: _Plan) -> CheckResult:
+    roles = {"init": p.states_like()}
+    step = p.step()
+    if step is not None:
+        new_states, views, merged, est = step[1]
+        roles.update({"states": new_states, "views": views,
+                      "merged": merged, "estimate": est})
+    return check_dtype_discipline(roles)
+
+
+def _audit_no_recompile(p: _Plan) -> CheckResult:
+    if not p.steppable:
+        return _skip("no_recompile_across_rounds",
+                     "plan cannot step incrementally — nothing recompiles")
+    if p.mesh is None:
+        from repro.core import session as SN
+        fn = SN._step_vmapped
+    else:
+        from repro.dist import shard_engine
+        fn = shard_engine.session_step_sharded
+    cache_size = getattr(fn, "_cache_size", None)
+    if cache_size is None:
+        return _skip("no_recompile_across_rounds",
+                     "jit cache introspection unavailable in this jax")
+    from repro.core import session as SN
+    before = cache_size()
+    sess = SN.Session(
+        p.gla, p.source, rounds=p.R, schedule=p.sched, emit=p.emit,
+        mode=p.mode, lanes=p.lanes, snapshots=p.snapshots,
+        confidence=p.confidence, mesh=p.mesh, axis_name=p.axis_name)
+    while not sess.done:
+        sess.step()
+    jax.block_until_ready(sess.result().final)
+    delta = cache_size() - before
+    # one entry per distinct slice shape, plus at most one extra
+    # steady-state variant: kernel paths trace a first=True round-0
+    # program (running sum starts from the first delta instead of
+    # zero + delta), and sharded sessions retrace once when round 0's
+    # freshly-initialized (unsharded) states are replaced by the step's
+    # own mesh-sharded outputs.  Both are one-time; a per-round miss is
+    # the storm this check exists to catch.
+    extra = 1 if p.R > 1 and (p.path != "scan" or p.mesh is not None) else 0
+    budget = len(p.widths) + extra
+    data = {"cache_miss_delta": delta, "budget": budget,
+            "rounds": p.R, "distinct_widths": len(p.widths)}
+    if delta <= budget:
+        return CheckResult(
+            "no_recompile_across_rounds", "pass",
+            f"{p.R} rounds compiled {delta} step program(s) "
+            f"(budget {budget})", data)
+    return CheckResult(
+        "no_recompile_across_rounds", "fail",
+        f"{p.R} rounds triggered {delta} step compilations (budget "
+        f"{budget}) — a recompile storm: some step input's shape/dtype "
+        "or a static argument varies per round", data)
+
+
+_CHECK_FNS: Dict[str, Callable[[_Plan], CheckResult]] = {
+    "one_chunk_pass": _audit_one_chunk_pass,
+    "o_slice_footprint": _audit_slice_footprint,
+    "single_kernel_dispatch": _audit_kernel_dispatch,
+    "one_collective_per_round": _audit_collectives,
+    "dtype_discipline": _audit_dtype,
+    "no_recompile_across_rounds": _audit_no_recompile,
+}
+
+
+def audit_plan(gla, data, *, rounds: int = 8,
+               schedule: Optional[np.ndarray] = None, emit: str = "chunk",
+               mode: str = "async", lanes: int = 1, snapshots: bool = True,
+               confidence: float = 0.95, mesh=None, axis_name: str = "data",
+               checks: Optional[Sequence[str]] = None,
+               raise_on_failure: bool = False) -> AuditReport:
+    """Certify a query plan against the invariant catalog, pre-execution.
+
+    Args mirror :func:`repro.core.engine.run_query`; the plan is validated
+    and normalized by the same ``engine.normalize_plan``, then its compiled
+    programs (the fused whole-scan program for resident sources, the
+    incremental step program for steppable configs) are lowered from
+    *shapes only* and checked — no data is scanned.  The one exception is
+    ``no_recompile_across_rounds``, which drives a throwaway session over
+    the real data; it is excluded from the default ``checks``
+    (:data:`STATIC_CHECKS`) and must be requested explicitly (or via
+    :data:`ALL_CHECKS`).
+
+    Returns an :class:`AuditReport`; with ``raise_on_failure`` the report
+    raises :class:`AuditError` before returning.
+    """
+    source = DSRC.as_source(data)
+    R, sched = EN.normalize_plan(gla, source, rounds, schedule, emit)
+    plan = _Plan(gla, source, np.asarray(sched, np.int32), emit=emit,
+                 mode=mode, lanes=lanes, snapshots=snapshots,
+                 confidence=confidence, mesh=mesh, axis_name=axis_name)
+    names = tuple(checks) if checks is not None else STATIC_CHECKS
+    unknown = [n for n in names if n not in _CHECK_FNS]
+    if unknown:
+        raise ValueError(f"unknown audit check(s) {unknown}; catalog: "
+                         f"{sorted(_CHECK_FNS)}")
+    results = tuple(_CHECK_FNS[n](plan) for n in names)
+    report = AuditReport(
+        plan={"gla": gla.name,
+              "engine": "sharded" if mesh is not None else "vmapped",
+              "emit": emit, "mode": mode, "path": plan.path,
+              "P": plan.P, "C": plan.C, "L": plan.L, "rounds": plan.R,
+              "lanes": lanes, "backend": jax.default_backend()},
+        results=results)
+    if raise_on_failure:
+        report.raise_for_failures()
+    return report
+
+
+# ---------------------------------------------------------------------------
+# CLI: the CI audit-smoke lane (python -m repro.analysis.audit)
+# ---------------------------------------------------------------------------
+
+def _smoke_data(rows: int, parts: int, chunk: int, rounds: int):
+    from repro.core import randomize
+    from repro.data import tpch
+
+    cols = tpch.generate_lineitem(rows, seed=7)
+    shards = randomize.randomize_global(
+        {k: jnp.asarray(v) for k, v in cols.items()}, jax.random.key(7),
+        parts)
+    n_chunks = -(-rows // parts // chunk)
+    # >= 2 chunks per round-slice so interpret-mode grid loops stay loops,
+    # and chunks-per-round != rounds so the chunk loop is identifiable
+    min_chunks = max(-(-n_chunks // rounds), 2) * rounds
+    if min_chunks // rounds == rounds:
+        min_chunks += rounds
+    return randomize.pack_partitions(shards, chunk_len=chunk,
+                                     min_chunks=min_chunks)
+
+
+def _smoke_plans(rows: int):
+    from repro.core import gla
+    from repro.data import tpch
+
+    d = float(rows)
+    q6 = gla.make_sum_gla(tpch.q6_func, tpch.q6_cond(tpch.Q6_LOW_WINDOW),
+                          d_total=d)
+    q1 = gla.make_groupby_gla(tpch.q1_func, tpch.q1_cond,
+                              tpch.q1_group_small, num_groups=4, d_total=d,
+                              num_aggs=4)
+    from repro.core.gla import GLABundle
+    bundle = GLABundle([q1, q6])
+    return [("q6", q6, "chunk"), ("q1", q1, "kernel"),
+            ("bundle", bundle, "kernel")]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Certify the q1/q6/bundle smoke plans against the full "
+                    "invariant catalog on both engines (CI audit-smoke).")
+    ap.add_argument("--rows", type=int, default=20_000)
+    ap.add_argument("--rounds", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    failed = False
+    meshes = [("vmapped", None, 4)]
+    n_dev = jax.device_count()
+    if n_dev > 1:
+        from repro.launch.mesh import make_test_mesh
+        mesh = make_test_mesh(n_dev)
+        meshes.append(("sharded", mesh, mesh.devices.size))
+    else:
+        print("# single device: sharded-engine plans skipped "
+              "(run under XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+    for engine_name, mesh, parts in meshes:
+        shards = _smoke_data(args.rows, parts, 128, args.rounds)
+        for name, q, emit in _smoke_plans(args.rows):
+            report = audit_plan(q, shards, rounds=args.rounds, emit=emit,
+                                mesh=mesh, checks=ALL_CHECKS)
+            print(report.summary())
+            if not report.ok:
+                failed = True
+    print("audit-smoke:", "FAIL" if failed else "OK")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,506 @@
+"""Framework-contract linter — static AST checks on the repo's own source.
+
+PF-OLA's composability argument (DESIGN.md §2) only holds while every GLA
+honors the merge-monoid contract and every jitted region stays a pure
+shape-stable function of its inputs.  This module enforces those
+disciplines *statically*, with the stdlib ``ast`` module only (no jax
+import — the CI ``contracts`` job runs it on a bare Python):
+
+    python -m repro.analysis.contracts src tests benchmarks examples
+
+Rules (DESIGN.md §10 documents each with rationale):
+
+  C001  ``GLA(...)`` constructed with ``kernel_num_groups`` must also pass
+        ``kernel_cols`` — the group kernel cannot gather its inputs
+        otherwise (the constructor would fail only at dispatch time).
+  C002  A ``GLA`` subclass that overrides one of a paired protocol must
+        override both: (``kernel_cols``, ``kernel_num_groups``) and
+        (``serialize``, ``deserialize``).  Half a pair is a latent
+        dispatch/checkpoint bug.
+  C003  No host concretization inside registered jit regions: ``float()``,
+        ``int()``, ``bool()``, ``.item()``, ``np.asarray``/``np.array``,
+        ``jax.device_get``, ``.tolist()``.  Each forces a device sync and
+        breaks tracing.
+  C004  No wall-clock or host RNG inside registered jit regions:
+        ``time.time``/``perf_counter``/``monotonic``, ``datetime.now``,
+        ``np.random.*``, ``random.*``.  They freeze a trace-time value
+        into the compiled program.
+  C005  Divisions in ``core/estimators.py`` must have statically-clamped
+        denominators (a nonzero constant, or a value built from
+        ``jnp.maximum``/``jnp.clip``).  This is the "no NaN reaches a
+        QueryResult" invariant, checked before runtime.
+  C006  ``variance_estimate`` must keep both guards: a ``jnp.maximum``
+        clamp and the ``jnp.where`` small-sample gate.
+  C007  The checkpoint envelope manifest: ``_CKPT_VERSION`` must equal the
+        newest version recorded in :data:`ENVELOPE_HISTORY`, and the keys
+        built by ``Session._meta`` must match that manifest exactly — any
+        envelope change forces a version bump *and* a history entry here.
+  C008  Suppression comments (``# contracts: allow(C0XX)``) are honored
+        only for ``(path-suffix, rule)`` pairs recorded in
+        :data:`ALLOWLIST`; an unlisted suppression is itself an error, so
+        the allowlist in this file is the single audit point.
+
+Exit status: 0 when clean, 1 with one ``path:line: CODE message`` line per
+violation on stdout.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import io
+import re
+import sys
+import tokenize
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+# ---------------------------------------------------------------------------
+# Policy tables
+# ---------------------------------------------------------------------------
+
+# Files whose functions run under jax.jit, and how the jit regions are
+# identified within them:
+#   "all"       — every top-level function in the file is traced code
+#                 (scan.py is the chunk-fold library; nothing in it may
+#                 touch the host)
+#   "decorated" — only functions carrying a jax.jit /
+#                 functools.partial(jax.jit, ...) decorator, including
+#                 every def nested inside them
+JIT_REGION_FILES: Dict[str, str] = {
+    "core/scan.py": "all",
+    "core/session.py": "decorated",
+    "core/engine.py": "decorated",
+    "dist/shard_engine.py": "decorated",
+}
+
+# Versioned manifest of the checkpoint envelope's meta keys.  Growing or
+# renaming a key in Session._meta REQUIRES bumping _CKPT_VERSION and adding
+# the new key set here — C007 fails otherwise.  History is append-only.
+ENVELOPE_HISTORY: Dict[int, frozenset] = {
+    2: frozenset({
+        "version", "gla", "rounds", "steps", "emit", "mode", "lanes",
+        "snapshots", "confidence", "path", "P", "C", "L", "schedule",
+        "alive", "elapsed_s", "converged", "source", "fingerprint",
+    }),
+    3: frozenset({
+        "version", "gla", "rounds", "steps", "emit", "mode", "lanes",
+        "snapshots", "confidence", "path", "P", "C", "L", "schedule",
+        "alive", "cursors", "fail_at", "fault_estimator", "elapsed_s",
+        "converged", "source", "fingerprint",
+    }),
+}
+
+# The only suppressions the linter honors: (path suffix, rule) pairs.
+# Empty today — a new entry is a reviewed policy decision, not a local
+# convenience (DESIGN.md §10).
+ALLOWLIST: frozenset = frozenset()
+
+_SUPPRESS_RE = re.compile(r"#\s*contracts:\s*allow\((C\d{3})\)")
+
+_HOST_CASTS = {"float", "int", "bool"}
+_HOST_NP_FNS = {"asarray", "array"}
+_HOST_METHODS = {"item", "tolist"}
+_CLOCK_TIME_FNS = {"time", "perf_counter", "monotonic", "process_time"}
+
+
+class Violation:
+    __slots__ = ("path", "line", "code", "message")
+
+    def __init__(self, path: str, line: int, code: str, message: str):
+        self.path, self.line = path, line
+        self.code, self.message = code, message
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+
+def _dotted(node: ast.AST) -> str:
+    """'np.random.normal' for nested Attribute/Name chains, '' otherwise."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    d = _dotted(dec)
+    if d in ("jax.jit", "jit"):
+        return True
+    if isinstance(dec, ast.Call):
+        f = _dotted(dec.func)
+        if f in ("jax.jit", "jit"):
+            return True
+        if f in ("functools.partial", "partial") and dec.args:
+            return _dotted(dec.args[0]) in ("jax.jit", "jit")
+    return False
+
+
+# ---------------------------------------------------------------------------
+# C001/C002 — GLA construction and subclass pairing
+# ---------------------------------------------------------------------------
+
+_PAIRS = (("kernel_cols", "kernel_num_groups"),
+          ("serialize", "deserialize"))
+
+
+def _check_gla(tree: ast.Module, path: str, out: List[Violation]) -> None:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _dotted(node.func).split(".")[-1] == "GLA":
+            kw = {k.arg for k in node.keywords if k.arg}
+            if "kernel_num_groups" in kw and "kernel_cols" not in kw:
+                out.append(Violation(
+                    path, node.lineno, "C001",
+                    "GLA(..., kernel_num_groups=...) without kernel_cols=: "
+                    "the group kernel has no input columns to gather"))
+        if isinstance(node, ast.ClassDef):
+            bases = {_dotted(b).split(".")[-1] for b in node.bases}
+            if "GLA" not in bases:
+                continue
+            defined: Set[str] = set()
+            for item in node.body:
+                if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    defined.add(item.name)
+                elif isinstance(item, ast.Assign):
+                    for t in item.targets:
+                        if isinstance(t, ast.Name):
+                            defined.add(t.id)
+                elif isinstance(item, ast.AnnAssign) and isinstance(
+                        item.target, ast.Name):
+                    defined.add(item.target.id)
+            for a, b in _PAIRS:
+                if (a in defined) != (b in defined):
+                    have, miss = (a, b) if a in defined else (b, a)
+                    out.append(Violation(
+                        path, node.lineno, "C002",
+                        f"GLA subclass {node.name} defines {have} without "
+                        f"{miss}: the protocol is both-or-neither"))
+
+
+# ---------------------------------------------------------------------------
+# C003/C004 — host calls inside jit regions
+# ---------------------------------------------------------------------------
+
+def _jit_functions(tree: ast.Module, policy: str) -> Iterable[ast.AST]:
+    if policy == "all":
+        for node in tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield node
+        return
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(_is_jit_decorator(d) for d in node.decorator_list):
+                yield node
+
+
+def _check_host_calls(fn: ast.AST, path: str, out: List[Violation]) -> None:
+    fname = getattr(fn, "name", "<lambda>")
+    where = f"in jit region {fname!r}"
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        d = _dotted(node.func)
+        leaf = d.split(".")[-1] if d else ""
+        if isinstance(node.func, ast.Name) and node.func.id in _HOST_CASTS:
+            out.append(Violation(
+                path, node.lineno, "C003",
+                f"host concretization {node.func.id}(...) {where}: forces "
+                "a device sync and breaks tracing"))
+        elif d in (f"np.{f}" for f in _HOST_NP_FNS) or d in (
+                f"numpy.{f}" for f in _HOST_NP_FNS):
+            out.append(Violation(
+                path, node.lineno, "C003",
+                f"host concretization {d}(...) {where}"))
+        elif d in ("jax.device_get", "device_get"):
+            out.append(Violation(
+                path, node.lineno, "C003",
+                f"host concretization {d}(...) {where}"))
+        elif isinstance(node.func, ast.Attribute) and not d and (
+                node.func.attr in _HOST_METHODS):
+            out.append(Violation(
+                path, node.lineno, "C003",
+                f"host concretization .{node.func.attr}() {where}"))
+        elif leaf in _HOST_METHODS and d.count(".") >= 1 and not d.startswith(
+                ("np.", "numpy.", "jnp.")):
+            out.append(Violation(
+                path, node.lineno, "C003",
+                f"host concretization {d}(...) {where}"))
+        elif d in (f"time.{f}" for f in _CLOCK_TIME_FNS):
+            out.append(Violation(
+                path, node.lineno, "C004",
+                f"wall-clock {d}() {where}: freezes a trace-time value "
+                "into the compiled program"))
+        elif d in ("datetime.now", "datetime.datetime.now", "datetime.utcnow"):
+            out.append(Violation(
+                path, node.lineno, "C004", f"wall-clock {d}() {where}"))
+        elif d.startswith(("np.random.", "numpy.random.")):
+            out.append(Violation(
+                path, node.lineno, "C004",
+                f"host RNG {d}(...) {where}: not keyed, not traceable"))
+        elif d.startswith("random."):
+            out.append(Violation(
+                path, node.lineno, "C004", f"host RNG {d}(...) {where}"))
+
+
+# ---------------------------------------------------------------------------
+# C005/C006 — estimator clamp discipline
+# ---------------------------------------------------------------------------
+
+_CLAMP_FNS = {"jnp.maximum", "jnp.clip", "jax.numpy.maximum",
+              "jax.numpy.clip"}
+
+
+def _collect_assignments(fn: ast.AST) -> Dict[str, ast.AST]:
+    """name -> last assigned value expression, within one function body."""
+    assigns: Dict[str, ast.AST] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and (
+                isinstance(node.targets[0], ast.Name)):
+            assigns[node.targets[0].id] = node.value
+        elif isinstance(node, ast.AnnAssign) and isinstance(
+                node.target, ast.Name) and node.value is not None:
+            assigns[node.target.id] = node.value
+    return assigns
+
+
+def _is_clamped(node: ast.AST, assigns: Dict[str, ast.AST],
+                seen: Optional[Set[str]] = None) -> bool:
+    """Statically nonzero: a nonzero constant, a clamp-call result, or an
+    Add/Sub/Mult combination of clamped parts (Sub conservatively requires
+    only one side — safe*(safe-1) with safe>=2 is the idiom)."""
+    seen = seen or set()
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, (int, float)) and node.value != 0
+    if isinstance(node, ast.Call) and _dotted(node.func) in _CLAMP_FNS:
+        return True
+    if isinstance(node, ast.Name):
+        if node.id in seen or node.id not in assigns:
+            return False
+        return _is_clamped(assigns[node.id], assigns, seen | {node.id})
+    if isinstance(node, ast.BinOp):
+        if isinstance(node.op, ast.Mult):
+            return (_is_clamped(node.left, assigns, seen)
+                    and _is_clamped(node.right, assigns, seen))
+        if isinstance(node.op, (ast.Add, ast.Sub)):
+            return (_is_clamped(node.left, assigns, seen)
+                    or _is_clamped(node.right, assigns, seen))
+    if isinstance(node, ast.BoolOp):
+        return all(_is_clamped(v, assigns, seen) for v in node.values)
+    return False
+
+
+def _check_estimators(tree: ast.Module, path: str,
+                      out: List[Violation]) -> None:
+    var_fn = None
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if fn.name == "variance_estimate":
+            var_fn = fn
+        assigns = _collect_assignments(fn)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Div):
+                if not _is_clamped(node.right, assigns):
+                    out.append(Violation(
+                        path, node.lineno, "C005",
+                        f"division in {fn.name!r} with an unclamped "
+                        "denominator — route it through jnp.maximum/clip "
+                        "so no NaN reaches a QueryResult"))
+    if var_fn is None:
+        out.append(Violation(path, 1, "C006",
+                             "variance_estimate is missing"))
+        return
+    src_calls = {_dotted(n.func) for n in ast.walk(var_fn)
+                 if isinstance(n, ast.Call)}
+    if not src_calls & {"jnp.maximum", "jax.numpy.maximum"}:
+        out.append(Violation(
+            path, var_fn.lineno, "C006",
+            "variance_estimate lost its jnp.maximum clamp"))
+    if not src_calls & {"jnp.where", "jax.numpy.where"}:
+        out.append(Violation(
+            path, var_fn.lineno, "C006",
+            "variance_estimate lost its jnp.where small-sample gate"))
+
+
+# ---------------------------------------------------------------------------
+# C007 — checkpoint envelope manifest
+# ---------------------------------------------------------------------------
+
+def _check_envelope(tree: ast.Module, path: str,
+                    out: List[Violation]) -> None:
+    version: Optional[int] = None
+    ver_line = 1
+    meta_fn = None
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and (
+                isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == "_CKPT_VERSION"
+                and isinstance(node.value, ast.Constant)):
+            version = node.value.value
+            ver_line = node.lineno
+        if isinstance(node, ast.FunctionDef) and node.name == "_meta":
+            meta_fn = node
+    if version is None or meta_fn is None:
+        out.append(Violation(
+            path, 1, "C007",
+            "could not locate _CKPT_VERSION and Session._meta — the "
+            "envelope manifest check has lost its anchor"))
+        return
+    newest = max(ENVELOPE_HISTORY)
+    if version != newest:
+        out.append(Violation(
+            path, ver_line, "C007",
+            f"_CKPT_VERSION is {version} but ENVELOPE_HISTORY's newest "
+            f"manifest is v{newest} — bump the version and record the new "
+            "key set in repro/analysis/contracts.py"))
+        return
+    ret_dict = None
+    for node in ast.walk(meta_fn):
+        if isinstance(node, ast.Return) and isinstance(node.value, ast.Dict):
+            ret_dict = node.value
+    if ret_dict is None:
+        out.append(Violation(
+            path, meta_fn.lineno, "C007",
+            "_meta no longer returns a literal dict — the envelope "
+            "manifest can no longer be audited statically"))
+        return
+    keys = set()
+    for k in ret_dict.keys:
+        if isinstance(k, ast.Constant) and isinstance(k.value, str):
+            keys.add(k.value)
+        else:
+            out.append(Violation(
+                path, getattr(k, "lineno", meta_fn.lineno), "C007",
+                "_meta uses a non-literal key — envelope keys must be "
+                "string literals so the manifest stays auditable"))
+    manifest = ENVELOPE_HISTORY[newest]
+    extra, missing = keys - manifest, manifest - keys
+    if extra or missing:
+        detail = []
+        if extra:
+            detail.append(f"unmanifested keys {sorted(extra)}")
+        if missing:
+            detail.append(f"missing manifest keys {sorted(missing)}")
+        out.append(Violation(
+            path, meta_fn.lineno, "C007",
+            f"Session._meta drifted from the v{newest} envelope manifest "
+            f"({'; '.join(detail)}) — changing the envelope requires a "
+            "_CKPT_VERSION bump plus a new ENVELOPE_HISTORY entry"))
+
+
+# ---------------------------------------------------------------------------
+# Suppressions (C008) and the per-file driver
+# ---------------------------------------------------------------------------
+
+def _suppressions(src: str) -> Dict[int, str]:
+    """line -> suppressed rule, from REAL comment tokens only.
+
+    Tokenizing (rather than scanning raw lines) keeps suppression text
+    inside string literals — lint fixtures, docs — from being honored."""
+    sup: Dict[int, str] = {}
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(src).readline)
+        for tok in tokens:
+            if tok.type == tokenize.COMMENT:
+                m = _SUPPRESS_RE.search(tok.string)
+                if m:
+                    sup[tok.start[0]] = m.group(1)
+    except (tokenize.TokenizeError, IndentationError, SyntaxError):
+        pass  # unparseable source already fails as C000
+    return sup
+
+
+def _rel(path: Path, root: Path) -> str:
+    try:
+        return str(path.relative_to(root))
+    except ValueError:
+        return str(path)
+
+
+def lint_file(path: Path, root: Path) -> List[Violation]:
+    rel = _rel(path, root)
+    src = path.read_text()
+    try:
+        tree = ast.parse(src, filename=rel)
+    except SyntaxError as e:
+        return [Violation(rel, e.lineno or 1, "C000",
+                          f"syntax error: {e.msg}")]
+    out: List[Violation] = []
+    _check_gla(tree, rel, out)
+    for suffix, policy in JIT_REGION_FILES.items():
+        if rel.replace("\\", "/").endswith(suffix):
+            for fn in _jit_functions(tree, policy):
+                _check_host_calls(fn, rel, out)
+    if rel.replace("\\", "/").endswith("core/estimators.py"):
+        _check_estimators(tree, rel, out)
+    if rel.replace("\\", "/").endswith("core/session.py"):
+        _check_envelope(tree, rel, out)
+
+    sup = _suppressions(src)
+    kept: List[Violation] = []
+    consumed: Set[int] = set()
+    for v in out:
+        if sup.get(v.line) == v.code:
+            consumed.add(v.line)
+            key = next((s for s in (a for a, _ in ALLOWLIST)
+                        if rel.endswith(s)), None)
+            if (key, v.code) in ALLOWLIST:
+                continue  # documented, allowlisted suppression
+            kept.append(Violation(
+                v.path, v.line, "C008",
+                f"suppression of {v.code} not in the contracts ALLOWLIST "
+                f"(suppressed: {v.message})"))
+        else:
+            kept.append(v)
+    # a suppression that silenced nothing of its code is stale — also C008
+    for line, code in sup.items():
+        if line not in consumed:
+            kept.append(Violation(
+                rel, line, "C008",
+                f"stale suppression: no {code} violation on this line"))
+    return kept
+
+
+def iter_py_files(targets: Sequence[str], root: Path) -> Iterable[Path]:
+    for t in targets:
+        p = (root / t) if not Path(t).is_absolute() else Path(t)
+        if p.is_file() and p.suffix == ".py":
+            yield p
+        elif p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                if "out" in f.parts or "__pycache__" in f.parts:
+                    continue
+                yield f
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="PF-OLA framework-contract linter (rules C001-C008; "
+                    "see DESIGN.md §10)")
+    ap.add_argument("targets", nargs="*",
+                    default=["src", "tests", "benchmarks", "examples"],
+                    help="files or directories to lint (default: the four "
+                         "first-party trees)")
+    ap.add_argument("--root", default=".",
+                    help="repo root for relative paths (default: cwd)")
+    args = ap.parse_args(argv)
+    root = Path(args.root).resolve()
+
+    violations: List[Violation] = []
+    n_files = 0
+    for f in iter_py_files(args.targets, root):
+        n_files += 1
+        violations.extend(lint_file(f, root))
+    for v in violations:
+        print(v)
+    tag = "FAIL" if violations else "OK"
+    print(f"contracts: {tag} — {len(violations)} violation(s) across "
+          f"{n_files} file(s)")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -190,6 +190,11 @@ class HloCost:
     @staticmethod
     def _find_entry(hlo: str) -> str:
         m = re.search(r"^ENTRY\s+%([^\s(]+)", hlo, re.M)
+        if m is None:
+            raise ValueError(
+                "no ENTRY computation in HLO text — not an optimized HLO "
+                "dump (pass compiled.as_text(), not a lowered/StableHLO "
+                "module)")
         return m.group(1)
 
     def _operand_names(self, inst: Instruction) -> List[str]:

@@ -425,3 +425,24 @@ def run_queries(
         out.append(QueryResult(res.final[i], snap, est,
                                res.d_total, res.d_local))
     return out
+
+
+def audit_plan(gla, data, *, rounds: int = 8, schedule=None,
+               emit: str = "chunk", mode: str = "async", lanes: int = 1,
+               snapshots: bool = True, confidence: float = 0.95,
+               mesh=None, axis_name: str = "data", checks=None,
+               raise_on_failure: bool = False):
+    """Certify a query plan against the compiled-program invariant catalog.
+
+    Thin re-export of :func:`repro.analysis.audit.audit_plan` so callers
+    holding an engine handle can audit without importing ``repro.analysis``
+    themselves.  Args mirror :func:`run_query`; returns an
+    ``AuditReport``.  No data is scanned by the default (static) checks.
+    """
+    from repro.analysis import audit as AU  # local: analysis is optional at load
+
+    return AU.audit_plan(
+        gla, data, rounds=rounds, schedule=schedule, emit=emit, mode=mode,
+        lanes=lanes, snapshots=snapshots, confidence=confidence, mesh=mesh,
+        axis_name=axis_name, checks=checks,
+        raise_on_failure=raise_on_failure)

@@ -129,7 +129,8 @@ def single_estimate(state: SumState, confidence, *, d_total) -> Estimate:
     est = horvitz_estimate(state.sum, state.scanned, d_total)
     var = variance_estimate(state.sum, state.sumsq, state.scanned, d_total)
     lo, hi = normal_bounds(est, var, confidence)
-    return Estimate(est, lo, hi, info={"var": var, "frac": state.scanned / d_total})
+    frac = state.scanned / jnp.maximum(d_total, 1.0)
+    return Estimate(est, lo, hi, info={"var": var, "frac": frac})
 
 
 class MultState(NamedTuple):

@@ -62,14 +62,14 @@ def stack_init(gla: GLA, lanes: int) -> Pytree:
     s = gla.init()
     if lanes == 1:
         return s
-    return jax.tree.map(lambda x: jnp.broadcast_to(x, (lanes,) + x.shape), s)
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (lanes, *x.shape)), s)
 
 
 def fold_merge(merge, states: Pytree, n: int) -> Pytree:
     """Left-fold ``merge`` over a leading axis of length ``n``."""
     acc = jax.tree.map(lambda x: x[0], states)
     for i in range(1, n):
-        acc = merge(acc, jax.tree.map(lambda x: x[i], states))
+        acc = merge(acc, jax.tree.map(lambda x, i=i: x[i], states))
     return acc
 
 
@@ -140,7 +140,7 @@ def scan_rounds(gla: GLA, cols: dict, lanes: int, rounds: int):
     C = cols["_mask"].shape[0]
     assert C % rounds == 0, f"uniform rounds path needs C%R==0, got {C}%{rounds}"
     per = C // rounds
-    rcols = {k: v.reshape((rounds, per) + v.shape[1:]) for k, v in cols.items()}
+    rcols = {k: v.reshape((rounds, per, *v.shape[1:])) for k, v in cols.items()}
     init = stack_init(gla, lanes)
 
     def round_body(st, round_cols):
@@ -501,7 +501,7 @@ def merge_carries(states: Pytree, group: int) -> Pytree:
     """
     def m(x):
         assert x.shape[0] % group == 0, (x.shape, group)
-        g = x.reshape((x.shape[0] // group, group) + x.shape[1:])
+        g = x.reshape((x.shape[0] // group, group, *x.shape[1:]))
         acc = g[:, 0]
         for j in range(1, group):
             acc = acc + g[:, j]
@@ -522,8 +522,8 @@ def split_carries(states: Pytree, group: int) -> Pytree:
     """
     def s(x):
         z = jnp.zeros_like(x)
-        cols = [x] + [z] * (group - 1)
+        cols = [x, *[z] * (group - 1)]
         return jnp.stack(cols, axis=1).reshape(
-            (x.shape[0] * group,) + x.shape[1:])
+            (x.shape[0] * group, *x.shape[1:]))
 
     return jax.tree.map(s, states)

@@ -413,7 +413,8 @@ class Session:
                  emit: str = "chunk", lanes: int = 1, snapshots: bool = True,
                  alive: Optional[np.ndarray] = None,
                  fault: Optional[FaultPolicy] = None, mesh=None,
-                 axis_name: str = "data", sync_cost_model: bool = True):
+                 axis_name: str = "data", sync_cost_model: bool = True,
+                 audit=None):
         source = DSRC.as_source(data)
         rounds, schedule = EN.normalize_plan(gla, source, rounds, schedule,
                                              emit)
@@ -507,6 +508,22 @@ class Session:
         self._fused = False
         self._result: Optional[EN.QueryResult] = None
 
+        # audit=True certifies the plan against the static invariant
+        # catalog before the first byte is scanned (audit=("name", ...)
+        # selects checks); any failure raises AuditError here, in the
+        # constructor, so a bad plan never runs.  The report is kept on
+        # ``self.audit_report`` for callers that want the pass details.
+        self.audit_report = None
+        if audit:
+            from repro.analysis import audit as AU
+            self.audit_report = AU.audit_plan(
+                gla, source, rounds=rounds, schedule=self._sched,
+                emit=emit, mode=mode, lanes=lanes, snapshots=snapshots,
+                confidence=self._confidence, mesh=mesh,
+                axis_name=axis_name,
+                checks=None if audit is True else tuple(audit),
+                raise_on_failure=True)
+
     # -- introspection -------------------------------------------------------
 
     @property
@@ -538,7 +555,7 @@ class Session:
         base = (SC.stack_init(self._gla, self._lanes)
                 if self._path == "scan" else self._gla.init())
         return jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (self._P,) + x.shape), base)
+            lambda x: jnp.broadcast_to(x, (self._P, *x.shape)), base)
 
     def _ensure_stats(self) -> None:
         if self._d_local is None:

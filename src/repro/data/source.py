@@ -106,7 +106,7 @@ class ChunkSpec(NamedTuple):
 
         return {
             c.name: jax.ShapeDtypeStruct(
-                (self.P, width, self.L) + c.trailing, np.dtype(c.dtype))
+                (self.P, width, self.L, *c.trailing), np.dtype(c.dtype))
             for c in self.columns
         }
 

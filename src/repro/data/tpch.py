@@ -149,7 +149,7 @@ def _exact_batches(cols, batch_rows: int):
             chunk = {}
             for k, v in sl.items():
                 a = np.asarray(v)  # one host materialization per column
-                chunk[k] = jnp.asarray(a.reshape((-1,) + a.shape[3:]))
+                chunk[k] = jnp.asarray(a.reshape((-1, *a.shape[3:])))
             yield chunk
         return
     n = next(iter(cols.values())).shape[0]

@@ -90,7 +90,7 @@ def first_failure_round(alive) -> Optional[int]:
 def _poison(est: Estimate, fail_round: int) -> Estimate:
     """Bounds -> (-inf, +inf) from ``fail_round`` on (multiple model)."""
     def after(x, v):
-        r = jnp.arange(x.shape[0]).reshape((-1,) + (1,) * (x.ndim - 1))
+        r = jnp.arange(x.shape[0]).reshape((-1, *(1,) * (x.ndim - 1)))
         return jnp.where(r >= fail_round, v, x)
 
     return Estimate(
@@ -112,7 +112,7 @@ def _stall(est: Estimate, fail_round: int) -> Estimate:
         )
 
     def freeze(x):
-        r = jnp.arange(x.shape[0]).reshape((-1,) + (1,) * (x.ndim - 1))
+        r = jnp.arange(x.shape[0]).reshape((-1, *(1,) * (x.ndim - 1)))
         return jnp.where(r >= fail_round, x[fail_round - 1], x)
 
     return Estimate(

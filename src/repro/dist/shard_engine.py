@@ -160,7 +160,7 @@ def _run_sharded_jit(gla: GLA, shards: dict, sched: jnp.ndarray,
             return x * alive_r[-1].astype(x.dtype)
 
         def w_rounds(x):
-            w = alive_r.reshape((R,) + (1,) * (x.ndim - 1))
+            w = alive_r.reshape((R, *(1,) * (x.ndim - 1)))
             return x * w.astype(x.dtype)
 
         merged_final = lax.psum(jax.tree.map(w_final, final_view), axis_name)

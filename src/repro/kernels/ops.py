@@ -26,7 +26,7 @@ def _pad_rows(x, multiple, fill=0):
     n = x.shape[0]
     pad = (-n) % multiple
     if pad:
-        x = jnp.concatenate([x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)])
+        x = jnp.concatenate([x, jnp.full((pad, *x.shape[1:]), fill, x.dtype)])
     return x
 
 

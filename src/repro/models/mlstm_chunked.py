@@ -83,7 +83,7 @@ def mlstm_chunkwise(q, k, v, logi, logf, *, chunk: int = 128,
 
     def to_chunks(x):                         # [B,S,...] -> [n,c,B,H,...]
         x = jnp.moveaxis(x, 1, 0)             # [S,B,...]
-        return x.reshape((n_chunks, c) + x.shape[1:])
+        return x.reshape((n_chunks, c, *x.shape[1:]))
 
     xs = tuple(to_chunks(x) for x in (q, k, v, logi, logf))
     if initial is None:

@@ -50,14 +50,14 @@ def _blocked_scan(step, carry, xs, block: int):
     while S % b:
         b -= 1
     n = S // b
-    xs_b = jax.tree.map(lambda a: a.reshape((n, b) + a.shape[1:]), xs)
+    xs_b = jax.tree.map(lambda a: a.reshape((n, b, *a.shape[1:])), xs)
 
     @jax.checkpoint
     def outer(carry, xb):
         return lax.scan(step, carry, xb)
 
     carry, ys_b = lax.scan(outer, carry, xs_b)
-    ys = jax.tree.map(lambda a: a.reshape((S,) + a.shape[2:]), ys_b)
+    ys = jax.tree.map(lambda a: a.reshape((S, *a.shape[2:])), ys_b)
     return carry, ys
 
 

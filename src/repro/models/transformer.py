@@ -488,7 +488,7 @@ def init_cache(cfg: ArchConfig, batch: int, seq_len: int):
     group = {f"b{i}": _block_cache(cfg, lt, batch, seq_len)
              for i, lt in enumerate(pat)}
     stacked = jax.tree.map(
-        lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape), group
+        lambda x: jnp.broadcast_to(x, (n_groups, *x.shape)), group
     ) if n_groups else {}
     return {
         "layers": stacked,

@@ -59,7 +59,7 @@ def accumulate_until_confident(
     history = []
     n_used = M
     for i in range(M):
-        mb = jax.tree.map(lambda x: x[i], microbatches)
+        mb = jax.tree.map(lambda x, i=i: x[i], microbatches)
         loss, g = grad_fn(params, mb)
         loss = float(loss)
         g_acc = g if g_acc is None else jax.tree.map(jnp.add, g_acc, g)

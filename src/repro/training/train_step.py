@@ -90,7 +90,7 @@ def _split_micro(batch, m, batch_axes=None):
     from jax.sharding import PartitionSpec as P
 
     def split(x):
-        x = x.reshape((m, x.shape[0] // m) + x.shape[1:])
+        x = x.reshape((m, x.shape[0] // m, *x.shape[1:]))
         if batch_axes:
             spec = P(None, batch_axes, *([None] * (x.ndim - 2)))
             x = jax.lax.with_sharding_constraint(x, spec)

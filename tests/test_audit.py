@@ -1,0 +1,252 @@
+"""Invariant auditor (repro/analysis/audit.py): pure checks on crafted
+HLO, report mechanics, and audit_plan end-to-end on both engines."""
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import audit
+from repro.core import engine
+from repro.core.session import Session
+
+ROWS = 8_000
+ROUNDS = 4
+
+
+@pytest.fixture(scope="module")
+def shards():
+    return audit._smoke_data(ROWS, 2, 128, ROUNDS)
+
+
+@pytest.fixture(scope="module")
+def plans():
+    return {name: (q, emit) for name, q, emit in audit._smoke_plans(ROWS)}
+
+
+# ---------------------------------------------------------------------------
+# pure checks over crafted HLO text
+# ---------------------------------------------------------------------------
+
+_LOOPY = """HloModule m
+
+%cond (p: f32[4]) -> pred[] {
+  %p = f32[4]{0} parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+
+%body (q: f32[4]) -> f32[4] {
+  %q = f32[4]{0} parameter(0)
+  ROOT %add = f32[4]{0} add(%q, %q)
+}
+
+ENTRY %main (arg: f32[4]) -> f32[4] {
+  %arg = f32[4]{0} parameter(0)
+  %w1 = f32[4]{0} while(%arg), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"12"}}
+  ROOT %w2 = f32[4]{0} while(%w1), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+}
+"""
+
+
+def test_chunk_loop_count_discriminates_by_trip():
+    assert audit.chunk_loop_count(_LOOPY, 12) == 1
+    assert audit.chunk_loop_count(_LOOPY, 7) == 1
+    assert audit.chunk_loop_count(_LOOPY, 99) == 0
+
+
+def test_check_one_chunk_pass_pass_and_fail():
+    ok = audit.check_one_chunk_pass(_LOOPY, chunk_trip=12)
+    assert ok.passed and ok.data["chunk_loops"] == 1
+    bad = audit.check_one_chunk_pass(_LOOPY, chunk_trip=99)
+    assert bad.failed
+    assert bad.data["trips"] == [12, 7]
+
+
+_SMALL_ENTRY = """HloModule m
+
+ENTRY %main (a: f32[64,16], b: f32[64,16]) -> f32[64,16] {
+  %a = f32[64,16]{1,0} parameter(0)
+  %b = f32[64,16]{1,0} parameter(1)
+  ROOT %add = f32[64,16]{1,0} add(%a, %b)
+}
+"""
+_SMALL_BYTES = 2 * 64 * 16 * 4
+
+
+def test_check_slice_footprint_bounds():
+    ok = audit.check_slice_footprint(
+        _SMALL_ENTRY, slice_bytes=_SMALL_BYTES, floor_bytes=64 * 16 * 4)
+    assert ok.passed and ok.data["entry_param_bytes"] == _SMALL_BYTES
+    # floor: params below one live column means the parser degraded
+    assert audit.check_slice_footprint(
+        _SMALL_ENTRY, slice_bytes=_SMALL_BYTES,
+        floor_bytes=10 * _SMALL_BYTES).failed
+    # ceiling: O(slice) violated when slice budget is tiny
+    tiny = audit.check_slice_footprint(
+        _SMALL_ENTRY, slice_bytes=_SMALL_BYTES,
+        floor_bytes=4, dataset_bytes=_SMALL_BYTES * 8)
+    assert tiny.failed  # got == dataset/8 boundary: not out-of-core
+
+
+def test_check_kernel_dispatch_counts_and_skips():
+    res = audit.check_kernel_dispatch(_LOOPY, dispatches=2, backend="cpu")
+    assert res.passed and res.data["while_ops"] == 2
+    assert audit.check_kernel_dispatch(
+        _LOOPY, dispatches=3, backend="cpu").failed
+    assert audit.check_kernel_dispatch(
+        _LOOPY, dispatches=2, backend="tpu").skipped
+
+
+_PSUM_STEP = """HloModule m
+
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %a = f32[8]{0} parameter(0)
+  %ar1 = f32[8]{0} all-reduce(%a), replica_groups={}, to_apply=%sum
+  ROOT %ar2 = f32[8]{0} all-reduce(%ar1), replica_groups={}, to_apply=%sum
+}
+
+%sum (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %s = f32[] add(%x, %y)
+}
+"""
+
+_PSUM_IN_LOOP = """HloModule m
+
+%cond (p: f32[8]) -> pred[] {
+  %p = f32[8]{0} parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+
+%body (q: f32[8]) -> f32[8] {
+  %q = f32[8]{0} parameter(0)
+  ROOT %ar = f32[8]{0} all-reduce(%q), replica_groups={}, to_apply=%sum
+}
+
+%sum (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %s = f32[] add(%x, %y)
+}
+
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %a = f32[8]{0} parameter(0)
+  ROOT %w = f32[8]{0} while(%a), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"16"}}
+}
+"""
+
+
+def test_check_collectives_flat_vs_loop():
+    ok = audit.check_collectives(_PSUM_STEP, max_reductions=4)
+    assert ok.passed and ok.data["all_reduce_ops"] == 2
+    # more all-reduces than merged-state leaves: duplicated merges
+    assert audit.check_collectives(_PSUM_STEP, max_reductions=1).failed
+    # an all-reduce inside the chunk loop is O(C) barrier traffic — the
+    # trip-scaled count diverges from the flat count and must fail even
+    # though the flat count (1) looks fine
+    loop = audit.check_collectives(_PSUM_IN_LOOP, max_reductions=4)
+    assert loop.failed
+    assert "loop" in loop.detail
+
+
+def test_check_dtype_discipline():
+    ok = audit.check_dtype_discipline(
+        {"states": {"s": jax.ShapeDtypeStruct((4,), np.float32)}})
+    assert ok.passed
+    bad = audit.check_dtype_discipline(
+        {"states": {"s": jax.ShapeDtypeStruct((4,), np.float16)}})
+    assert bad.failed and "states" in bad.detail
+    # integer leaves (group ids, counts) are not a downcast
+    assert audit.check_dtype_discipline(
+        {"views": {"g": jax.ShapeDtypeStruct((4,), np.int8)}}).passed
+
+
+# ---------------------------------------------------------------------------
+# report mechanics
+# ---------------------------------------------------------------------------
+
+def test_report_mechanics():
+    good = audit.CheckResult("a", "pass", "fine")
+    bad = audit.CheckResult("b", "fail", "broken")
+    skip = audit.CheckResult("c", "skip", "n/a")
+    rep = audit.AuditReport(plan={"gla": "g"}, results=(good, skip))
+    assert rep.ok and rep.failures == ()
+    rep.raise_for_failures()  # no failures: no raise
+    assert rep.result("a").passed
+    with pytest.raises(KeyError):
+        rep.result("zzz")
+    rep2 = audit.AuditReport(plan={"gla": "g"}, results=(good, bad))
+    assert not rep2.ok
+    with pytest.raises(audit.AuditError, match="broken"):
+        rep2.raise_for_failures()
+    assert "FAIL" in rep2.summary() and "broken" in rep2.summary()
+
+
+# ---------------------------------------------------------------------------
+# audit_plan end-to-end (vmapped; the sharded lane runs in CI multidevice)
+# ---------------------------------------------------------------------------
+
+def test_audit_plan_certifies_scan_plan(shards, plans):
+    q6, emit = plans["q6"]
+    rep = engine.audit_plan(q6, shards, rounds=ROUNDS, emit=emit)
+    assert rep.ok, rep.summary()
+    assert rep.result("one_chunk_pass").passed
+    assert rep.result("o_slice_footprint").passed
+    assert rep.result("single_kernel_dispatch").skipped  # not a kernel plan
+    assert rep.result("one_collective_per_round").skipped  # no mesh
+    assert rep.result("dtype_discipline").passed
+
+
+def test_audit_plan_certifies_kernel_bundle(shards, plans):
+    bundle, emit = plans["bundle"]
+    rep = engine.audit_plan(bundle, shards, rounds=ROUNDS, emit=emit)
+    assert rep.ok, rep.summary()
+    assert rep.result("single_kernel_dispatch").passed
+    assert rep.result("one_chunk_pass").skipped  # kernel plans do not scan
+
+
+def test_audit_plan_unknown_check_raises(shards, plans):
+    q6, emit = plans["q6"]
+    with pytest.raises(ValueError, match="unknown audit check"):
+        engine.audit_plan(q6, shards, rounds=ROUNDS, emit=emit,
+                          checks=("one_chunk_pass", "nope"))
+
+
+def test_audit_plan_no_recompile_dynamic(shards, plans):
+    q6, emit = plans["q6"]
+    rep = engine.audit_plan(q6, shards, rounds=ROUNDS, emit=emit,
+                            checks=("no_recompile_across_rounds",))
+    res = rep.result("no_recompile_across_rounds")
+    assert not res.failed, res.detail
+    if res.passed:
+        assert res.data["cache_miss_delta"] <= res.data["budget"]
+
+
+def test_session_audit_kwarg(shards, plans):
+    q6, emit = plans["q6"]
+    sess = Session(q6, shards, rounds=ROUNDS, emit=emit, audit=True)
+    assert sess.audit_report is not None and sess.audit_report.ok
+    # the session still runs normally after the audit
+    while not sess.done:
+        sess.step()
+    assert np.isfinite(float(sess.result().final))
+    sub = Session(q6, shards, rounds=ROUNDS, emit=emit,
+                  audit=("one_chunk_pass", "dtype_discipline"))
+    assert [r.name for r in sub.audit_report.results] == [
+        "one_chunk_pass", "dtype_discipline"]
+    off = Session(q6, shards, rounds=ROUNDS, emit=emit)
+    assert off.audit_report is None
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="sharded audit needs >1 device")
+def test_audit_plan_sharded_collectives(plans):
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh(jax.device_count())
+    sh = audit._smoke_data(ROWS, int(mesh.devices.size), 128, ROUNDS)
+    q6, emit = plans["q6"]
+    rep = engine.audit_plan(q6, sh, rounds=ROUNDS, emit=emit, mesh=mesh)
+    assert rep.ok, rep.summary()
+    coll = rep.result("one_collective_per_round")
+    assert coll.passed
+    assert coll.data["all_reduce_ops"] >= 1

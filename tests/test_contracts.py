@@ -1,0 +1,215 @@
+"""Framework-contract linter (repro/analysis/contracts.py): each rule
+fires on crafted violations, stays quiet on the idioms the repo uses, and
+the real tree lints clean (the same gate CI's contracts job enforces)."""
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import contracts
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _lint_snippet(tmp_path, relpath, src):
+    p = tmp_path / relpath
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(src)
+    return contracts.lint_file(p, tmp_path)
+
+
+def _codes(violations):
+    return sorted(v.code for v in violations)
+
+
+# ---------------------------------------------------------------------------
+# C001/C002 — GLA construction + subclass pairing
+# ---------------------------------------------------------------------------
+
+def test_c001_groups_without_cols(tmp_path):
+    vs = _lint_snippet(tmp_path, "q.py", (
+        "from repro.core.gla import GLA\n"
+        "bad = GLA(name='x', kernel_num_groups=8)\n"
+        "good = GLA(name='y', kernel_num_groups=8, kernel_cols=('a',))\n"))
+    assert _codes(vs) == ["C001"]
+    assert vs[0].line == 2
+
+
+def test_c002_half_pairs(tmp_path):
+    vs = _lint_snippet(tmp_path, "g.py", (
+        "from repro.core.gla import GLA\n"
+        "class HalfKernel(GLA):\n"
+        "    kernel_cols = ('a',)\n"
+        "class HalfCkpt(GLA):\n"
+        "    def serialize(self):\n"
+        "        return b''\n"
+        "class Full(GLA):\n"
+        "    def serialize(self):\n"
+        "        return b''\n"
+        "    def deserialize(self, b):\n"
+        "        return self\n"
+        "class Unrelated:\n"
+        "    kernel_cols = ('a',)\n"))
+    assert _codes(vs) == ["C002", "C002"]
+
+
+# ---------------------------------------------------------------------------
+# C003/C004 — jit-region host calls; registry scoping
+# ---------------------------------------------------------------------------
+
+_HOSTY = (
+    "import time\n"
+    "import numpy as np\n"
+    "def traced(x):\n"
+    "    t = time.perf_counter()\n"
+    "    y = np.asarray(x)\n"
+    "    z = float(x)\n"
+    "    r = np.random.normal()\n"
+    "    return x.item() + x.tolist()[0] + t + y + z + r\n")
+
+
+def test_c003_c004_fire_inside_scan_py(tmp_path):
+    vs = _lint_snippet(tmp_path, "core/scan.py", _HOSTY)
+    codes = _codes(vs)
+    assert codes.count("C003") == 4  # asarray, float, .item, .tolist
+    assert codes.count("C004") == 2  # perf_counter, np.random
+
+
+def test_host_calls_outside_jit_regions_are_fine(tmp_path):
+    # same source under engine.py's "decorated" policy: no jit decorator,
+    # no violations — Session.step() legitimately reads the wall clock
+    assert _lint_snippet(tmp_path, "core/engine.py", _HOSTY) == []
+    # and in an unregistered file nothing applies at all
+    assert _lint_snippet(tmp_path, "data/loader.py", _HOSTY) == []
+
+
+def test_decorated_policy_catches_jitted_fn(tmp_path):
+    vs = _lint_snippet(tmp_path, "dist/shard_engine.py", (
+        "import functools\n"
+        "import jax\n"
+        "import numpy as np\n"
+        "@functools.partial(jax.jit, static_argnames=('k',))\n"
+        "def step(x, *, k):\n"
+        "    return float(x)\n"
+        "@jax.jit\n"
+        "def step2(x):\n"
+        "    def inner(y):\n"
+        "        return np.asarray(y)\n"
+        "    return inner(x)\n"
+        "def host_helper(x):\n"
+        "    return np.asarray(x)\n"))
+    assert _codes(vs) == ["C003", "C003"]
+
+
+# ---------------------------------------------------------------------------
+# C005/C006 — estimator clamp discipline
+# ---------------------------------------------------------------------------
+
+def test_c005_unclamped_vs_clamped_division(tmp_path):
+    vs = _lint_snippet(tmp_path, "core/estimators.py", (
+        "import jax.numpy as jnp\n"
+        "def variance_estimate(s, sq, n, d):\n"
+        "    safe = jnp.maximum(n, 2.0)\n"
+        "    den = safe * safe * (safe - 1.0)\n"
+        "    est = d / den\n"                      # clamped product: OK
+        "    frac = s / 2.0\n"                     # nonzero constant: OK
+        "    bad = s / n\n"                        # raw denominator: C005
+        "    return jnp.where(n >= 2.0, est + frac + bad, jnp.inf)\n"))
+    assert _codes(vs) == ["C005"]
+    assert "bad" not in vs[0].message or "unclamped" in vs[0].message
+
+
+def test_c006_variance_guards_must_survive(tmp_path):
+    vs = _lint_snippet(tmp_path, "core/estimators.py", (
+        "def variance_estimate(s, sq, n, d):\n"
+        "    return d / 2.0\n"))
+    assert _codes(vs) == ["C006", "C006"]  # lost maximum AND where
+
+
+# ---------------------------------------------------------------------------
+# C007 — envelope manifest
+# ---------------------------------------------------------------------------
+
+_META_KEYS = sorted(contracts.ENVELOPE_HISTORY[max(contracts.ENVELOPE_HISTORY)])
+
+
+def _session_src(version, keys):
+    entries = ", ".join(f"'{k}': 0" for k in keys)
+    return (f"_CKPT_VERSION = {version}\n"
+            "class Session:\n"
+            "    def _meta(self):\n"
+            f"        return {{{entries}}}\n")
+
+
+def test_c007_clean_manifest(tmp_path):
+    assert _lint_snippet(
+        tmp_path, "core/session.py",
+        _session_src(max(contracts.ENVELOPE_HISTORY), _META_KEYS)) == []
+
+
+def test_c007_drifted_key_set(tmp_path):
+    vs = _lint_snippet(
+        tmp_path, "core/session.py",
+        _session_src(max(contracts.ENVELOPE_HISTORY),
+                     [*_META_KEYS, "surprise"]))
+    assert _codes(vs) == ["C007"]
+    assert "surprise" in vs[0].message
+
+
+def test_c007_stale_version(tmp_path):
+    vs = _lint_snippet(
+        tmp_path, "core/session.py",
+        _session_src(max(contracts.ENVELOPE_HISTORY) - 1, _META_KEYS))
+    assert _codes(vs) == ["C007"]
+    assert "bump" in vs[0].message
+
+
+# ---------------------------------------------------------------------------
+# C008 — suppression policy
+# ---------------------------------------------------------------------------
+
+def test_c008_unallowlisted_suppression(tmp_path):
+    vs = _lint_snippet(tmp_path, "q.py", (
+        "from repro.core.gla import GLA\n"
+        "q = GLA(name='x', kernel_num_groups=8)  # contracts: allow(C001)\n"))
+    assert _codes(vs) == ["C008"]
+    assert "ALLOWLIST" in vs[0].message
+
+
+def test_c008_stale_suppression(tmp_path):
+    vs = _lint_snippet(tmp_path, "q.py", (
+        "x = 1  # contracts: allow(C001)\n"))
+    assert _codes(vs) == ["C008"]
+    assert "stale" in vs[0].message
+
+
+def test_mismatched_suppression_keeps_violation(tmp_path):
+    # suppressing the WRONG code does not silence the real violation
+    vs = _lint_snippet(tmp_path, "q.py", (
+        "from repro.core.gla import GLA\n"
+        "q = GLA(name='x', kernel_num_groups=8)  # contracts: allow(C003)\n"))
+    assert set(_codes(vs)) == {"C001", "C008"}
+
+
+# ---------------------------------------------------------------------------
+# the real tree is clean — the same gate the CI contracts job enforces
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tree", ["src", "tests", "benchmarks", "examples"])
+def test_repo_lints_clean(tree):
+    if not (REPO / tree).exists():
+        pytest.skip(f"{tree}/ absent")
+    violations = []
+    for f in contracts.iter_py_files([tree], REPO):
+        violations.extend(contracts.lint_file(f, REPO))
+    assert not violations, "\n".join(str(v) for v in violations)
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    (tmp_path / "ok.py").write_text("x = 1\n")
+    assert contracts.main([str(tmp_path / "ok.py")]) == 0
+    bad = tmp_path / "bad.py"
+    bad.write_text("from repro.core.gla import GLA\n"
+                   "q = GLA(name='x', kernel_num_groups=8)\n")
+    assert contracts.main([str(bad)]) == 1
+    out = capsys.readouterr().out
+    assert "C001" in out and "FAIL" in out

@@ -73,3 +73,120 @@ def test_bytes_order_of_magnitude():
         ca = ca[0]
     xla_bytes = ca.get("bytes accessed", 0.0)
     assert 0.3 * xla_bytes <= a["bytes"] <= 4 * xla_bytes + 1e4
+
+
+# ---------------------------------------------------------------------------
+# adversarial HLO text: the parsers must degrade predictably, not crash
+# (repro/analysis/audit.py builds its invariant catalog on these)
+# ---------------------------------------------------------------------------
+
+import pytest  # noqa: E402
+
+
+def _hlo(body):
+    return "HloModule adversarial\n\n" + body
+
+
+_WHILE_NO_TRIP = _hlo("""\
+%cond.1 (p.1: f32[4]) -> pred[] {
+  %p.1 = f32[4]{0} parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+
+%body.1 (p.2: f32[4]) -> f32[4] {
+  %p.2 = f32[4]{0} parameter(0)
+  ROOT %add.1 = f32[4]{0} add(%p.2, %p.2)
+}
+
+ENTRY %main.1 (arg.1: f32[4]) -> f32[4] {
+  %arg.1 = f32[4]{0} parameter(0)
+  ROOT %w.1 = f32[4]{0} while(%arg.1), condition=%cond.1, body=%body.1
+}
+""")
+
+
+def test_while_missing_known_trip_count_reports_one():
+    # no backend_config known_trip_count: the loop must still be seen,
+    # with the documented conservative trip of 1 — not dropped, not a crash
+    assert hlo_cost.while_trip_counts(_WHILE_NO_TRIP) == [1]
+    assert hlo_cost.count_ops(_WHILE_NO_TRIP, "while", trip_scaled=True) == 1
+    # body ops are reachable and counted once (trip 1)
+    assert hlo_cost.count_ops(_WHILE_NO_TRIP, "add") == 1
+
+
+_TUPLE_ROOT = _hlo("""\
+ENTRY %main.2 (arg.1: f32[8,4], arg.2: s32[]) -> (f32[8,4], s32[]) {
+  %arg.1 = f32[8,4]{1,0} parameter(0)
+  %arg.2 = s32[] parameter(1)
+  %neg.1 = f32[8,4]{1,0} negate(%arg.1)
+  ROOT %t.1 = (f32[8,4]{1,0}, s32[]) tuple(%neg.1, %arg.2)
+}
+""")
+
+
+def test_tuple_shaped_root_parses():
+    comps = hlo_cost.split_computations(_TUPLE_ROOT)
+    root = comps["main.2"][-1]
+    assert root.opcode == "tuple"
+    # tuple type bytes = sum of element bytes (8*4 f32 + one s32)
+    assert hlo_cost.entry_param_bytes(_TUPLE_ROOT) == 8 * 4 * 4 + 4
+    # analyze() walks it without raising and reports zero flops
+    assert hlo_cost.analyze(_TUPLE_ROOT)["flops"] == 0
+
+
+_ZERO_DIM = _hlo("""\
+ENTRY %main.3 (arg.1: f32[0,16], arg.2: f32[]) -> f32[] {
+  %arg.1 = f32[0,16]{1,0} parameter(0)
+  %arg.2 = f32[] parameter(1)
+  %c.1 = f32[] constant(0)
+  %r.1 = f32[] reduce(%arg.1, %c.1), dimensions={0,1}, to_apply=%sum.3
+  ROOT %add.1 = f32[] add(%r.1, %arg.2)
+}
+
+%sum.3 (a.1: f32[], b.1: f32[]) -> f32[] {
+  %a.1 = f32[] parameter(0)
+  %b.1 = f32[] parameter(1)
+  ROOT %s.1 = f32[] add(%a.1, %b.1)
+}
+""")
+
+
+def test_zero_dim_shapes():
+    # a [0, 16] operand holds zero elements and zero bytes; scalars
+    # (dims "") hold exactly one element, not zero
+    assert hlo_cost.entry_param_bytes(_ZERO_DIM) == 0 * 16 * 4 + 4
+    res = hlo_cost.analyze(_ZERO_DIM)
+    assert res["flops"] >= 0  # no division-by-zero / negative cost
+
+
+_TRUNCATED = _hlo("""\
+%body.4 (p.1: f32[4]) -> f32[4] {
+  %p.1 = f32[4]{0} parameter(0)
+  ROOT %add.1 = f32[4]{0} add(%p.1, %p.1)
+""")  # computation never closed, no ENTRY at all
+
+
+def test_truncated_computation_raises_value_error():
+    with pytest.raises(ValueError, match="no ENTRY"):
+        hlo_cost.analyze(_TRUNCATED)
+    with pytest.raises(ValueError, match="no ENTRY"):
+        hlo_cost.entry_param_bytes(_TRUNCATED)
+    with pytest.raises(ValueError, match="no ENTRY"):
+        hlo_cost.while_trip_counts(_TRUNCATED)
+    # the computation splitter itself tolerates the truncation: it keeps
+    # the instructions it saw (the downstream ENTRY check is the gate)
+    comps = hlo_cost.split_computations(_TRUNCATED)
+    assert [i.opcode for i in comps["body.4"]] == ["parameter", "add"]
+
+
+def test_entry_reference_to_missing_computation():
+    # an ENTRY whose while body was truncated away: traversal must treat
+    # the missing computation as empty, not KeyError
+    hlo = _hlo("""\
+ENTRY %main.5 (arg.1: f32[4]) -> f32[4] {
+  %arg.1 = f32[4]{0} parameter(0)
+  ROOT %w.1 = f32[4]{0} while(%arg.1), condition=%gone.1, body=%gone.2, backend_config={"known_trip_count":{"n":"9"}}
+}
+""")
+    assert hlo_cost.while_trip_counts(hlo) == [9]
+    assert hlo_cost.count_ops(hlo, "add") == 0

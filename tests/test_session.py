@@ -35,7 +35,7 @@ def shards():
         parts, chunk_len=256, min_chunks=-(-n_chunks // ROUNDS) * ROUNDS)
 
 
-def _wide_q6(d_total=float(ROWS), window=(0, 1460)):
+def _wide_q6(d_total=ROWS * 1.0, window=(0, 1460)):
     """Q6-style selective SUM that reaches 1% relative error mid-scan."""
     def func(c):
         return c["quantity"]

@@ -60,7 +60,7 @@ def npy_dir(shards, tmp_path_factory):
     return DS.NpyMmapSource.save(shards, d)
 
 
-def _wide_q6(d_total=float(ROWS)):
+def _wide_q6(d_total=ROWS * 1.0):
     def func(c):
         return c["quantity"]
 
@@ -71,7 +71,7 @@ def _wide_q6(d_total=float(ROWS)):
     return gla.make_sum_gla(func, cond, d_total=d_total)
 
 
-def _q1_small(d_total=float(ROWS)):
+def _q1_small(d_total=ROWS * 1.0):
     return gla.make_groupby_gla(
         tpch.q1_func, tpch.q1_cond, tpch.q1_group_small, num_groups=4,
         d_total=d_total, num_aggs=4)
