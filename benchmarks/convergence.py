@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine, gla, randomize
+from repro.core.spec import QuerySpec
 from repro.data import tpch
 
 ROWS = 1_000_000
@@ -89,7 +90,8 @@ def run(tasks=None, out=sys.stdout, rows=ROWS):
                 rounds -= 1
             for est_kind in ("single", "multiple"):
                 g = info["maker"](est_kind)
-                res = engine.run_query(g, shards, rounds=rounds, emit="round")
+                res = engine.run_query(
+                    QuerySpec(g, rounds=rounds, emit="round"), shards)
                 w = rel_width(res.estimates, info)
                 scanned = np.asarray(res.snapshots.scanned if hasattr(
                     res.snapshots, "scanned") else res.snapshots.base.scanned)

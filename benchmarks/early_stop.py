@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.core import engine, gla, randomize
 from repro.core import session as S
+from repro.core.spec import QuerySpec
 from repro.data import tpch
 
 ROWS = 500_000
@@ -91,12 +92,13 @@ def run(rows=ROWS, repeats=3, out=sys.stdout):
     print("name,us_per_call,derived", file=out)
     for name, (g, eps, emit) in _families(rows).items():
         def run_full(g=g, emit=emit):
-            res = engine.run_query(g, shards, rounds=ROUNDS, emit=emit)
+            res = engine.run_query(
+                QuerySpec(g, rounds=ROUNDS, emit=emit), shards)
             jax.block_until_ready(res.final)
 
         def run_session(g=g, emit=emit, eps=eps):
-            sess = S.Session(g, shards, rounds=ROUNDS, emit=emit,
-                             stop=S.rel_width(eps))
+            sess = S.Session(QuerySpec(g, rounds=ROUNDS, emit=emit,
+                                       stop=S.rel_width(eps)), shards)
             res = sess.run()
             jax.block_until_ready(res.final)
             return sess

@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.core import gla, randomize
 from repro.core import session as S
+from repro.core.spec import QuerySpec
 from repro.data import tpch
 
 ROWS = 500_000
@@ -68,8 +69,10 @@ def _q6(rows):
 
 def _drive_timed(g, shards, fail_at):
     """One full chaos run; returns (total_us, fail_round_step_us, width)."""
-    sess = S.Session(g, shards, rounds=ROUNDS,
-                     fault=S.FaultPolicy("single", fail_at=fail_at))
+    sess = S.Session(
+        QuerySpec(g, rounds=ROUNDS,
+                  fault=S.FaultPolicy("single", fail_at=fail_at)),
+        shards)
     step_us = 0.0
     t0 = time.perf_counter()
     while not sess.done:

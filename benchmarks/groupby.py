@@ -50,6 +50,7 @@ import numpy as np
 from repro.analysis import audit
 from repro.analysis import hlo_cost as HC
 from repro.core import engine, randomize
+from repro.core.spec import QuerySpec
 from repro.data import tpch
 
 ROWS = 200_000
@@ -89,10 +90,12 @@ def run(out=sys.stdout, rows=ROWS):
 
     # compile once per variant (AOT): the same executable serves the warm
     # runs, the timing loop, and the HLO dispatch counts
+    specs = {emit: QuerySpec(g, rounds=ROUNDS, emit=emit)
+             for emit in ("round", "kernel")}
     compiled = {
-        emit: jax.jit(lambda sh, e=emit: engine.run_query(
-            g, sh, rounds=ROUNDS, emit=e)).lower(shards).compile()
-        for emit in ("round", "kernel")
+        emit: jax.jit(lambda sh, s=spec: engine.run_query(
+            s, sh)).lower(shards).compile()
+        for emit, spec in specs.items()
     }
     finals = {}
     for emit, fn in compiled.items():  # warm + capture finals

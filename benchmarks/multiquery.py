@@ -40,6 +40,7 @@ except ImportError:  # direct script invocation: benchmarks/ is sys.path[0]
 
 from repro.analysis import audit
 from repro.core import engine, gla, randomize
+from repro.core.spec import QuerySpec
 from repro.data import tpch
 
 ROWS = 150_000
@@ -133,14 +134,15 @@ def run(out=sys.stdout, rows=ROWS, repeats=5):
         "is indistinguishable from the chunk loop by trip count")
 
     solo_compiled = [
-        jax.jit(lambda sh, g=g: _finals(engine.run_query(
-            g, sh, rounds=ROUNDS, emit="round"))).lower(shards).compile()
+        jax.jit(lambda sh, s=QuerySpec(g, rounds=ROUNDS, emit="round"):
+                _finals(engine.run_query(s, sh))).lower(shards).compile()
         for g in pool
     ]
     for n in NS:
         glas = pool[:n]
-        shared = jax.jit(lambda sh, glas=glas: _finals(engine.run_queries(
-            glas, sh, rounds=ROUNDS, emit="round"))).lower(shards).compile()
+        shared_spec = QuerySpec(glas, rounds=ROUNDS, emit="round")
+        shared = jax.jit(lambda sh, s=shared_spec: _finals(
+            engine.run_queries(s, sh))).lower(shards).compile()
 
         def n_pass(sh, n=n):
             outs = []
@@ -183,9 +185,9 @@ def run(out=sys.stdout, rows=ROWS, repeats=5):
 
     # -- batched kernel dispatch: one group_agg launch serves the bundle --
     kernel_pool = [pool[3], pool[0], pool[4]]  # Q1-large, Q6, join
+    kernel_spec = QuerySpec(kernel_pool, rounds=ROUNDS, emit="kernel")
     fused = jax.jit(lambda sh: _finals(engine.run_queries(
-        kernel_pool, sh, rounds=ROUNDS, emit="kernel"))
-    ).lower(shards).compile()
+        kernel_spec, sh))).lower(shards).compile()
     # catalog check single_kernel_dispatch: every while op left in the
     # fused kernel program is a Pallas grid loop — one dispatch per
     # (partition, round-slice) for ALL members (skips off-CPU backends)

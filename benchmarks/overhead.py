@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine, gla, randomize
+from repro.core.spec import QuerySpec
 from repro.data import tpch
 
 ROWS = 8_000_000
@@ -91,8 +92,9 @@ def run(out=sys.stdout, rows=ROWS, sh_repeats=25):
                              d_total=float(rows), estimator=v["estimator"])
 
         def call(g=g, v=v):
-            r = engine.run_query(g, shards, rounds=rounds, emit="round",
-                                 snapshots=v["snapshots"])
+            r = engine.run_query(
+                QuerySpec(g, rounds=rounds, emit="round",
+                          snapshots=v["snapshots"]), shards)
             jax.block_until_ready(r.final)
 
         times[name] = _time(call)
@@ -112,9 +114,10 @@ def run(out=sys.stdout, rows=ROWS, sh_repeats=25):
     from repro.analysis import hlo_cost as HC
 
     def _terms(g, snapshots):
+        spec = QuerySpec(g, rounds=rounds, emit="round", snapshots=snapshots)
+
         def fn(sh):
-            r = engine.run_query(g, sh, rounds=rounds, emit="round",
-                                 snapshots=snapshots)
+            r = engine.run_query(spec, sh)
             # keep the estimation outputs live so nothing is DCE'd away
             return r.final if r.estimates is None else (r.final, r.estimates)
         c = jax.jit(fn).lower(shards).compile()

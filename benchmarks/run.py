@@ -119,6 +119,10 @@ def main(argv=None):
     else:
         streaming.run()
 
+    print("# === serve (shared-scan OLA service, DESIGN.md §11) ===")
+    from benchmarks import serve
+    serve.run(rows=serve.SMOKE_ROWS if smoke else serve.ROWS)
+
     print("# === convergence (paper Figs 1-3) ===")
     from benchmarks import convergence
     tasks = ["agg_low", "agg_high"] if quick else None

@@ -47,6 +47,7 @@ except ImportError:  # direct script invocation: benchmarks/ is sys.path[0]
 
 from repro.core import engine, gla, randomize
 from repro.core import session as S
+from repro.core.spec import QuerySpec
 from repro.data import source as DS
 from repro.data import tpch
 
@@ -125,7 +126,8 @@ def run(rows=ROWS, repeats=3, out=sys.stdout):
 
         for fam, (q, emit) in _families(rows).items():
             def run_fused(data, q=q, emit=emit):
-                res = engine.run_query(q, data, rounds=ROUNDS, emit=emit)
+                res = engine.run_query(
+                    QuerySpec(q, rounds=ROUNDS, emit=emit), data)
                 jax.block_until_ready(res.final)
                 return res
 
@@ -133,7 +135,8 @@ def run(rows=ROWS, repeats=3, out=sys.stdout):
                 # streaming sources take this path inside run_query too;
                 # spelled out here so the resident comparator runs the
                 # SAME incremental discipline
-                sess = S.Session(q, data, rounds=ROUNDS, emit=emit)
+                sess = S.Session(QuerySpec(q, rounds=ROUNDS, emit=emit),
+                                 data)
                 while not sess.done:
                     sess.step()
                 jax.block_until_ready(sess.result().final)

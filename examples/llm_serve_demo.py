@@ -1,0 +1,66 @@
+"""LLM serving demo: batched prefill + greedy decode.
+
+Moved here from ``repro.launch.serve`` — that module is now the OLA
+query service entry point (DESIGN.md §11); this demo drives the model
+half of the serving stack (``repro.serving.serve_step``).
+
+    PYTHONPATH=src python examples/llm_serve_demo.py --arch qwen3_32b \
+        --smoke --batch 4 --prompt-len 16 --gen 24
+
+On hardware the same prefill/decode steps run under the production mesh
+with the flash-decoding cache sharding proven by the dry-run.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import spec, transformer as T
+from repro.serving import serve_step as SS
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_135m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    key = jax.random.key(0)
+    params = spec.init_params(
+        T.param_specs(cfg, dtype=jnp.float32 if args.smoke else jnp.bfloat16),
+        key)
+    batch = {"tokens": jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
+    if cfg.frontend == "vision_stub":
+        batch["patches"] = jax.random.normal(
+            key, (args.batch, cfg.vis_tokens, cfg.d_model), jnp.float32)
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jax.random.normal(
+            key, (args.batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+
+    total = args.prompt_len + (cfg.vis_tokens if cfg.frontend else 0)
+    t0 = time.time()
+    out = SS.greedy_generate(cfg, params, batch, steps=args.gen,
+                             cache_len=total + args.gen + 1)
+    dt = time.time() - t0
+    print(f"arch={cfg.name} generated [{args.batch}, {args.gen}] tokens "
+          f"in {dt:.2f}s ({args.batch * args.gen / dt:.1f} tok/s)")
+    print("sample:", jax.device_get(out[0])[:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -17,8 +17,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro
 from repro.configs import get_config
-from repro.core import engine, metrics, randomize
+from repro.core import metrics, randomize
 from repro.models import transformer as T
 from repro.training import train_step as TS
 
@@ -59,7 +60,7 @@ def main():
     parts = randomize.randomize_global(cols, jax.random.key(1), PARTS)
     shards = randomize.pack_partitions(parts, chunk_len=256)
     g = metrics.make_loss_gla(loss_per_example, d_total=float(EVAL_EXAMPLES))
-    res = engine.run_query(g, shards, rounds=8)
+    res = repro.run_query(repro.QuerySpec(g, rounds=8), shards)
     mean, lo, hi = metrics.mean_with_bounds(res.estimates)
     print(f"{'scanned':>8s} {'mean loss':>10s} {'95% CI':>19s} {'rel.w':>7s}")
     for r in range(len(mean)):

@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import engine, gla, randomize
+import repro
+from repro.core import randomize
 from repro.data import tpch
 
 ROWS = 1_000_000
@@ -30,12 +31,12 @@ parts = randomize.randomize_global(
 shards = randomize.pack_partitions(parts, chunk_len=2048)
 
 # 2. express the query as a GLA with the single-estimator model (Alg. 1)
-query = gla.make_sum_gla(
+query = repro.make_sum_gla(
     tpch.q6_func, tpch.q6_cond(tpch.Q6_LOW_WINDOW),
     d_total=float(ROWS), estimator="single")
 
 # 3. run with on-line estimation (10 snapshot rounds)
-res = engine.run_query(query, shards, rounds=10)
+res = repro.run_query(repro.QuerySpec(query, rounds=10), shards)
 
 exact = tpch.exact_answer(cols, tpch.q6_func,
                           tpch.q6_cond(tpch.Q6_LOW_WINDOW))[0]

@@ -17,8 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro
 from repro.core import engine, gla, randomize
-from repro.core import session as ola_session
 from repro.data import tpch
 
 ROWS = int(sys.argv[1]) if len(sys.argv) > 1 else 500_000
@@ -71,7 +71,8 @@ def main():
         for est_kind in ("single", "multiple"):
             g = make(est_kind)
             t0 = time.perf_counter()
-            res = engine.run_query(g, shards, rounds=rounds, emit="round")
+            res = repro.run_query(
+                repro.QuerySpec(g, rounds=rounds, emit="round"), shards)
             jax.block_until_ready(res.final)
             dt = time.perf_counter() - t0
             est = res.estimates
@@ -93,11 +94,15 @@ def main():
         sched = engine.straggler_schedule(PARTS, C, rounds,
                                           speeds=[1, 1, 1, 1, 2, 2, 3, 4])
         g = make("single")
-        res = engine.run_query(g, shards, schedule=sched, mode="async",
-                               emit="round_masked" if make is make_large
-                               else "chunk")
+        res = repro.run_query(
+            repro.QuerySpec(g, schedule=sched,
+                            emit="round_masked" if make is make_large
+                            else "chunk"),
+            shards)
+        ref = repro.run_query(
+            repro.QuerySpec(g, rounds=rounds, emit="round"), shards)
         print(f"  async+stragglers final matches: "
-              f"{np.allclose(np.asarray(res.final), np.asarray(engine.run_query(g, shards, rounds=rounds, emit='round').final), rtol=1e-5)}")
+              f"{np.allclose(np.asarray(res.final), np.asarray(ref.final), rtol=1e-5)}")
 
     # Concurrent session (DESIGN.md §6): Q1 + Q6 + large-domain Q1 run as
     # ONE shared scan — engine.run_queries stacks them into a GLABundle and
@@ -110,12 +115,14 @@ def main():
         "Q1 group-by large": make_large("single"),
     }
     t0 = time.perf_counter()
-    multi = engine.run_queries(list(session.values()), shards, rounds=rounds,
-                               emit="round")
+    multi = repro.run_queries(
+        repro.QuerySpec(list(session.values()), rounds=rounds, emit="round"),
+        shards)
     jax.block_until_ready([r.final for r in multi])
     dt_shared = time.perf_counter() - t0
     t0 = time.perf_counter()
-    solos = [engine.run_query(g, shards, rounds=rounds, emit="round")
+    solos = [repro.run_query(repro.QuerySpec(g, rounds=rounds, emit="round"),
+                             shards)
              for g in session.values()]
     jax.block_until_ready([r.final for r in solos])
     dt_solo = time.perf_counter() - t0
@@ -147,11 +154,12 @@ def main():
     print("\n=== Q1 group-by large: kernel dispatch (emit='kernel') ===")
     g = make_large("single")
     for emit in ("round", "kernel"):
+        spec = repro.QuerySpec(g, rounds=rounds, emit=emit)
         t0 = time.perf_counter()
-        res = engine.run_query(g, shards, rounds=rounds, emit=emit)
+        res = repro.run_query(spec, shards)
         jax.block_until_ready(res.final)
         t1 = time.perf_counter()
-        res = engine.run_query(g, shards, rounds=rounds, emit=emit)
+        res = repro.run_query(spec, shards)
         jax.block_until_ready(res.final)
         dt = time.perf_counter() - t1
         print(f"  emit={emit:7s} compile+run {t1 - t0:6.2f}s  warm {dt:6.2f}s")
@@ -185,10 +193,11 @@ def main():
 
     q = gla.make_sum_gla(lambda c: c["quantity"], wide_cond,
                          d_total=float(ROWS))
-    sess = ola_session.Session(
-        q, shards, rounds=fine_rounds, emit="chunk",
-        stop=ola_session.any_of(ola_session.rel_width(0.01),
-                                ola_session.budget(max_seconds=60.0)))
+    sess = repro.Session(
+        repro.QuerySpec(q, rounds=fine_rounds, emit="chunk",
+                        stop=repro.any_of(repro.rel_width(0.01),
+                                          repro.budget(max_seconds=60.0))),
+        shards)
     res = sess.run()
     est = res.estimates
     w = ((np.asarray(est.upper, np.float64)
@@ -200,7 +209,8 @@ def main():
     print(f"  stopped at round {sess.steps_taken}/{sess.rounds_total} "
           f"(converged={sess.converged}) — scanned {frac:.1%} of the data, "
           f"saved {1 - frac:.1%} of the scan")
-    final_full = engine.run_query(q, shards, rounds=rounds).final
+    final_full = repro.run_query(repro.QuerySpec(q, rounds=rounds),
+                                 shards).final
     anytime = float(np.asarray(est.estimate)[-1])
     err = abs(anytime - float(final_full)) / abs(float(final_full))
     print(f"  anytime estimate {anytime:.0f} vs exact {float(final_full):.0f}"
@@ -218,12 +228,13 @@ def main():
 
     with tempfile.TemporaryDirectory(prefix="tpch_ola_npy_") as td:
         src = dsource.NpyMmapSource(dsource.NpyMmapSource.save(shards, td))
+        spec = repro.QuerySpec(q, rounds=rounds, emit="chunk")
         t0 = time.perf_counter()
-        res_mem = engine.run_query(q, shards, rounds=rounds, emit="chunk")
+        res_mem = repro.run_query(spec, shards)
         jax.block_until_ready(res_mem.final)
         dt_mem = time.perf_counter() - t0
         t0 = time.perf_counter()
-        res_str = engine.run_query(q, src, rounds=rounds, emit="chunk")
+        res_str = repro.run_query(spec, src)
         jax.block_until_ready(res_str.final)
         dt_str = time.perf_counter() - t0
         identical = (np.asarray(res_str.final).tobytes()

@@ -1,0 +1,88 @@
+"""PF-OLA reproduction — the stable public surface.
+
+Import query construction, execution, serving and stopping rules from
+here rather than deep module paths::
+
+    import repro
+
+    q = repro.make_sum_gla(func, cond, d_total=float(n))
+    spec = repro.QuerySpec(q, rounds=8, stop=repro.rel_width(0.01))
+    result = repro.run_query(spec, shards)
+
+Deep paths (``repro.core.engine`` etc.) keep working — this facade adds
+names, it does not move them.  Attributes resolve lazily (PEP 562) so
+that importing :mod:`repro` stays side-effect free and jax-free: the
+contracts CI job runs ``python -m repro.analysis.contracts`` on a bare
+interpreter, and ``import repro`` must not drag in an accelerator
+runtime it doesn't need.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+# name -> (module, attribute) table behind __getattr__
+_EXPORTS = {
+    # query construction
+    "GLA": ("repro.core.uda", "GLA"),
+    "Estimate": ("repro.core.uda", "Estimate"),
+    "GLABundle": ("repro.core.gla", "GLABundle"),
+    "make_sum_gla": ("repro.core.gla", "make_sum_gla"),
+    "make_groupby_gla": ("repro.core.gla", "make_groupby_gla"),
+    "make_join_groupby_gla": ("repro.core.gla", "make_join_groupby_gla"),
+    # plans and execution
+    "QuerySpec": ("repro.core.spec", "QuerySpec"),
+    "run_query": ("repro.core.engine", "run_query"),
+    "run_queries": ("repro.core.engine", "run_queries"),
+    "QueryResult": ("repro.core.engine", "QueryResult"),
+    "Session": ("repro.core.session", "Session"),
+    "resume": ("repro.core.session", "resume"),
+    "RoundProgress": ("repro.core.session", "RoundProgress"),
+    "FaultPolicy": ("repro.core.session", "FaultPolicy"),
+    # stopping rules
+    "rel_width": ("repro.core.session", "rel_width"),
+    "abs_width": ("repro.core.session", "abs_width"),
+    "budget": ("repro.core.session", "budget"),
+    "any_of": ("repro.core.session", "any_of"),
+    "all_of": ("repro.core.session", "all_of"),
+    # data sources
+    "as_source": ("repro.data.source", "as_source"),
+    "ChunkSource": ("repro.data.source", "ChunkSource"),
+    # serving (DESIGN.md §11)
+    "OLAService": ("repro.serving.service", "OLAService"),
+    "SharedScan": ("repro.serving.service", "SharedScan"),
+    "SlotFamily": ("repro.core.gla", "SlotFamily"),
+    "SlotQuery": ("repro.core.gla", "SlotQuery"),
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        mod_name, attr = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(
+            f"module 'repro' has no attribute {name!r}") from None
+    import importlib
+
+    value = getattr(importlib.import_module(mod_name), attr)
+    globals()[name] = value   # cache: next access skips __getattr__
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))
+
+
+if TYPE_CHECKING:  # static-analysis view of the lazy table
+    from repro.core.engine import QueryResult, run_queries, run_query
+    from repro.core.gla import (GLABundle, SlotFamily, SlotQuery,
+                                make_groupby_gla, make_join_groupby_gla,
+                                make_sum_gla)
+    from repro.core.session import (FaultPolicy, RoundProgress, Session,
+                                    abs_width, all_of, any_of, budget,
+                                    rel_width, resume)
+    from repro.core.spec import QuerySpec
+    from repro.core.uda import GLA, Estimate
+    from repro.data.source import ChunkSource, as_source
+    from repro.serving.service import OLAService, SharedScan

@@ -48,6 +48,17 @@ The catalog (check names accepted by ``checks=``):
                                 Dynamic (executes the scan), so it is
                                 NOT in the default check set; request it
                                 explicitly or via ``ALL_CHECKS``.
+  ``bounded_compiles_under_churn``  the serving extension of the same
+                                certificate (:func:`audit_service`, not
+                                part of the per-plan catalog): an
+                                attach/detach churn workload against a
+                                shared scan — including at least one
+                                slot-capacity doubling and a
+                                detach-then-reattach slot reuse — grows
+                                the serving step's jit cache by at most
+                                one entry per (bank, capacity) pair
+                                stepped, never one per arrival
+                                (repro/serving/service.py).
 
 Checks report ``pass`` / ``fail`` / ``skip`` — skip means the invariant
 does not apply to the plan (e.g. kernel dispatch counts on a scan plan,
@@ -583,11 +594,13 @@ def _audit_no_recompile(p: _Plan) -> CheckResult:
         return _skip("no_recompile_across_rounds",
                      "jit cache introspection unavailable in this jax")
     from repro.core import session as SN
+    from repro.core.spec import QuerySpec
     before = cache_size()
     sess = SN.Session(
-        p.gla, p.source, rounds=p.R, schedule=p.sched, emit=p.emit,
-        mode=p.mode, lanes=p.lanes, snapshots=p.snapshots,
-        confidence=p.confidence, mesh=p.mesh, axis_name=p.axis_name)
+        QuerySpec(p.gla, rounds=p.R, schedule=p.sched, emit=p.emit,
+                  sync=p.mode == "sync", lanes=p.lanes,
+                  snapshots=p.snapshots, confidence=p.confidence),
+        p.source, mesh=p.mesh, axis_name=p.axis_name)
     while not sess.done:
         sess.step()
     jax.block_until_ready(sess.result().final)
@@ -670,6 +683,92 @@ def audit_plan(gla, data, *, rounds: int = 8,
 
 
 # ---------------------------------------------------------------------------
+# serving churn audit (repro/serving/service.py, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def audit_service(family, data, *, rounds: int = 4, confidence: float = 0.95,
+                  mesh=None, axis_name: str = "data",
+                  raise_on_failure: bool = False) -> AuditReport:
+    """Certify the serving layer's recompile discipline under churn.
+
+    Drives a throwaway :class:`repro.serving.service.SharedScan` through
+    an adversarial membership workload — staggered attaches forcing at
+    least one slot-capacity doubling, every group bank of the family,
+    and a detach-then-reattach slot reuse — and asserts the serving
+    step's jit cache grew by at most the scan's compile budget: one
+    entry per (bank, capacity) pair actually stepped.  A per-arrival
+    compile (the storm the padded-slot design exists to prevent) blows
+    the budget immediately: the workload makes 3 + #groups + 2
+    membership changes against a budget of ~2 + #groups.
+    """
+    from repro.core.gla import SlotQuery
+    from repro.serving import service as SV
+
+    scan = SV.SharedScan(family, data, rounds=rounds, confidence=confidence,
+                         mesh=mesh, axis_name=axis_name)
+    engine = "sharded" if mesh is not None else "vmapped"
+    plan = {"gla": f"slot-family[{'+'.join(family.expr_names)}]",
+            "engine": engine, "emit": "serve", "mode": "async",
+            "P": scan.P, "C": scan.C, "rounds": scan.rounds,
+            "backend": jax.default_backend()}
+
+    def q(i: int) -> SlotQuery:
+        return SlotQuery(family.expr_names[i % len(family.expr_names)])
+
+    before = SV.serve_step_cache_sizes()[engine]
+    if before is None:
+        report = AuditReport(plan=plan, results=(
+            _skip("bounded_compiles_under_churn",
+                  "jit cache introspection unavailable in this jax"),))
+        if raise_on_failure:
+            report.raise_for_failures()
+        return report
+
+    recs = [scan.attach(q(0))]
+    scan.step()                               # scalar K=1
+    recs += [scan.attach(q(1)), scan.attach(q(2))]
+    scan.step()                               # forces K=1 -> 2 -> 4
+    scan.detach(recs.pop())
+    reused = scan.attach(q(1))                # slot reuse: same capacity
+    scan.step()
+    for g in family.groups:                   # one slot per group bank
+        recs.append(scan.attach(SlotQuery(family.expr_names[0], group=g)))
+    scan.step()
+    arrivals = 3 + len(family.groups) + 1     # membership changes made
+    delta = SV.serve_step_cache_sizes()[engine] - before
+    budget = scan.compile_budget()
+    doublings = max(b.doublings for b in scan.banks.values())
+    data_out = {"cache_miss_delta": delta, "budget": budget,
+                "arrivals": arrivals, "doublings": doublings,
+                "banks": sorted(scan.banks),
+                "reused_slot": reused.slot,
+                "stepped_capacities": {n: sorted(b.stepped_ks)
+                                       for n, b in scan.banks.items()}}
+    if doublings < 1:
+        result = CheckResult(
+            "bounded_compiles_under_churn", "fail",
+            "churn workload never doubled a bank's capacity — the check "
+            "is not exercising growth", data_out)
+    elif delta <= budget:
+        result = CheckResult(
+            "bounded_compiles_under_churn", "pass",
+            f"{arrivals} membership changes ({doublings} doubling(s), "
+            f"{len(scan.banks)} bank(s)) compiled {delta} serving step(s) "
+            f"(budget {budget})", data_out)
+    else:
+        result = CheckResult(
+            "bounded_compiles_under_churn", "fail",
+            f"{arrivals} membership changes compiled {delta} serving "
+            f"step(s), budget {budget} — the step is recompiling per "
+            "arrival (a static argument or shape varies with membership, "
+            "not just with capacity)", data_out)
+    report = AuditReport(plan=plan, results=(result,))
+    if raise_on_failure:
+        report.raise_for_failures()
+    return report
+
+
+# ---------------------------------------------------------------------------
 # CLI: the CI audit-smoke lane (python -m repro.analysis.audit)
 # ---------------------------------------------------------------------------
 
@@ -734,6 +833,17 @@ def main(argv=None) -> int:
             print(report.summary())
             if not report.ok:
                 failed = True
+        # serving churn certificate (DESIGN.md §11)
+        from repro.core.gla import SlotFamily
+        from repro.data import tpch
+        fam = SlotFamily(
+            exprs={"q6": tpch.q6_func, "qty": lambda c: c["quantity"]},
+            pred_cols=("shipdate", "discount"),
+            groups={"rfls": (tpch.q1_group_small, 4)})
+        report = audit_service(fam, shards, rounds=args.rounds, mesh=mesh)
+        print(report.summary())
+        if not report.ok:
+            failed = True
     print("audit-smoke:", "FAIL" if failed else "OK")
     return 1 if failed else 0
 

@@ -39,6 +39,12 @@ Rules (DESIGN.md §10 documents each with rationale):
         only for ``(path-suffix, rule)`` pairs recorded in
         :data:`ALLOWLIST`; an unlisted suppression is itself an error, so
         the allowlist in this file is the single audit point.
+  C009  Framework code must not call ``run_query``/``run_queries``/
+        ``Session`` with the deprecated loose plan kwargs
+        (:data:`DEPRECATED_PLAN_KWARGS` — rounds/stop/emit/mode/...);
+        plans are spelled as ``QuerySpec`` (repro/core/spec.py).  Applies
+        to ``src``, ``benchmarks`` and ``examples``; ``tests`` are exempt
+        — the compat shim itself is under test there.
 
 Exit status: 0 when clean, 1 with one ``path:line: CODE message`` line per
 violation on stdout.
@@ -71,7 +77,23 @@ JIT_REGION_FILES: Dict[str, str] = {
     "core/session.py": "decorated",
     "core/engine.py": "decorated",
     "dist/shard_engine.py": "decorated",
+    "serving/service.py": "decorated",
 }
+
+# The deprecated loose plan kwargs (C009).  Mirrors
+# repro.core.spec.DEPRECATED_PLAN_KWARGS; duplicated literally because the
+# contracts job runs on a bare interpreter that must not import repro
+# (spec.py is import-light, but the single-source audit point for this
+# linter is this file — tests/test_query_spec.py asserts the two stay in
+# sync).
+DEPRECATED_PLAN_KWARGS: frozenset = frozenset({
+    "rounds", "schedule", "stop", "confidence", "mode", "emit", "lanes",
+    "snapshots", "alive", "fault", "sync_cost_model", "estimator_merge",
+})
+
+# Entry points whose loose plan kwargs are deprecated (call-site leaf
+# names).  Session.resume and audit_plan keep their own signatures.
+_PLAN_ENTRY_POINTS = frozenset({"run_query", "run_queries", "Session"})
 
 # Versioned manifest of the checkpoint envelope's meta keys.  Growing or
 # renaming a key in Session._meta REQUIRES bumping _CKPT_VERSION and adding
@@ -392,6 +414,39 @@ def _check_envelope(tree: ast.Module, path: str,
 
 
 # ---------------------------------------------------------------------------
+# C009 — deprecated loose plan kwargs in framework code
+# ---------------------------------------------------------------------------
+
+def _check_plan_kwargs(tree: ast.Module, path: str,
+                       out: List[Violation]) -> None:
+    """Flag ``run_query``/``run_queries``/``Session`` calls passing any
+    deprecated plan kwarg.  Matching is by call-site leaf name, so both
+    ``EN.run_query(...)`` and ``repro.run_query(...)`` are covered;
+    ``Session.resume`` / ``cls(...)`` / ``audit_plan`` have different
+    leaves and keep their own signatures."""
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        leaf = _dotted(node.func).split(".")[-1]
+        if leaf not in _PLAN_ENTRY_POINTS:
+            continue
+        bad = sorted(k.arg for k in node.keywords
+                     if k.arg in DEPRECATED_PLAN_KWARGS)
+        if bad:
+            out.append(Violation(
+                path, node.lineno, "C009",
+                f"{leaf}(...) called with deprecated loose plan kwarg(s) "
+                f"{bad} — build a repro.QuerySpec instead (the kwarg shim "
+                "is for end-user back-compat only)"))
+
+
+def _c009_exempt(rel: str) -> bool:
+    """tests/ may exercise the deprecated shim — it is under test there."""
+    parts = rel.replace("\\", "/").split("/")
+    return "tests" in parts
+
+
+# ---------------------------------------------------------------------------
 # Suppressions (C008) and the per-file driver
 # ---------------------------------------------------------------------------
 
@@ -438,6 +493,8 @@ def lint_file(path: Path, root: Path) -> List[Violation]:
         _check_estimators(tree, rel, out)
     if rel.replace("\\", "/").endswith("core/session.py"):
         _check_envelope(tree, rel, out)
+    if not _c009_exempt(rel):
+        _check_plan_kwargs(tree, rel, out)
 
     sup = _suppressions(src)
     kept: List[Violation] = []
@@ -478,7 +535,7 @@ def iter_py_files(targets: Sequence[str], root: Path) -> Iterable[Path]:
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
-        description="PF-OLA framework-contract linter (rules C001-C008; "
+        description="PF-OLA framework-contract linter (rules C001-C009; "
                     "see DESIGN.md §10)")
     ap.add_argument("targets", nargs="*",
                     default=["src", "tests", "benchmarks", "examples"],

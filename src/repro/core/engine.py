@@ -43,6 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import scan as SC
+from repro.core import spec as QS
 from repro.core.uda import GLA, Estimate
 
 Pytree = Any
@@ -212,21 +213,49 @@ def _run_vmapped(gla: GLA, shards: dict, sched: jnp.ndarray, alive: jnp.ndarray,
 # public API
 # ---------------------------------------------------------------------------
 
-def normalize_plan(gla: GLA, data, rounds: int,
-                   schedule: Optional[np.ndarray], emit: str):
-    """Validate emit/kernel contracts and resolve the round schedule.
+def normalize_plan(spec_or_gla, data, rounds: int = 8,
+                   schedule: Optional[np.ndarray] = None,
+                   emit: Optional[str] = None):
+    """Validate emit/kernel contracts and resolve the plan.
 
-    Shared by :func:`run_query` and :class:`repro.core.session.Session` so
-    both entry points enforce identical contracts.  ``data`` is a resident
-    [P, C, L] shards dict or a ``repro.data.source.ChunkSource`` (only the
-    shape contract is consulted — no data is read).  Round-emission paths
-    ("round", and group-by/bundle "kernel") emit at uniform round boundaries
-    only: ``rounds`` degrades to the largest divisor of C with a warning,
-    and an explicit ``schedule`` that is indivisible or non-uniform is a
+    Canonical form: ``normalize_plan(spec, data) -> QuerySpec`` — takes a
+    :class:`repro.core.spec.QuerySpec`, resolves its emission discipline
+    and round schedule against the data's shape contract, and returns the
+    resolved spec (``emit`` a concrete string, ``schedule`` a [P, R+1]
+    ndarray, ``rounds`` its R).  This is what ``Session`` and
+    ``OLAService`` call, so every entry point enforces identical
+    contracts.
+
+    Legacy form: ``normalize_plan(gla, data, rounds, schedule, emit) ->
+    (rounds, schedule)`` — the pre-QuerySpec signature, kept for old
+    callers.
+
+    ``data`` is a resident [P, C, L] shards dict or a
+    ``repro.data.source.ChunkSource`` (only the shape contract is
+    consulted — no data is read).  Round-emission paths ("round", and
+    group-by/bundle "kernel") emit at uniform round boundaries only:
+    ``rounds`` degrades to the largest divisor of C with a warning, and
+    an explicit ``schedule`` that is indivisible or non-uniform is a
     ValueError (those paths would silently ignore it otherwise).
-
-    Returns ``(rounds, schedule)`` with ``schedule`` a [P, R+1] ndarray.
     """
+    if isinstance(spec_or_gla, QS.QuerySpec):
+        qspec = spec_or_gla
+        if qspec.is_multi:
+            raise TypeError(
+                "a QuerySpec holding a sequence of GLAs is a run_queries() "
+                "plan — run_queries bundles it before execution")
+        emit = qspec.resolved_emit()
+        rounds, schedule = _resolve_rounds_schedule(
+            qspec.gla, data, qspec.rounds, qspec.schedule, emit)
+        return qspec.with_(rounds=rounds, schedule=schedule, emit=emit)
+    rounds, schedule = _resolve_rounds_schedule(
+        spec_or_gla, data, rounds, schedule,
+        "chunk" if emit is None else emit)
+    return rounds, schedule
+
+
+def _resolve_rounds_schedule(gla: GLA, data, rounds: int,
+                             schedule: Optional[np.ndarray], emit: str):
     spec = getattr(data, "spec", None)  # duck-typed: core stays data-free
     P, C, L = ((spec.P, spec.C, spec.L) if spec is not None
                else data["_mask"].shape[:3])
@@ -290,103 +319,59 @@ def _execute_full(gla: GLA, shards: dict, sched: jnp.ndarray,
 
 
 def run_query(
-    gla: GLA,
+    spec,
     data,
     *,
-    rounds: int = 8,
-    schedule: Optional[np.ndarray] = None,
-    confidence: float = 0.95,
-    mode: str = "async",
-    emit: str = "chunk",
-    lanes: int = 1,
-    snapshots: bool = True,
-    alive: Optional[np.ndarray] = None,
     mesh=None,
     axis_name: str = "data",
-    sync_cost_model: bool = True,
-    stop=None,
+    **plan,
 ) -> QueryResult:
     """Execute a GLA query with on-line estimation.
 
     A thin wrapper over :class:`repro.core.session.Session` driven to
-    completion.  Without ``stop`` this runs the fused whole-scan program —
-    byte-for-byte the classic engine path; with ``stop`` the session
-    advances round by round and terminates as soon as the rule fires, so
-    the result may cover fewer than ``rounds`` snapshot rounds and its
-    ``final`` is the best partial-scan answer at the stopping round.
+    completion.  Without a stopping rule this runs the fused whole-scan
+    program — byte-for-byte the classic engine path; with ``spec.stop``
+    the session advances round by round and terminates as soon as the
+    rule fires, so the result may cover fewer than ``spec.rounds``
+    snapshot rounds and its ``final`` is the best partial-scan answer at
+    the stopping round.
 
     Args:
-      gla: the UDA bundle (repro.core.gla constructors or custom).
+      spec: a :class:`repro.core.spec.QuerySpec` (the canonical spelling
+        — see its docstring for every plan field), or a bare GLA for the
+        default plan.  The old loose plan kwargs (``rounds=``, ``emit=``,
+        ``stop=``, ...) still work on a bare GLA but emit a
+        ``DeprecationWarning`` (rule C009 keeps framework code off them).
       data: columnar dict, leaves [P, C, L] incl. "_mask", OR any
         ``repro.data.source.ChunkSource`` (DESIGN.md §8).  Streaming
         sources (``NpyMmapSource``/``ParquetSource``) are scanned
         out-of-core on the incremental discipline with O(slice) device
         footprint; finals/snapshots/bounds stay bitwise-identical to the
         resident path on the scan and group/bundle kernel paths.
-      rounds: number of snapshot points (ignored if ``schedule`` given).
-        Round-emission paths ("round", and group-by "kernel") emit at
-        uniform round boundaries only: the engine degrades ``rounds`` to
-        the largest divisor of C with a warning, and rejects an explicit
-        ``schedule`` that is indivisible or non-uniform with a ValueError
-        (those paths would silently ignore it otherwise).
-      schedule: cumulative chunk boundaries [P, R+1] (engine.*_schedule).
-      mode: "async" (paper's estimator) or "sync" (Wu et al. barrier).
-      emit: "chunk" (prefix states; small-state GLAs, any schedule),
-            "round" (uniform schedule fast path, large states),
-            "round_masked" (any schedule, large states, O(R·C)), or
-            "kernel" (fused Pallas dispatch; needs ``gla.kernel_cols``,
-            lanes == 1 — one dispatch per shard for scalar SumState GLAs,
-            one ``ops.group_agg`` dispatch per round-slice for group-by
-            GLAs publishing ``kernel_num_groups``).
-      lanes: parallel GLA states per partition (DataPath work-unit analogue).
-      snapshots: False = non-interactive mode (overhead baseline).
-      alive: bool [P] (node dead throughout) or [R, P] (failure-injection
-        schedule) — paper §4.6; see repro/dist/fault.py.
       mesh: if given, run under shard_map with partitions on ``axis_name``
-        (repro/dist/shard_engine.py).
-      sync_cost_model: sharded ``mode="sync"`` only — pay the per-chunk
-        coordination collective that mechanistically reproduces the Wu et
-        al. barrier cost (DESIGN.md §4).  False truncates to min progress
-        without the per-chunk collective (required for the scalar-SumState
-        ``emit="kernel"`` path under sync).  Ignored by the vmapped path.
-      stop: optional stopping rule (repro.core.session.rel_width et al.);
-        needs an incrementally-steppable config — ``mode="async"`` with a
-        partition-uniform schedule.
+        (repro/dist/shard_engine.py).  Engine location is a per-call
+        choice, never part of the spec.
     """
     from repro.core import session as SN  # local: session imports engine
 
-    sess = SN.Session(
-        gla, data, rounds=rounds, schedule=schedule, stop=stop,
-        confidence=confidence, mode=mode, emit=emit, lanes=lanes,
-        snapshots=snapshots, alive=alive, mesh=mesh, axis_name=axis_name,
-        sync_cost_model=sync_cost_model,
-    )
-    return sess.run()
+    qspec = QS.coerce_spec(spec, plan, caller="run_query")
+    return SN.Session(qspec, data, mesh=mesh, axis_name=axis_name).run()
 
 
 def run_queries(
-    glas,
+    specs,
     data,
     *,
-    rounds: int = 8,
-    schedule: Optional[np.ndarray] = None,
-    confidence: float = 0.95,
-    mode: str = "async",
-    emit: str = "round",
-    lanes: int = 1,
-    snapshots: bool = True,
-    alive: Optional[np.ndarray] = None,
     mesh=None,
     axis_name: str = "data",
-    sync_cost_model: bool = True,
-    stop=None,
+    **plan,
 ):
     """Execute N concurrent OLA queries over a SINGLE pass of the shards.
 
     The paper's central claim (§3–§4) is that any number of concurrent
     estimation models ride alongside one execution with virtually no
     overhead.  This is the multi-query hot path that delivers it: the
-    ``glas`` are stacked into a :func:`repro.core.gla.GLABundle` (one
+    queries are stacked into a :func:`repro.core.gla.GLABundle` (one
     tuple-of-states GLA), every scan path feeds all of them from the same
     chunk stream, and the results are unbundled into one
     :class:`QueryResult` per query.  Each query's finals, snapshot states
@@ -394,30 +379,33 @@ def run_queries(
     ``run_query`` (tests/test_multiquery.py) — a second query no longer
     pays a second pass over the data.
 
-    Args are as for :func:`run_query` — including ``data`` as a shards
-    dict or a ``repro.data.source.ChunkSource`` — and apply to the shared
-    scan (one schedule, one mode, one emission discipline for the bundle).
-    ``emit`` defaults to ``"round"`` because the bundle state is as large
-    as its largest member — per-chunk prefix emission (``"chunk"``) is only
-    sensible when every member is small.  ``emit="kernel"`` requires every
-    member to publish ``kernel_cols`` and batches all of them into one
-    ``ops.group_agg`` dispatch per round-slice (DESIGN.md §6).  ``stop``
-    applies to the shared scan: with e.g. ``session.rel_width`` every
-    member that publishes an estimator must converge before the bundle
-    stops — the all-queries-converged rule.
+    ``specs`` is a :class:`repro.core.spec.QuerySpec` whose ``gla`` is a
+    sequence of GLAs, or a bare sequence for the default plan (the old
+    loose kwargs also still work on a bare sequence, with a
+    ``DeprecationWarning``).  The plan applies to the shared scan — one
+    schedule, one mode, one emission discipline for the bundle.  ``emit``
+    resolves to ``"round"`` by default because the bundle state is as
+    large as its largest member — per-chunk prefix emission (``"chunk"``)
+    is only sensible when every member is small.  ``emit="kernel"``
+    requires every member to publish ``kernel_cols`` and batches all of
+    them into one ``ops.group_agg`` dispatch per round-slice (DESIGN.md
+    §6).  ``spec.stop`` applies to the shared scan: with e.g.
+    ``session.rel_width`` every member that publishes an estimator must
+    converge before the bundle stops — the all-queries-converged rule.
 
     Returns: list of :class:`QueryResult`, one per input GLA, in order.
     """
     from repro.core.gla import GLABundle  # local: avoid import cycle at load
 
-    glas = list(glas)
-    bundle = GLABundle(glas)
-    res = run_query(
-        bundle, data, rounds=rounds, schedule=schedule,
-        confidence=confidence, mode=mode, emit=emit, lanes=lanes,
-        snapshots=snapshots, alive=alive, mesh=mesh, axis_name=axis_name,
-        sync_cost_model=sync_cost_model, stop=stop,
-    )
+    qspec = QS.coerce_spec(specs, plan, caller="run_queries")
+    if not qspec.is_multi:
+        raise TypeError("run_queries() takes a sequence of GLAs — for a "
+                        "single query use run_query()")
+    glas = list(qspec.gla)
+    # Resolve emit while the spec still knows it is multi-query, then
+    # swap in the bundle (one tuple-of-states GLA) for execution.
+    qspec = qspec.with_(emit=qspec.resolved_emit(), gla=GLABundle(glas))
+    res = run_query(qspec, data, mesh=mesh, axis_name=axis_name)
     out = []
     for i in range(len(glas)):
         est = res.estimates[i] if res.estimates is not None else None

@@ -24,10 +24,11 @@ directly (one dispatch per round-slice); large raw-id domains fold through
 from __future__ import annotations
 
 from functools import lru_cache
-from typing import Callable, Optional, Sequence
+from typing import Callable, Mapping, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import estimators as E
 from repro.core.uda import GLA, Chunk, Estimate
@@ -82,6 +83,18 @@ def GLABundle(glas: Sequence[GLA], *, name: Optional[str] = None) -> GLA:
 
 @lru_cache(maxsize=256)
 def _bundle_cached(members: tuple, name: Optional[str]) -> GLA:
+    return _combine_members(members, name)
+
+
+def _combine_members(members: tuple, name: Optional[str]) -> GLA:
+    """The tuple-of-states combinator behind :func:`GLABundle`.
+
+    Exposed separately (uncached) for the serving slot families, whose
+    members close over *traced* per-slot parameters: those closures are
+    rebuilt on every trace by design and must never enter the bundle
+    memo — the jit cache of the serving step keys on the family object
+    instead (repro/serving/service.py).
+    """
     def init():
         return tuple(m.init() for m in members)
 
@@ -432,3 +445,207 @@ def make_join_groupby_gla(
         dtype=dtype, num_aggs=num_aggs,
     )
     return inner.with_(name=f"join-{estimator}")
+
+
+# ---------------------------------------------------------------------------
+# Padded-slot query families — the serving layer's dynamic bundle
+# (repro/serving/service.py, DESIGN.md §11).
+#
+# A GLABundle fixes its membership at trace time: every attach/detach of a
+# query would build a new bundle object, and the engines' jit caches key on
+# the GLA statically — a recompile per arrival.  A SlotFamily instead fixes
+# the *query family* statically (a basis of value expressions, a set of
+# range-predicate columns, optional group keys) and makes the per-slot
+# query parameters DYNAMIC jit inputs (:class:`SlotParams`): which basis
+# expression a slot aggregates, its half-open predicate ranges, and whether
+# the slot was freshly (re)claimed this round.  The serving step then
+# compiles once per (family, bank, slot capacity) and serves any
+# arrival/departure pattern from the same executable; capacity grows in
+# powers of two, so compile count under churn is bounded by capacity
+# doublings, never per-arrival (audit: ``bounded_compiles_under_churn``).
+#
+# Bitwise discipline: each slot's program is built from the SAME
+# constructors as a solo query (``make_sum_gla`` / ``make_groupby_gla``)
+# with value selection by row-gather from the stacked basis and predicate
+# weights from identical half-open comparisons, combined by the SAME
+# tuple combinator as :func:`GLABundle` — so a slot's states, estimates
+# and bounds are bitwise-identical to a fresh solo Session over the rounds
+# the slot witnessed (tests/test_service.py).  Slot reclaim resets state
+# via ``jnp.where(fresh, zeros, state)`` — never by multiplying with a
+# 0/1 mask, which would turn negative carries into -0.0 and break bitwise
+# identity with a fresh +0.0 init.
+# ---------------------------------------------------------------------------
+
+_INACTIVE_LO = np.float32(np.inf)    # empty half-open range: weight exactly 0
+_INACTIVE_HI = np.float32(-np.inf)
+
+
+class SlotQuery(NamedTuple):
+    """One query expressible in a :class:`SlotFamily`.
+
+    ``SUM(exprs[expr](d)) WHERE AND_j lo_j <= pred_col_j(d) < hi_j
+    [GROUP BY group]`` — ``ranges`` maps predicate column -> (lo, hi)
+    half-open; columns not named are unconstrained.  ``group`` names one
+    of the family's group keys (None = scalar aggregate).
+    """
+
+    expr: str
+    ranges: Mapping[str, Tuple[float, float]] = {}
+    group: Optional[str] = None
+
+
+class SlotParams(NamedTuple):
+    """Dynamic per-slot parameters of one bank — jit INPUTS, never
+    statics.  Leaves are [K] / [K, n_pred] with K the bank's power-of-two
+    slot capacity; inactive slots carry the empty range (lo=+inf,
+    hi=-inf), so their predicate weight is exactly 0 on every tuple."""
+
+    expr: jnp.ndarray   # int32 [K] — row into the family's expression basis
+    lo: jnp.ndarray     # float32 [K, n_pred]
+    hi: jnp.ndarray     # float32 [K, n_pred]
+    fresh: jnp.ndarray  # bool [K] — reclaim: reset the slot's carry first
+
+
+def _range_cond(pred_cols: Tuple[str, ...], lo, hi):
+    """Predicate closure over (possibly traced) per-column bounds.
+
+    Shared verbatim between a slot's in-bundle program (traced bounds)
+    and its solo comparison GLA (host float32 bounds), so the 0/1 weights
+    are bitwise-identical.  Unconstrained columns carry (-inf, +inf) and
+    compare all-True for finite data either way.
+    """
+    def cond(chunk):
+        w = None
+        for j, col in enumerate(pred_cols):
+            c = (chunk[col] >= lo[j]) & (chunk[col] < hi[j])
+            w = c if w is None else w & c
+        return w.astype(jnp.float32)
+
+    return cond
+
+
+class SlotFamily:
+    """A parametric family of slot queries over a fixed expression basis.
+
+    Args:
+      exprs: ordered mapping name -> (chunk -> [n] float32) value
+        expressions — the basis a slot selects from by index.
+      pred_cols: the columns range predicates may constrain.
+      groups: optional mapping name -> (group_fn, num_groups) for group-by
+        slots; each group key gets its own bank (its own dense [G, A]
+        states and its own jitted step).
+
+    Instances hash by identity — the serving layer builds ONE family per
+    service and uses it as the static jit key of its per-round step; two
+    equal-looking families are different compile keys on purpose.
+    """
+
+    def __init__(self, exprs: Mapping[str, Callable[[Chunk], jnp.ndarray]],
+                 pred_cols: Sequence[str],
+                 groups: Optional[Mapping[str, Tuple[Callable, int]]] = None):
+        self.expr_names: Tuple[str, ...] = tuple(exprs)
+        self._expr_fns = tuple(exprs[n] for n in self.expr_names)
+        if not self._expr_fns:
+            raise ValueError("SlotFamily needs at least one basis expression")
+        self.pred_cols: Tuple[str, ...] = tuple(pred_cols)
+        self.groups = dict(groups or {})
+
+    # -- host-side parameter rows -------------------------------------------
+
+    def bank_of(self, q: SlotQuery) -> str:
+        """The bank a query lands in: its group key, or "scalar"."""
+        if q.group is not None and q.group not in self.groups:
+            raise KeyError(f"unknown group key {q.group!r}; family has "
+                           f"{sorted(self.groups)}")
+        return q.group if q.group is not None else "scalar"
+
+    def slot_row(self, q: SlotQuery):
+        """Host (expr_idx, lo[n_pred], hi[n_pred]) float32 row for ``q``."""
+        if q.expr not in self.expr_names:
+            raise KeyError(f"unknown expression {q.expr!r}; family basis is "
+                           f"{list(self.expr_names)}")
+        unknown = sorted(set(q.ranges) - set(self.pred_cols))
+        if unknown:
+            raise KeyError(f"query constrains {unknown}, not in the "
+                           f"family's pred_cols {list(self.pred_cols)}")
+        lo = np.full(len(self.pred_cols), -np.inf, np.float32)
+        hi = np.full(len(self.pred_cols), np.inf, np.float32)
+        for j, col in enumerate(self.pred_cols):
+            if col in q.ranges:
+                lo[j], hi[j] = (np.float32(q.ranges[col][0]),
+                                np.float32(q.ranges[col][1]))
+        return self.expr_names.index(q.expr), lo, hi
+
+    def inactive_row(self):
+        """(expr_idx, lo, hi) of a parked slot: the empty range."""
+        n = len(self.pred_cols)
+        return (0, np.full(n, _INACTIVE_LO, np.float32),
+                np.full(n, _INACTIVE_HI, np.float32))
+
+    # -- per-slot GLA programs ----------------------------------------------
+
+    def _select_func(self, expr_idx):
+        """Value expression by (possibly traced) basis index: the stacked
+        basis is computed once per chunk (CSE'd across slots) and the
+        slot's row gathered — the gathered row is bitwise the expression's
+        own output, so it matches the solo GLA's direct call."""
+        fns = self._expr_fns
+        if len(fns) == 1:
+            return fns[0]
+
+        def func(chunk):
+            return jnp.stack([f(chunk) for f in fns])[expr_idx]
+
+        return func
+
+    def _member_gla(self, bank: str, func, cond, d_total) -> GLA:
+        if bank == "scalar":
+            return make_sum_gla(func, cond, d_total=d_total)
+        gfn, G = self.groups[bank]
+        return make_groupby_gla(func, cond, gfn, num_groups=G,
+                                d_total=d_total)
+
+    def solo_gla(self, q: SlotQuery, *, d_total: float) -> GLA:
+        """The stand-alone GLA of one slot query — what a fresh Session
+        would run.  Built from the same constructors, the same predicate
+        closure and the same d_total as the in-bundle slot program, so it
+        is the bitwise reference for late-join tests."""
+        expr_idx, lo, hi = self.slot_row(q)
+        cond = _range_cond(self.pred_cols, lo, hi)
+        return self._member_gla(self.bank_of(q), self._expr_fns[expr_idx],
+                                cond, d_total)
+
+    def bind(self, bank: str, params: SlotParams, d_total) -> GLA:
+        """The K-slot bundle GLA of one bank, closed over (traced) params.
+
+        Called INSIDE the serving step's jit region: the returned GLA's
+        member closures capture the traced per-slot parameters, so the
+        step function — whose statics are only (family, bank, K) — serves
+        every arrival/departure pattern from one executable.  Never
+        memoized (see :func:`_combine_members`).
+        """
+        K = int(params.expr.shape[0])
+        members = []
+        for k in range(K):
+            func = self._select_func(params.expr[k])
+            cond = _range_cond(self.pred_cols, params.lo[k], params.hi[k])
+            members.append(self._member_gla(bank, func, cond, d_total))
+        return _combine_members(tuple(members), f"slots-{bank}x{K}")
+
+    def zero_slot_state(self, bank: str):
+        """One slot's init state (the reclaim target of a fresh slot)."""
+        if bank == "scalar":
+            z = jnp.zeros((1,), jnp.float32)
+            s = jnp.zeros((), jnp.float32)
+            return E.SumState(sum=z, sumsq=z, scanned=s, matched=s)
+        _, G = self.groups[bank]
+        return E.SumState(
+            sum=jnp.zeros((G, 1), jnp.float32),
+            sumsq=jnp.zeros((G, 1), jnp.float32),
+            scanned=jnp.zeros((), jnp.float32),
+            matched=jnp.zeros((G,), jnp.float32))
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (and >= 1) — slot-capacity discipline."""
+    return 1 << max(0, int(n - 1).bit_length())

@@ -71,6 +71,7 @@ import numpy as np
 from repro.checkpoint import ckpt
 from repro.core import engine as EN
 from repro.core import scan as SC
+from repro.core import spec as QS
 from repro.core.uda import GLA, Estimate
 from repro.data import source as DSRC
 
@@ -389,8 +390,12 @@ class Session:
     the double-buffered prefetcher — O(slice) device footprint — and
     always run the incremental discipline (DESIGN.md §8).
 
-    Construction validates exactly like :func:`repro.core.engine.run_query`
-    (same emit/kernel contracts, same round-degrade policy).  Drive it with
+    The plan arrives as a :class:`repro.core.spec.QuerySpec` (canonical) or
+    a bare GLA; the old loose plan kwargs still work with a
+    ``DeprecationWarning``.  Engine location (``mesh``/``axis_name``) and
+    ``audit`` stay per-call arguments.  Construction validates exactly like
+    :func:`repro.core.engine.run_query` (same emit/kernel contracts, same
+    round-degrade policy).  Drive it with
 
       * :meth:`run` — to convergence (``stop`` rule) or completion.  With no
         stopping rule and no prior :meth:`step`, this executes the fused
@@ -406,18 +411,18 @@ class Session:
         continue later, bitwise-identically, even in another process.
     """
 
-    def __init__(self, gla: GLA, data, *, rounds: int = 8,
-                 schedule: Optional[np.ndarray] = None,
-                 stop: Optional[StoppingRule] = None,
-                 confidence: float = 0.95, mode: str = "async",
-                 emit: str = "chunk", lanes: int = 1, snapshots: bool = True,
-                 alive: Optional[np.ndarray] = None,
-                 fault: Optional[FaultPolicy] = None, mesh=None,
-                 axis_name: str = "data", sync_cost_model: bool = True,
-                 audit=None):
+    def __init__(self, spec, data, *, mesh=None, axis_name: str = "data",
+                 audit=None, **plan):
+        qspec = QS.coerce_spec(spec, plan, caller="Session")
         source = DSRC.as_source(data)
-        rounds, schedule = EN.normalize_plan(gla, source, rounds, schedule,
-                                             emit)
+        qspec = EN.normalize_plan(qspec, source)
+        self.spec = qspec  # the resolved plan, for introspection
+        gla: GLA = qspec.gla
+        rounds, schedule, emit = qspec.rounds, qspec.schedule, qspec.emit
+        stop, mode, lanes = qspec.stop, qspec.mode, qspec.lanes
+        snapshots, confidence = qspec.snapshots, qspec.confidence
+        alive, fault = qspec.alive, qspec.resolved_fault()
+        sync_cost_model = qspec.sync_cost_model
         self._gla = gla
         self._source = source
         self._resident = source.resident
@@ -1033,12 +1038,14 @@ class Session:
             sched = np.broadcast_to(
                 bounds, (P_new, bounds.size)).astype(np.int32)
 
-        sess = cls(gla, src, rounds=int(sched.shape[1] - 1), stop=stop,
-                   schedule=sched, alive=alive, fault=fault,
-                   confidence=meta["confidence"],
-                   mode=meta["mode"], emit=meta["emit"],
-                   lanes=meta["lanes"], snapshots=meta["snapshots"],
-                   mesh=mesh, axis_name=axis_name)
+        sess = cls(
+            QS.QuerySpec(
+                gla, rounds=int(sched.shape[1] - 1), stop=stop,
+                schedule=sched, alive=alive, fault=fault,
+                confidence=meta["confidence"], sync=meta["mode"] == "sync",
+                emit=meta["emit"], lanes=meta["lanes"],
+                snapshots=meta["snapshots"]),
+            src, mesh=mesh, axis_name=axis_name)
         if meta["steps"]:
             payload = ckpt.deserialize_state(
                 blob, like=sess._payload_like(meta["steps"]))

@@ -1,0 +1,150 @@
+"""QuerySpec — the consolidated query-plan surface (DESIGN.md §11).
+
+Historically every entry point (``run_query``, ``run_queries``,
+``Session``) grew its own copy of the plan kwargs (rounds, schedule,
+stop, emit, mode, lanes, ...), and adding a parameter meant touching all
+of them.  :class:`QuerySpec` is the one place a query plan lives: build
+it once, hand it to any entry point — including ``OLAService.submit``,
+where a loose-kwarg spelling never existed.
+
+The old spellings keep working through :func:`coerce_spec`, the thin
+shim every entry point routes through: a bare GLA first argument is
+wrapped silently, but passing any of the deprecated loose plan kwargs
+emits a ``DeprecationWarning`` (and rule C009 in
+``repro/analysis/contracts.py`` keeps framework code off them).
+
+``QuerySpec`` is plan-only by design: *where* the plan runs (``mesh``,
+``axis_name``, ``audit``) stays a per-call argument — the same spec can
+be submitted to the vmapped engine, a shard_map mesh, or a service scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Optional
+
+#: Loose plan kwargs accepted (with a DeprecationWarning) by the
+#: run_query/run_queries/Session shims.  ``mode`` maps onto
+#: ``QuerySpec.sync``; everything else maps onto the field of the same
+#: name.  Rule C009 (repro/analysis/contracts.py) forbids framework code
+#: from spelling plans this way.
+DEPRECATED_PLAN_KWARGS = (
+    "rounds", "schedule", "stop", "confidence", "mode", "emit", "lanes",
+    "snapshots", "alive", "fault", "sync_cost_model", "estimator_merge",
+)
+
+
+def _is_gla_sequence(gla) -> bool:
+    """True when ``gla`` is a plain sequence of queries (run_queries),
+    as opposed to a single GLA or a NamedTuple query description."""
+    return isinstance(gla, (tuple, list)) and not hasattr(type(gla), "_fields")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuerySpec:
+    """One OLA query plan.
+
+    Fields mirror the engine's execution model (DESIGN.md §2, §7):
+
+      gla             the UDA bundle — one GLA, a sequence of GLAs
+                      (``run_queries``), or a ``serving`` slot query.
+      rounds          snapshot points over the scan.
+      schedule        cumulative chunk boundaries [P, R+1]; None = uniform.
+      stop            stopping rule (``repro.core.session.rel_width`` et al.).
+      emit            state-emission discipline ("chunk" | "round" |
+                      "round_masked" | "kernel"); None resolves to "chunk"
+                      for a single GLA and "round" for a sequence.
+      sync            True = the Wu et al. synchronized estimator barrier
+                      (the old ``mode="sync"``).
+      lanes           parallel GLA states per partition.
+      snapshots       False = non-interactive mode (no per-round states).
+      confidence      CI level for estimates.
+      alive           static liveness mask [P] or [R, P] (paper §4.6).
+      fault           runtime ``FaultPolicy``; exclusive with
+                      ``estimator_merge``.
+      estimator_merge shorthand for the fault-estimator family
+                      ("single" | "multiple" | "synchronized") — resolves
+                      to ``FaultPolicy(estimator_merge)`` when ``fault``
+                      is not given.
+      sync_cost_model sharded sync mode only: pay the per-chunk
+                      coordination collective (DESIGN.md §4).
+    """
+
+    gla: Any
+    rounds: int = 8
+    schedule: Optional[Any] = None
+    stop: Optional[Any] = None
+    emit: Optional[str] = None
+    sync: bool = False
+    lanes: int = 1
+    snapshots: bool = True
+    confidence: float = 0.95
+    alive: Optional[Any] = None
+    fault: Optional[Any] = None
+    estimator_merge: Optional[str] = None
+    sync_cost_model: bool = True
+
+    def __post_init__(self):
+        if self.fault is not None and self.estimator_merge is not None:
+            raise ValueError(
+                "QuerySpec: pass either fault= (a FaultPolicy) or "
+                "estimator_merge= (its shorthand), not both")
+
+    @property
+    def mode(self) -> str:
+        return "sync" if self.sync else "async"
+
+    @property
+    def is_multi(self) -> bool:
+        return _is_gla_sequence(self.gla)
+
+    def resolved_emit(self) -> str:
+        if self.emit is not None:
+            return self.emit
+        return "round" if self.is_multi else "chunk"
+
+    def resolved_fault(self):
+        """The runtime fault policy: ``fault`` as given, or one built
+        from the ``estimator_merge`` shorthand."""
+        if self.fault is not None or self.estimator_merge is None:
+            return self.fault
+        from repro.core.session import FaultPolicy  # session imports spec
+
+        return FaultPolicy(self.estimator_merge)
+
+    def with_(self, **kw) -> "QuerySpec":
+        return dataclasses.replace(self, **kw)
+
+
+def coerce_spec(spec_or_gla, legacy: dict, *, caller: str) -> QuerySpec:
+    """The back-compat shim behind every entry point.
+
+    ``spec_or_gla`` is either a ready :class:`QuerySpec` (canonical; any
+    loose plan kwarg alongside it is a TypeError) or a bare GLA.  A bare
+    GLA with no loose kwargs wraps silently — ``run_query(gla, data)``
+    stays warning-free; any deprecated kwarg triggers one
+    ``DeprecationWarning`` naming the offending spellings.
+    """
+    if isinstance(spec_or_gla, QuerySpec):
+        if legacy:
+            raise TypeError(
+                f"{caller}(): pass the plan inside the QuerySpec, not as "
+                f"loose kwargs too ({sorted(legacy)})")
+        return spec_or_gla
+    if not legacy:
+        return QuerySpec(gla=spec_or_gla)
+    unknown = sorted(set(legacy) - set(DEPRECATED_PLAN_KWARGS))
+    if unknown:
+        raise TypeError(
+            f"{caller}() got unexpected keyword arguments: {unknown}")
+    warnings.warn(
+        f"{caller}(gla, data, {'/'.join(sorted(legacy))}=...) loose plan "
+        f"kwargs are deprecated — pass {caller}(QuerySpec(gla, ...), data) "
+        "(repro.QuerySpec)", DeprecationWarning, stacklevel=3)
+    kw = dict(legacy)
+    mode = kw.pop("mode", None)
+    if mode is not None:
+        if mode not in ("async", "sync"):
+            raise ValueError(f"mode must be 'async' or 'sync', got {mode!r}")
+        kw["sync"] = mode == "sync"
+    return QuerySpec(gla=spec_or_gla, **kw)

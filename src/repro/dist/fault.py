@@ -45,6 +45,7 @@ import numpy as np
 
 from repro.core import engine
 from repro.core import estimators as E
+from repro.core.spec import QuerySpec
 from repro.core.uda import GLA, Estimate
 from repro.data import source as DSRC
 
@@ -175,8 +176,9 @@ def run_with_failures(
         alive = alive_mask(P, dead_partitions)
 
     res = engine.run_query(
-        gla, shards, schedule=schedule, mode=mode, emit=emit,
-        confidence=confidence, alive=alive, mesh=mesh, axis_name=axis_name,
+        QuerySpec(gla, schedule=schedule, sync=mode == "sync", emit=emit,
+                  confidence=confidence, alive=alive),
+        shards, mesh=mesh, axis_name=axis_name,
     )
 
     fr = first_failure_round(alive)
@@ -201,7 +203,8 @@ def variance_floor(
     """
     P = shards["_mask"].shape[0]
     res = engine.run_query(
-        gla, shards, rounds=1, alive=alive_mask(P, dead_partitions))
+        QuerySpec(gla, rounds=1, alive=alive_mask(P, dead_partitions)),
+        shards)
     full = jax.tree.map(lambda x: x[-1], res.snapshots)
     var = E.variance_estimate(full.sum, full.sumsq, full.scanned, res.d_total)
     return float(np.max(np.asarray(var)))

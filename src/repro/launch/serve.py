@@ -1,57 +1,123 @@
-"""Serving driver: batched prefill + greedy decode.
+"""OLA service entry point: concurrent anytime queries on one shared scan.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3_32b --smoke \
-        --batch 4 --prompt-len 16 --gen 24
+    PYTHONPATH=src python -m repro.launch.serve --rows 200000 --queries 6 \
+        --qps 20 --eps 0.05
 
-On hardware the same prefill/decode steps run under the production mesh
-with the flash-decoding cache sharding proven by the dry-run.
+Boots an :class:`repro.serving.service.OLAService` over a synthetic
+TPC-H lineitem instance, submits a seeded Poisson stream of slot
+queries (scalar Q6-style range aggregates plus group-by members), and
+prints each query's anytime outcome as it converges or completes a full
+pass.  All queries ride ONE cyclic scan (DESIGN.md §11); arrivals and
+departures reuse the warm jitted step via the padded-slot bundle.
+
+The LLM prefill/decode demo that used to live here moved to
+``examples/llm_serve_demo.py`` (run it directly, or via the deprecated
+``--llm-demo`` flag kept for one release).
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import time
-
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_config
-from repro.models import spec, transformer as T
-from repro.serving import serve_step as SS
+import warnings
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="smollm_135m")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=24)
-    ap.add_argument("--smoke", action="store_true")
-    args = ap.parse_args()
+def _llm_demo(argv):
+    """Deprecated shim for the relocated serving demo."""
+    warnings.warn(
+        "`python -m repro.launch.serve --llm-demo` is deprecated: the LLM "
+        "prefill/decode demo moved to examples/llm_serve_demo.py; "
+        "repro.launch.serve now serves OLA queries",
+        DeprecationWarning, stacklevel=2)
+    import pathlib
+    import runpy
+    import sys
 
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = cfg.smoke()
-    key = jax.random.key(0)
-    params = spec.init_params(
-        T.param_specs(cfg, dtype=jnp.float32 if args.smoke else jnp.bfloat16),
-        key)
-    batch = {"tokens": jax.random.randint(
-        key, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
-    if cfg.frontend == "vision_stub":
-        batch["patches"] = jax.random.normal(
-            key, (args.batch, cfg.vis_tokens, cfg.d_model), jnp.float32)
-    if cfg.is_encoder_decoder:
-        batch["frames"] = jax.random.normal(
-            key, (args.batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    demo = (pathlib.Path(__file__).resolve().parents[3]
+            / "examples" / "llm_serve_demo.py")
+    sys.argv = [str(demo)] + list(argv)
+    runpy.run_path(str(demo), run_name="__main__")
 
-    total = args.prompt_len + (cfg.vis_tokens if cfg.frontend else 0)
-    t0 = time.time()
-    out = SS.greedy_generate(cfg, params, batch, steps=args.gen,
-                             cache_len=total + args.gen + 1)
-    dt = time.time() - t0
-    print(f"arch={cfg.name} generated [{args.batch}, {args.gen}] tokens "
-          f"in {dt:.2f}s ({args.batch * args.gen / dt:.1f} tok/s)")
-    print("sample:", jax.device_get(out[0])[:16].tolist())
+
+async def _run(args):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    import repro
+    from repro.core import randomize
+    from repro.data import tpch
+
+    cols = tpch.generate_lineitem(args.rows, seed=args.seed)
+    parts = randomize.randomize_global(
+        {k: jnp.asarray(v) for k, v in cols.items()},
+        jax.random.key(args.seed), args.parts)
+    shards = randomize.pack_partitions(parts, chunk_len=args.chunk)
+
+    family = repro.SlotFamily(
+        exprs={"q6": tpch.q6_func, "qty": lambda c: c["quantity"]},
+        pred_cols=("shipdate", "discount"),
+        groups={"rfls": (tpch.q1_group_small, 4)})
+
+    rng = np.random.default_rng(args.seed)
+    # seeded Poisson stream: exponential inter-arrival gaps
+    arrivals = np.cumsum(rng.exponential(1.0 / args.qps, size=args.queries))
+    service = repro.OLAService(family, rounds=args.rounds,
+                               grace_s=args.grace)
+    t0 = time.perf_counter()
+
+    async def one(i):
+        await asyncio.sleep(float(arrivals[i]))
+        year = int(rng.integers(0, 6)) * 365
+        q = repro.SlotQuery(
+            expr="qty" if i % 3 == 2 else "q6",
+            ranges={"shipdate": (float(year), float(year + 730)),
+                    "discount": (0.0, 1.0)},
+            group="rfls" if i % 4 == 3 else None)
+        spec = repro.QuerySpec(q, stop=repro.rel_width(args.eps))
+        h = await service.submit(spec, shards)
+        out = await h.result()
+        est = np.asarray(out.estimate.estimate)
+        head = float(est.reshape(-1)[0])
+        print(f"  q{i:02d} expr={q.expr:3s} group={q.group or '-':4s} "
+              f"t={time.perf_counter() - t0:6.2f}s "
+              f"rounds={out.rounds_witnessed} "
+              f"converged={str(out.converged):5s} est[0]={head:14.2f}")
+        return out
+
+    async with service:
+        outs = await asyncio.gather(*(one(i) for i in range(args.queries)))
+    scan = service.scan_for(shards)
+    n_conv = sum(o.converged for o in outs)
+    print(f"served {args.queries} queries ({n_conv} early-converged) on "
+          f"{scan.steps_done if scan else 0} shared scan step(s); "
+          f"compile budget {scan.compile_budget() if scan else 0}")
+
+
+def main(argv=None):
+    import sys
+
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if "--llm-demo" in argv:
+        argv.remove("--llm-demo")
+        return _llm_demo(argv)
+
+    ap = argparse.ArgumentParser(
+        description="Serve concurrent OLA queries over one shared scan")
+    ap.add_argument("--rows", type=int, default=200_000)
+    ap.add_argument("--parts", type=int, default=8)
+    ap.add_argument("--chunk", type=int, default=1024)
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--queries", type=int, default=6)
+    ap.add_argument("--qps", type=float, default=20.0,
+                    help="Poisson arrival rate (queries/second)")
+    ap.add_argument("--eps", type=float, default=0.05,
+                    help="per-query relative-width stop threshold")
+    ap.add_argument("--grace", type=float, default=0.25,
+                    help="idle seconds before the shared scan parks")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    asyncio.run(_run(args))
 
 
 if __name__ == "__main__":

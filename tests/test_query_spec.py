@@ -1,0 +1,139 @@
+"""QuerySpec (DESIGN.md §11): one plan object behind every entry point.
+
+The redesign's contract: ``QuerySpec`` is the canonical plan spelling,
+the old loose kwargs keep working through ``coerce_spec`` with exactly
+one ``DeprecationWarning``, and the two spellings produce bitwise
+identical results.  Rule C009 keeps framework code (src/benchmarks/
+examples) off the deprecated spelling; its kwarg list must stay in sync
+with the one duplicated into the stdlib-only linter.
+"""
+import functools
+import textwrap
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import contracts
+from repro.core import engine, gla, randomize
+from repro.core import session as SN
+from repro.core import spec as QS
+from repro.data import tpch
+
+ROWS = 8192
+
+
+@functools.lru_cache(maxsize=None)
+def _shards():
+    cols = tpch.generate_lineitem(ROWS, seed=2)
+    parts = randomize.randomize_global(
+        {k: jnp.asarray(v) for k, v in cols.items()}, jax.random.key(4), 4)
+    return randomize.pack_partitions(parts, chunk_len=128)
+
+
+def _q6():
+    return gla.make_sum_gla(tpch.q6_func, tpch.q6_cond(tpch.Q6_LOW_WINDOW),
+                            d_total=float(ROWS), estimator="single")
+
+
+def _bits(a, b):
+    return np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+
+def test_spec_and_legacy_kwargs_bitwise_identical():
+    g = _q6()
+    res_spec = engine.run_query(QS.QuerySpec(g, rounds=4, emit="round"),
+                                _shards())
+    with pytest.warns(DeprecationWarning, match="loose plan kwargs"):
+        res_legacy = engine.run_query(g, _shards(), rounds=4, emit="round")
+    assert _bits(res_spec.final, res_legacy.final)
+    for a, b in zip(jax.tree.leaves(res_spec.estimates),
+                    jax.tree.leaves(res_legacy.estimates)):
+        assert _bits(a, b)
+
+
+def test_bare_gla_stays_warning_free():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        engine.run_query(_q6(), _shards())
+
+
+def test_spec_plus_loose_kwargs_is_typeerror():
+    with pytest.raises(TypeError, match="not as loose kwargs too"):
+        engine.run_query(QS.QuerySpec(_q6()), _shards(), rounds=4)
+
+
+def test_unknown_kwarg_is_typeerror():
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        engine.run_query(_q6(), _shards(), roundz=4)
+
+
+def test_legacy_mode_maps_to_sync():
+    spec = QS.coerce_spec(None, {}, caller="t")
+    assert spec.mode == "async" and spec.sync is False
+    with pytest.warns(DeprecationWarning):
+        spec = QS.coerce_spec(_q6(), {"mode": "sync"}, caller="t")
+    assert spec.sync is True and spec.mode == "sync"
+    with pytest.warns(DeprecationWarning), pytest.raises(ValueError):
+        QS.coerce_spec(_q6(), {"mode": "turbo"}, caller="t")
+
+
+def test_fault_and_estimator_merge_exclusive():
+    with pytest.raises(ValueError, match="not both"):
+        QS.QuerySpec(_q6(), fault=SN.FaultPolicy("single"),
+                     estimator_merge="single")
+
+
+def test_run_queries_spec_path_matches_legacy():
+    glas = [_q6(),
+            gla.make_sum_gla(lambda c: c["quantity"],
+                             tpch.q6_cond(tpch.Q6_LOW_WINDOW),
+                             d_total=float(ROWS))]
+    res_spec = engine.run_queries(
+        QS.QuerySpec(glas, rounds=4, emit="round"), _shards())
+    with pytest.warns(DeprecationWarning):
+        res_legacy = engine.run_queries(glas, _shards(), rounds=4,
+                                        emit="round")
+    for a, b in zip(res_spec, res_legacy):
+        assert _bits(a.final, b.final)
+
+
+def test_session_spec_path_matches_legacy():
+    g = _q6()
+    s1 = SN.Session(QS.QuerySpec(g, rounds=4, emit="chunk"), _shards())
+    r1 = s1.run()
+    with pytest.warns(DeprecationWarning):
+        s2 = SN.Session(g, _shards(), rounds=4, emit="chunk")
+    r2 = s2.run()
+    assert _bits(r1.final, r2.final)
+
+
+def test_deprecated_kwargs_in_sync_with_linter():
+    """spec.py owns the list; contracts.py duplicates it literally (the
+    linter must import nothing) — this is the tripwire that keeps the
+    copies identical."""
+    assert frozenset(QS.DEPRECATED_PLAN_KWARGS) == \
+        contracts.DEPRECATED_PLAN_KWARGS
+
+
+def test_c009_flags_framework_code_not_tests(tmp_path):
+    bad = textwrap.dedent("""\
+        from repro.core import engine
+        def f(g, shards):
+            return engine.run_query(g, shards, rounds=4, emit="round")
+    """)
+    good = textwrap.dedent("""\
+        import repro
+        def f(g, shards):
+            return repro.run_query(repro.QuerySpec(g, rounds=4), shards)
+    """)
+    for sub, src, expect in (("src", bad, True), ("src", good, False),
+                             ("tests", bad, False)):
+        d = tmp_path / sub
+        d.mkdir(exist_ok=True)
+        p = d / "mod.py"
+        p.write_text(src)
+        codes = [v.code for v in contracts.lint_file(p, tmp_path)]
+        assert ("C009" in codes) is expect, (sub, src, codes)
