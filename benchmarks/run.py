@@ -119,6 +119,13 @@ def main(argv=None):
     else:
         streaming.run()
 
+    print("# === fused (fused kernel + encoded sources, DESIGN.md §12) ===")
+    from benchmarks import fused
+    if smoke:
+        fused.run(rows=fused.SMOKE_ROWS, repeats=2)
+    else:
+        fused.run()
+
     print("# === serve (shared-scan OLA service, DESIGN.md §11) ===")
     from benchmarks import serve
     serve.run(rows=serve.SMOKE_ROWS if smoke else serve.ROWS)

@@ -33,6 +33,21 @@ The catalog (check names accepted by ``checks=``):
                                 (partition, round-slice) (from
                                 benchmarks/groupby.py; CPU interpret mode
                                 shows dispatches as Pallas grid loops).
+  ``fused_single_dispatch``     fused-kernel plans (DESIGN.md §12) issue
+                                exactly ONE ``pl.pallas_call`` per
+                                (partition, round-slice): predicate,
+                                bucketing, in-kernel column decode and
+                                accumulation all ride a single dispatch.
+                                Counted structurally with
+                                ``kernels.fused_agg.count_dispatches``
+                                under ``jax.eval_shape``, so it holds on
+                                any backend, not just interpret mode.
+  ``bytes_moved``               encoded sources (``data/encodings.py``)
+                                must stream measurably fewer physical
+                                bytes per round-slice than the logical
+                                columns they decode to — the
+                                decode-in-kernel bandwidth win is
+                                asserted, not assumed.
   ``one_collective_per_round``  a sharded session step lowers its single
                                 ``lax.psum`` to at most one all-reduce
                                 per merged-state leaf, and none of them
@@ -334,6 +349,7 @@ def check_dtype_discipline(shapes_by_role: Dict[str, Any]) -> CheckResult:
 
 STATIC_CHECKS: Tuple[str, ...] = (
     "one_chunk_pass", "o_slice_footprint", "single_kernel_dispatch",
+    "fused_single_dispatch", "bytes_moved",
     "one_collective_per_round", "dtype_discipline")
 ALL_CHECKS: Tuple[str, ...] = (*STATIC_CHECKS, "no_recompile_across_rounds")
 
@@ -357,10 +373,16 @@ class _Plan:
         self.widths = sorted({int(sched[0, r + 1] - sched[0, r])
                               for r in range(self.R)}) if self.uniform else []
         self.steppable = mode == "async" and self.uniform
+        self.encodings = tuple(getattr(source, "encodings", ()) or ())
+        # mirrors Session's path selection exactly, fused preference
+        # included — the audit certifies the program the session will run
         if emit == "kernel":
-            self.path = ("kernel_bundle" if gla.members
-                         else "kernel_group" if gla.kernel_num_groups
-                         is not None else "kernel_scalar")
+            if SC.fused_available(gla, spec.columns):
+                self.path = "kernel_fused"
+            else:
+                self.path = ("kernel_bundle" if gla.members
+                             else "kernel_group" if gla.kernel_num_groups
+                             is not None else "kernel_scalar")
         else:
             self.path = "scan"
         self._step = None       # (hlo_text, eval_shape outputs)
@@ -395,8 +417,9 @@ class _Plan:
             return None
         if self._step is None:
             w = max(self.widths)
+            # physical slice shapes: encoded sources ship packed columns
             args = (self.gla, self.states_like(),
-                    self.source.spec.slice_like(w),
+                    self.source.step_slice_like(w),
                     jax.ShapeDtypeStruct((self.P,), jnp.float32),
                     jax.ShapeDtypeStruct((self.P,), jnp.float32),
                     jax.ShapeDtypeStruct((), jnp.float32))
@@ -405,13 +428,14 @@ class _Plan:
                 fn = SN._step_vmapped
                 kw = dict(path=self.path, lanes=self.lanes,
                           confidence=self.confidence, all_alive=True,
-                          first=False)
+                          first=False, encodings=self.encodings)
             else:
                 from repro.dist import shard_engine
                 fn = shard_engine.session_step_sharded
                 kw = dict(mesh=self.mesh, axis_name=self.axis_name,
                           path=self.path, lanes=self.lanes,
-                          confidence=self.confidence, first=False)
+                          confidence=self.confidence, first=False,
+                          encodings=self.encodings)
             hlo = fn.lower(*args, **kw).compile().as_text()
             self._step = (hlo, fn.eval_shape(*args, **kw))
         return self._step
@@ -521,7 +545,17 @@ def _audit_kernel_dispatch(p: _Plan) -> CheckResult:
     if p.path == "scan":
         return _skip("single_kernel_dispatch",
                      "not a kernel plan (emit != 'kernel')")
-    per_shard = p.R if (p.path != "kernel_scalar" and p.snapshots) else 1
+    if p.path == "kernel_fused":
+        # the fused body's in-kernel segment_sum lowers to scatter loops
+        # under interpret mode, so a while-op census over the HLO cannot
+        # isolate Pallas grid loops; fused_single_dispatch counts actual
+        # pallas_call constructions at trace time instead
+        return _skip("single_kernel_dispatch",
+                     "fused kernel plan — certified by fused_single_dispatch")
+    # scalar GLAs (legacy) run one whole-shard prefix dispatch;
+    # group/bundle plans dispatch once per round-slice when snapshotting
+    is_scalar = not p.gla.members and p.gla.kernel_num_groups is None
+    per_shard = p.R if (not is_scalar and p.snapshots) else 1
     parts = []
     fused = p.fused()
     if fused is not None:
@@ -547,6 +581,69 @@ def _audit_kernel_dispatch(p: _Plan) -> CheckResult:
                 step[0], dispatches=p.P if p.mesh is None else 1,
                 where="step program"))
     return _merge_results("single_kernel_dispatch", parts)
+
+
+def _audit_fused_dispatch(p: _Plan) -> CheckResult:
+    if p.path != "kernel_fused":
+        return _skip("fused_single_dispatch",
+                     "plan does not take the fused kernel path (no "
+                     "FusedSpec, non-f32 state, or trailing-dim columns)")
+    from repro.kernels import fused_agg as FK
+    w = max(p.widths) if p.widths else p.C
+    slice_like = p.source.step_slice_like(w)
+    # one partition's round-slice, shapes only — the dispatch counter
+    # fires during tracing, so eval_shape counts without executing
+    one = {k: jax.ShapeDtypeStruct(tuple(v.shape[1:]), v.dtype)
+           for k, v in slice_like.items()}
+    st = jax.eval_shape(p.gla.init)
+    with FK.count_dispatches() as box:
+        jax.eval_shape(
+            lambda s, sl: SC.fused_round_step(p.gla, s, sl, p.encodings),
+            st, one)
+    n = box[0]
+    data = {"dispatches": n, "expected": 1, "encoded_cols":
+            [name for name, _ in p.encodings]}
+    if n == 1:
+        k = len(getattr(p.gla, "members", ()) or ()) or 1
+        return CheckResult(
+            "fused_single_dispatch", "pass",
+            f"one pallas_call per (partition, round-slice) covers "
+            f"{k} member(s), predicate, bucketing and "
+            f"{len(p.encodings)} in-kernel decode(s)", data)
+    return CheckResult(
+        "fused_single_dispatch", "fail",
+        f"fused round-slice step issued {n} Pallas dispatches, expected "
+        "1 — selection/bucketing/decode/accumulation split across "
+        "kernels", data)
+
+
+def _audit_bytes_moved(p: _Plan) -> CheckResult:
+    if not p.encodings:
+        return _skip("bytes_moved",
+                     "no encoded columns — the physical stream already "
+                     "is the logical stream")
+    w = max(p.widths) if p.widths else p.C
+
+    def _bytes(tree) -> int:
+        return sum(int(np.prod(v.shape)) * np.dtype(v.dtype).itemsize
+                   for v in jax.tree.leaves(tree))
+
+    phys = _bytes(p.source.step_slice_like(w))
+    logical = _bytes(p.source.spec.slice_like(w))
+    ratio = phys / logical
+    data = {"physical_bytes": phys, "logical_bytes": logical,
+            "ratio": ratio,
+            "encoded_cols": [name for name, _ in p.encodings]}
+    if ratio <= 0.95:
+        return CheckResult(
+            "bytes_moved", "pass",
+            f"encoded round-slice streams {phys}B for {logical}B of "
+            f"logical columns ({ratio:.2f}x)", data)
+    return CheckResult(
+        "bytes_moved", "fail",
+        f"encoded round-slice streams {phys}B vs {logical}B logical "
+        f"({ratio:.2f}x) — encodings are not shrinking the stream "
+        "measurably (<= 0.95x required)", data)
 
 
 def _audit_collectives(p: _Plan) -> CheckResult:
@@ -632,6 +729,8 @@ _CHECK_FNS: Dict[str, Callable[[_Plan], CheckResult]] = {
     "one_chunk_pass": _audit_one_chunk_pass,
     "o_slice_footprint": _audit_slice_footprint,
     "single_kernel_dispatch": _audit_kernel_dispatch,
+    "fused_single_dispatch": _audit_fused_dispatch,
+    "bytes_moved": _audit_bytes_moved,
     "one_collective_per_round": _audit_collectives,
     "dtype_discipline": _audit_dtype,
     "no_recompile_across_rounds": _audit_no_recompile,
@@ -827,12 +926,29 @@ def main(argv=None) -> int:
 
     for engine_name, mesh, parts in meshes:
         shards = _smoke_data(args.rows, parts, 128, args.rounds)
-        for name, q, emit in _smoke_plans(args.rows):
+        plans = _smoke_plans(args.rows)
+        for name, q, emit in plans:
             report = audit_plan(q, shards, rounds=args.rounds, emit=emit,
                                 mesh=mesh, checks=ALL_CHECKS)
             print(report.summary())
             if not report.ok:
                 failed = True
+        # encoded-source plan: certifies the in-kernel decode path —
+        # fused_single_dispatch must still see ONE pallas_call, and
+        # bytes_moved must see the physical stream shrink
+        from repro.data import encodings as ENCS
+        from repro.data.source import EncodedSource
+        np_shards = {k: np.asarray(v) for k, v in shards.items()}
+        esrc = EncodedSource.from_shards(np_shards, {
+            "discount": ENCS.dict_encoding_for(np_shards["discount"]),
+            "shipdate": ENCS.BitPackedEncoding(bits=16),
+            "rfls": ENCS.BitPackedEncoding(bits=2)})
+        bundle = plans[-1][1]
+        report = audit_plan(bundle, esrc, rounds=args.rounds, emit="kernel",
+                            mesh=mesh, checks=ALL_CHECKS)
+        print(report.summary())
+        if not report.ok:
+            failed = True
         # serving churn certificate (DESIGN.md §11)
         from repro.core.gla import SlotFamily
         from repro.data import tpch

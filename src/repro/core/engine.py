@@ -138,6 +138,10 @@ def _run_vmapped(gla: GLA, shards: dict, sched: jnp.ndarray, alive: jnp.ndarray,
     d_local = jnp.sum(shards["_mask"], axis=(1, 2))
     d_total = jnp.sum(d_local)
     w_pr, w_final = SC.round_weights(alive, R)
+    # fused dispatch blocks one [1, L] row per column — trailing dims fall
+    # back to the legacy kernels (resident shards are always plain/decoded)
+    fused_ok = SC.fused_available(gla) and all(
+        v.ndim == 3 for v in shards.values())
 
     if emit == "kernel" and (gla.kernel_num_groups is not None
                              or gla.members):
@@ -150,14 +154,27 @@ def _run_vmapped(gla: GLA, shards: dict, sched: jnp.ndarray, alive: jnp.ndarray,
             raise NotImplementedError("sync mode requires emit='chunk'")
         # snapshots off: no round states are consumed — one whole-shard
         # dispatch (same chunk-sequential association, R-fold fewer launches)
-        kernel_fn = (SC.bundle_kernel_rounds_states_batched if gla.members
-                     else SC.kernel_rounds_states_batched)
-        finals, round_states = kernel_fn(gla, shards, R if snapshots else 1)
+        if fused_ok:
+            # one fused selection→bucket→aggregate dispatch per round-slice,
+            # bitwise-identical to the scan path (DESIGN.md §12)
+            finals, round_states = SC.fused_rounds_states_batched(
+                gla, shards, R if snapshots else 1)
+        else:
+            kernel_fn = (SC.bundle_kernel_rounds_states_batched if gla.members
+                         else SC.kernel_rounds_states_batched)
+            finals, round_states = kernel_fn(gla, shards,
+                                             R if snapshots else 1)
     elif emit in ("chunk", "kernel"):
         if emit == "chunk":
             finals, prefixes = jax.vmap(
                 lambda c: SC.scan_prefix(gla, c, lanes))(shards)
-        else:  # per-shard fused-kernel dispatch (DESIGN.md §3)
+        elif fused_ok:
+            # fused per-shard dispatch: running accumulators live in the
+            # kernel's output refs, so the prefixes — and hence the scalar
+            # finals — are bitwise-identical to the scan path (DESIGN.md §12)
+            assert lanes == 1, "emit='kernel' runs single-lane"
+            finals, prefixes = SC.fused_prefix_states_batched(gla, shards)
+        else:  # legacy per-shard kernel dispatch (DESIGN.md §3)
             assert lanes == 1, "emit='kernel' runs single-lane"
             finals, prefixes = SC.kernel_prefix_states_batched(gla, shards)
         if snapshots:
@@ -261,14 +278,22 @@ def _resolve_rounds_schedule(gla: GLA, data, rounds: int,
                else data["_mask"].shape[:3])
     if emit == "kernel":
         if gla.members:
-            missing = [m.name for m in gla.members if m.kernel_cols is None]
-            if missing:
-                raise ValueError(
-                    f"bundle members {missing} do not publish kernel_cols — "
-                    "emit='kernel' batches every member into one dispatch "
-                    "and cannot mix in scan-only members")
-        elif gla.kernel_cols is None:
-            raise ValueError(f"GLA {gla.name!r} does not publish kernel_cols")
+            # one dispatch serves every member: either ALL publish the fused
+            # contract (fused_agg path) or ALL publish kernel_cols (legacy
+            # group_agg batching) — a mixed bundle has no single-kernel plan
+            if any(m.fused is None for m in gla.members):
+                missing = [m.name for m in gla.members
+                           if m.kernel_cols is None]
+                if missing:
+                    raise ValueError(
+                        f"bundle members {missing} do not publish kernel_cols "
+                        "or a fused contract — emit='kernel' batches every "
+                        "member into one dispatch and cannot mix in "
+                        "scan-only members")
+        elif gla.kernel_cols is None and gla.fused is None:
+            raise ValueError(
+                f"GLA {gla.name!r} publishes neither kernel_cols nor a "
+                "fused kernel contract")
     needs_uniform_rounds = emit == "round" or (
         emit == "kernel" and (gla.kernel_num_groups is not None
                               or bool(gla.members)))

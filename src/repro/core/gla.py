@@ -31,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import estimators as E
-from repro.core.uda import GLA, Chunk, Estimate
+from repro.core.uda import GLA, Chunk, Estimate, FusedSpec
 
 
 def _as_2d(vals: jnp.ndarray) -> jnp.ndarray:
@@ -195,9 +195,16 @@ def make_sum_gla(
         vals = _as_2d(func(chunk)).astype(dtype)              # [n, A]
         w = (cond(chunk) * chunk["_mask"]).astype(dtype)      # [n]
         m = chunk["_mask"].astype(dtype)
+        # multiply-then-reduce, NOT vals.T @ w: XLA:CPU fuses a matvec into
+        # the surrounding scan carry (GEMM accumulator), changing the
+        # reduction order between contexts.  The elementwise product + axis
+        # reduction is context-stable, so the fused Pallas kernel
+        # (kernels/fused_agg.py) reproduces these states bitwise —
+        # the scalar-kernel path is exact, not just statistically
+        # interchangeable (DESIGN.md §12, docs/KERNELS.md).
         return E.SumState(
-            sum=state.sum + vals.T @ w,
-            sumsq=state.sumsq + (vals * vals).T @ w,
+            sum=state.sum + (vals * w[:, None]).sum(axis=0),
+            sumsq=state.sumsq + ((vals * vals) * w[:, None]).sum(axis=0),
             scanned=state.scanned + jnp.sum(m),
             matched=state.matched + jnp.sum(w),
         )
@@ -228,10 +235,15 @@ def make_sum_gla(
         else:
             kernel_cols = None
 
+        # Fused in-kernel contract: any f32 SumState qualifies (A > 1 too —
+        # the fused kernel pads A to a multiple of 8 itself).
+        fused = (FusedSpec(func=func, cond=cond, group=None, num_aggs=A)
+                 if dtype == jnp.float32 else None)
+
         return GLA(
             init=zero_sum, accumulate=acc_sum, merge=merge, terminate=terminate,
             estimate=None if estimator == "none" else estimate,
-            merge_is_additive=True, kernel_cols=kernel_cols,
+            merge_is_additive=True, kernel_cols=kernel_cols, fused=fused,
             name=f"sum-{estimator}",
         )
 
@@ -360,16 +372,22 @@ def make_groupby_gla(
             def kernel_cols(chunk):
                 return func(chunk), cond(chunk), group(chunk)
             kernel_G = G
+            # ``group`` here is already the bucketed view when bucket_bits
+            # is set, so the kernel hash-buckets in-register too.
+            fused = FusedSpec(func=func, cond=cond, group=group, num_aggs=A,
+                              num_groups=G)
         else:
             kernel_cols = None
             kernel_G = None
+            fused = None
 
         return GLA(
             init=zero, accumulate=acc, merge=merge,
             terminate=lambda s: s.sum,
             estimate=None if estimator == "none" else estimate,
             merge_is_additive=True, kernel_cols=kernel_cols,
-            kernel_num_groups=kernel_G, name=f"groupby-{estimator}{suffix}",
+            kernel_num_groups=kernel_G, fused=fused,
+            name=f"groupby-{estimator}{suffix}",
         )
 
     if estimator == "multiple":
@@ -444,7 +462,11 @@ def make_join_groupby_gla(
         num_groups=num_groups, d_total=d_total, estimator=estimator,
         dtype=dtype, num_aggs=num_aggs,
     )
-    return inner.with_(name=f"join-{estimator}")
+    # no FusedSpec: the probe closures capture the replicated dimension
+    # tables, and Pallas kernel bodies reject captured array constants —
+    # joins stay on the legacy kernel_cols path, whose projection (and
+    # hence the gather) runs outside the kernel (docs/KERNELS.md).
+    return inner.with_(name=f"join-{estimator}", fused=None)
 
 
 # ---------------------------------------------------------------------------

@@ -27,13 +27,23 @@ Scan variants (selected by the engine's ``emit`` argument):
                          ``kernel_cols`` + ``kernel_num_groups`` — dense
                          [G, A] states follow the round emission discipline
                          (DESIGN.md §3).
+  ``fused_rounds_states`` / ``fused_prefix_states`` — the fused
+                         selection→bucket→aggregate kernel (DESIGN.md §12,
+                         kernels/fused_agg.py): predicate, hash-bucketing,
+                         in-kernel column decode and f32 accumulation in
+                         ONE carry-in dispatch per round-slice, bitwise-
+                         identical to the scan paths (scalar included).
+                         Preferred by both engines whenever the GLA
+                         publishes a ``FusedSpec`` (``gla.fused``); the
+                         kernel_* paths above remain for GLAs that only
+                         publish the legacy ``kernel_cols`` projection.
 
 The per-round-slice primitives those variants fold over all rounds —
 ``scan_round_step``, ``kernel_round_delta``, ``bundle_round_deltas``,
-``kernel_scalar_round_delta`` — are also jitted standalone by the
-incremental session driver (repro/core/session.py, DESIGN.md §7), which
-advances one round at a time so stopping rules can terminate the scan
-early.  One implementation, two execution disciplines.
+``kernel_scalar_round_delta``, ``fused_round_step`` — are also jitted
+standalone by the incremental session driver (repro/core/session.py,
+DESIGN.md §7), which advances one round at a time so stopping rules can
+terminate the scan early.  One implementation, two execution disciplines.
 
 ``round_weights`` centralizes partition-liveness accounting: the engine and
 the fault model (repro/dist/fault.py) express node failure as an ``alive``
@@ -252,11 +262,13 @@ def kernel_scalar_round_delta(gla: GLA, slice_cols: dict):
 
     One ``shard_chunk_partials`` dispatch over the slice; the within-slice
     prefix keeps the chunk-sequential association, so the delta is the
-    slice's chunk-ordered total.  Adding deltas round by round is
-    interchangeable — not bitwise-identical — with the whole-shard cumsum of
-    :func:`kernel_prefix_states` (the carry+total regrouping re-associates
-    float adds), exactly like the scalar kernel path is interchangeable with
-    the scan path.  Used by the incremental session driver only.
+    slice's chunk-ordered total.  Adding deltas round by round re-associates
+    float adds against the whole-shard cumsum of
+    :func:`kernel_prefix_states`, so this legacy path is interchangeable —
+    not bitwise-identical — with the scan path.  Sessions prefer
+    :func:`fused_round_step` (carry-in accumulation, bitwise-identical to
+    the scan path) whenever the GLA publishes ``gla.fused``; this primitive
+    remains for kernel_cols-only GLAs.
     """
     from repro.core import estimators as E
     from repro.kernels import ops
@@ -423,10 +435,12 @@ def bundle_kernel_rounds_states(gla: GLA, cols: dict, rounds: int):
     the chunk length L), members occupy disjoint kernel blocks, so member
     m's table rows receive exact-zero partials from every other member's
     blocks — group-by members' states stay bitwise-identical to their solo
-    :func:`kernel_rounds_states` dispatch (scalar members fold through the
-    one-hot contraction instead of the scan's matvec, so they are
-    interchangeable-not-bitwise with the scan path, like the solo scalar
-    kernel).  Returns (tuple of member finals, tuple of member [R] views)
+    :func:`kernel_rounds_states` dispatch, while scalar members fold through
+    the one-hot contraction and are interchangeable-not-bitwise with the
+    scan path.  Engines prefer :func:`fused_rounds_states` (bitwise for
+    every member, scalar included) whenever all members publish
+    ``gla.fused``; this legacy path remains for kernel_cols-only bundles.
+    Returns (tuple of member finals, tuple of member [R] views)
     matching the bundle's tuple-state layout.
     """
     members = gla.members
@@ -455,9 +469,94 @@ def bundle_kernel_rounds_states_batched(gla: GLA, shards: dict, rounds: int):
         lambda c: bundle_kernel_rounds_states(gla, c, rounds), shards)
 
 
+# ---------------------------------------------------------------------------
+# fused selection→bucket→aggregate kernel path (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+# Thin drivers over repro.kernels.fused_agg: ONE carry-in Pallas dispatch per
+# round-slice fusing predicate evaluation, hash-bucket group ids, in-kernel
+# column decode (repro.data.encodings) and f32 accumulation.  Because the
+# running state enters the kernel as an input ref, round-boundary states keep
+# the exact scan-carry association — the fused paths are bitwise-identical to
+# the scan paths for scalar, group-by and bundle GLAs alike
+# (tests/test_fused_kernel.py, docs/KERNELS.md).
+
+def fused_available(gla: GLA, columns=None) -> bool:
+    """True when ``gla`` (and every bundle member) publishes ``gla.fused``
+    and every source column is kernel-decodable (no trailing dims)."""
+    from repro.kernels import fused_agg
+
+    return fused_agg.fused_available(gla, columns)
+
+
+def fused_round_step(gla: GLA, state, slice_cols: dict, encodings=()):
+    """Carry-in fused step for ONE round-slice: (state, slice) -> state.
+
+    The per-round-slice primitive behind the ``kernel_fused`` session path.
+    Carry-style rather than delta-style (no first/add split): the incoming
+    state rides into the kernel as an input ref and every chunk accumulates
+    on top, so starting from ``gla.init()`` reproduces the scan-carry
+    association exactly from round 0.  ``encodings`` is the source's static
+    (name, Encoding) tuple; encoded columns arrive physical and are decoded
+    inside the kernel body.
+    """
+    from repro.kernels import fused_agg
+
+    return fused_agg.fused_round_step(
+        gla, state, slice_cols, encodings=encodings)
+
+
+def fused_rounds_states(gla: GLA, cols: dict, rounds: int, encodings=()):
+    """Fused analogue of :func:`kernel_rounds_states` /
+    :func:`bundle_kernel_rounds_states`: one fused dispatch per round-slice
+    with the carry threaded through, round-boundary views stacked [R, ...].
+    Bitwise-identical to the :func:`scan_rounds` views at lanes == 1 for
+    scalar, group-by and bundle states alike.  Requires C % rounds == 0.
+    """
+    C = cols["_mask"].shape[0]
+    assert C % rounds == 0, (
+        f"fused kernel path needs C % rounds == 0, got {C} % {rounds}")
+    per = C // rounds
+    st = gla.init()
+    views = []
+    for r in range(rounds):
+        st = fused_round_step(
+            gla, st,
+            {k: v[r * per:(r + 1) * per] for k, v in cols.items()},
+            encodings)
+        views.append(st)
+    return st, jax.tree.map(lambda *xs: jnp.stack(xs), *views)
+
+
+def fused_rounds_states_batched(gla: GLA, shards: dict, rounds: int,
+                                encodings=()):
+    """Vmapped-path wrapper for :func:`fused_rounds_states`: unrolled over
+    partitions (same rationale as :func:`_unroll_partitions`)."""
+    return _unroll_partitions(
+        lambda c: fused_rounds_states(gla, c, rounds, encodings), shards)
+
+
+def fused_prefix_states(gla: GLA, cols: dict, encodings=()):
+    """Fused analogue of :func:`kernel_prefix_states` for solo scalar GLAs:
+    ONE fused dispatch per shard emitting the running per-chunk prefix rows
+    alongside the final accumulators.  The running state lives in the
+    kernel's output refs, so prefixes keep the exact chunk-sequential
+    association — bitwise-identical to :func:`scan_prefix` at lanes == 1."""
+    from repro.kernels import fused_agg
+
+    return fused_agg.fused_prefix_states(gla, cols, encodings=encodings)
+
+
+def fused_prefix_states_batched(gla: GLA, shards: dict, encodings=()):
+    """Vmapped-path wrapper: one fused prefix dispatch per partition."""
+    return _unroll_partitions(
+        lambda c: fused_prefix_states(gla, c, encodings), shards)
+
+
 # The session drivers' path-name -> per-round-slice primitive table, kept
 # here next to the primitives so the vmapped and sharded steps cannot
-# diverge (repro/core/session.py, repro/dist/shard_engine.py).
+# diverge (repro/core/session.py, repro/dist/shard_engine.py).  These are
+# delta-style (first-round states ARE the first deltas); the carry-style
+# "kernel_fused" path dispatches :func:`fused_round_step` directly instead.
 ROUND_DELTA_FNS = {
     "kernel_scalar": kernel_scalar_round_delta,
     "kernel_group": kernel_round_delta,

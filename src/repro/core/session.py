@@ -18,15 +18,15 @@ Execution disciplines (DESIGN.md §7):
     fused session).
   * *incremental* — a stopping rule is attached, or the caller advances the
     session manually with :meth:`Session.step`.  Each step jits ONE
-    round-slice (``scan.scan_round_step`` / ``scan.kernel_round_delta`` /
-    ``scan.bundle_round_deltas`` — the same per-round-slice primitives the
-    fused paths fold over all rounds), then merges that round's states
-    across partitions and produces the round's :class:`Estimate`.  The
-    chunk-sequential accumulation order is identical to the fused program,
-    so round-boundary states and finals are bitwise-identical across
-    disciplines on the scan and group/bundle kernel paths
-    (tests/test_session.py); the scalar-kernel path is interchangeable, not
-    bitwise, exactly as it already is vs. the scan path.
+    round-slice (``scan.scan_round_step`` / ``scan.fused_round_step`` /
+    the legacy ``scan.ROUND_DELTA_FNS`` primitives — the same
+    per-round-slice primitives the fused paths fold over all rounds), then
+    merges that round's states across partitions and produces the round's
+    :class:`Estimate`.  The chunk-sequential accumulation order is
+    identical to the fused program, so round-boundary states and finals
+    are bitwise-identical across disciplines on every path — scan,
+    ``kernel_fused`` (scalar included), and the legacy group/bundle
+    kernels (tests/test_session.py, tests/test_fused_kernel.py).
 
 Incremental stepping works on **both** engines — the vmapped path here and
 the ``shard_map`` path (``repro.dist.shard_engine.session_step_sharded``)
@@ -275,23 +275,44 @@ def _map_member_ests(fn, est):
 
 @functools.partial(
     jax.jit, static_argnames=("gla", "path", "lanes", "confidence",
-                              "all_alive", "first")
+                              "all_alive", "first", "encodings")
 )
 def _step_vmapped(gla: GLA, states, slice_shards: dict, w_r: jnp.ndarray,
                   d_local: jnp.ndarray, d_total: jnp.ndarray, *, path: str,
                   lanes: int, confidence: float, all_alive: bool,
-                  first: bool):
+                  first: bool, encodings: tuple = ()):
     """Advance one round-slice on the vmapped engine.
 
     Returns (new per-partition states, per-partition round views, merged
     round state, round Estimate-or-None).  ``first`` matters only on the
-    kernel paths: the running sum starts from the first delta (not
-    zero + delta), matching ``scan._fold_running_sum`` bit-for-bit.
+    legacy kernel paths: the running sum starts from the first delta (not
+    zero + delta), matching ``scan._fold_running_sum`` bit-for-bit; the
+    carry-style ``"kernel_fused"`` path needs no first split.
+    ``encodings`` is the source's static (name, Encoding) tuple: the fused
+    path decodes inside the kernel, every other path decodes the physical
+    slice generically before accumulating (same ``decode_block`` math, so
+    results stay bitwise-identical to the plain source).
     """
+    if encodings and path != "kernel_fused":
+        from repro.data import encodings as ENC  # local: core stays data-free
+        slice_shards = ENC.decode_cols(slice_shards, encodings)
     if path == "scan":
         new_states, views = jax.vmap(
             lambda st, c: SC.scan_round_step(gla, st, c, lanes)
         )(states, slice_shards)
+    elif path == "kernel_fused":
+        P = slice_shards["_mask"].shape[0]
+        # carry-style: the per-partition state rides into the kernel; no
+        # first/add split.  Unrolled over partitions for the same reason
+        # as scan._unroll_partitions: Pallas calls stay out of vmap/scan.
+        outs = [
+            SC.fused_round_step(
+                gla, jax.tree.map(lambda x, p=p: x[p], states),
+                jax.tree.map(lambda x, p=p: x[p], slice_shards), encodings)
+            for p in range(P)
+        ]
+        new_states = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        views = new_states
     else:
         delta_fn = SC.ROUND_DELTA_FNS[path]
         P = slice_shards["_mask"].shape[0]
@@ -488,11 +509,22 @@ class Session:
         if emit == "kernel":
             if lanes != 1:
                 raise ValueError("emit='kernel' runs single-lane")
-            self._path = ("kernel_bundle" if gla.members
-                          else "kernel_group" if gla.kernel_num_groups
-                          is not None else "kernel_scalar")
+            # the fused kernel (DESIGN.md §12) subsumes the legacy kernel
+            # paths whenever the GLA publishes a FusedSpec and every column
+            # is kernel-shaped; it is carry-style and bitwise-identical to
+            # the scan path, scalar GLAs included.
+            if SC.fused_available(gla, self._source.spec.columns):
+                self._path = "kernel_fused"
+            else:
+                self._path = ("kernel_bundle" if gla.members
+                              else "kernel_group" if gla.kernel_num_groups
+                              is not None else "kernel_scalar")
         else:
             self._path = "scan"
+        # encoded sources (data/encodings.py) ship physical columns; the
+        # fused path decodes them in-kernel, every other path decodes the
+        # slice before accumulating (_step_vmapped / session_step_sharded).
+        self._encodings = tuple(getattr(self._source, "encodings", ()) or ())
 
         # d_local/d_total, merge weights and the per-chunk scanned-tuple
         # prefix are only consumed by the incremental discipline; computed
@@ -681,7 +713,7 @@ class Session:
         r = self._steps
         lo, hi = int(self._sched[0, r]), int(self._sched[0, r + 1])
         slice_shards = self._fetch_slice(r, lo, hi)
-        first = self._path != "scan" and r == 0
+        first = self._path not in ("scan", "kernel_fused") and r == 0
         states = self._states
         if states is None:
             states = self._init_states()
@@ -699,14 +731,15 @@ class Session:
                 self._gla, states, slice_shards, w_r, self._d_local,
                 self._d_total, path=self._path, lanes=self._lanes,
                 confidence=self._confidence, all_alive=all_alive,
-                first=first)
+                first=first, encodings=self._encodings)
         else:
             from repro.dist import shard_engine
             new_states, views, merged, est = shard_engine.session_step_sharded(
                 self._gla, states, slice_shards, w_r, self._d_local,
                 self._d_total, mesh=self._mesh, axis_name=self._axis_name,
                 path=self._path, lanes=self._lanes,
-                confidence=self._confidence, first=first)
+                confidence=self._confidence, first=first,
+                encodings=self._encodings)
         if self._policy is not None:
             est = self._apply_policy_est(est, r)
         self._states, self._views = new_states, views
@@ -863,7 +896,8 @@ class Session:
         arrays — deserialization works for streaming sources too."""
         self._ensure_stats()
         per0 = max(1, int(self._sched[0, 1] - self._sched[0, 0]))
-        slice_like = self._source.spec.slice_like(per0)
+        # physical slice shapes: encoded sources ship packed columns
+        slice_like = self._source.step_slice_like(per0)
         states_like = jax.eval_shape(self._init_states)
         st, views, merged, est = _step_vmapped.eval_shape(
             self._gla, states_like, slice_like,
@@ -872,7 +906,8 @@ class Session:
             jax.ShapeDtypeStruct(self._d_total.shape, self._d_total.dtype),
             path=self._path, lanes=self._lanes,
             confidence=self._confidence, all_alive=self._all_alive,
-            first=self._path != "scan")
+            first=self._path not in ("scan", "kernel_fused"),
+            encodings=self._encodings)
         hist = steps if self._snapshots else 0  # no history retained
         return {"states": st, "views": views,
                 "merged": (merged,) * hist, "ests": (est,) * hist}

@@ -47,6 +47,33 @@ class Estimate(NamedTuple):
     info: Any = None
 
 
+class FusedSpec(NamedTuple):
+    """Contract for the fused selection→bucket→aggregate Pallas kernel
+    (``repro.kernels.fused_agg``, DESIGN.md §12, docs/KERNELS.md).
+
+    Unlike ``kernel_cols`` — which projects (vals, weight[, gids]) *outside*
+    the kernel — these closures run over the raw column dict *inside* the
+    kernel body, after any in-kernel column decode, so predicate
+    evaluation, hash-bucketing and the f32 accumulation share one VMEM
+    residency per round-slice:
+
+      func:  chunk -> [n] or [n, num_aggs] values (any float dtype; the
+             kernel accumulates in f32)
+      cond:  chunk -> [n] 0/1 predicate (bare — the kernel fuses ``_mask``)
+      group: chunk -> [n] int32 dense group ids in [0, num_groups), already
+             hash-bucketed (``gla.hash_bucket``); None selects the scalar
+             SumState contract
+      num_aggs:   A (padded to a multiple of 8 inside the kernel)
+      num_groups: G (padded to a multiple of 128), or None for scalar
+    """
+
+    func: Callable[[Chunk], Any]
+    cond: Callable[[Chunk], Any]
+    group: Optional[Callable[[Chunk], Any]]
+    num_aggs: int
+    num_groups: Optional[int] = None
+
+
 def _identity(state: State, ctx: Optional[dict] = None) -> State:
     """Default EstimatorTerminate: the state is its own partial aggregate.
 
@@ -117,6 +144,12 @@ class GLA:
     merge_is_additive: bool = False
     kernel_cols: Optional[Callable[[Chunk], Any]] = None
     kernel_num_groups: Optional[int] = None
+    # fused-kernel contract (FusedSpec): published alongside kernel_cols by
+    # the gla.py constructors when the state is a f32 SumState (scalar or
+    # dense-group).  When set, ``emit="kernel"`` plans run the one-dispatch
+    # fused Pallas kernel (kernels/fused_agg.py) instead of the legacy
+    # project-then-aggregate kernels, and encoded sources decode in-kernel.
+    fused: Optional[FusedSpec] = None
     members: tuple = ()
     name: str = "gla"
 

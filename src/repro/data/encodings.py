@@ -1,0 +1,159 @@
+"""Compressed column encodings decoded *inside* the scan kernel.
+
+Streamed q6-class scans are bandwidth-bound (BENCH_streaming): the bytes
+that cross the host→device boundary per round-slice are the cost.  These
+encodings shrink those bytes while keeping the *decoded* values exactly
+equal to the plain column, so every aggregate stays bitwise-identical to
+the plain-source run (DESIGN.md §12):
+
+``DictEncoding``
+    Low-cardinality columns (TPC-H ``discount``: 11 values, ``quantity``:
+    50, ``tax``: 9) stored as small-int codes into a per-column value
+    table.  Decode is a gather — ``values[code]`` — which reproduces the
+    original float bit pattern exactly (the table holds the original
+    values; no arithmetic is performed).  f32 → int8 is a 4x byte cut.
+
+``BitPackedEncoding``
+    Bounded non-negative ints (``shipdate`` < 2526 fits 12 bits, ``rfls``
+    < 4 fits 2) packed little-endian into int32 words along the chunk
+    axis.  Decode is shift-and-mask — exact integer ops, bit-for-bit.
+    L must be divisible by the per-word lane count (32 // bits); chunk
+    lengths here are powers of two, so any bits in {1,2,4,8,16} divides.
+
+Both decoders are pure ``jnp`` expressions on the trailing axis, so the
+same helper runs in three contexts with identical results: inside the
+fused Pallas kernel body (``repro.kernels.fused_agg``), in the generic
+scan/legacy-kernel fallback (``decode_cols``), and under ``eval_shape``
+for checkpoint payload templates.  Encodings are hashable NamedTuples —
+they ride through jit static args unchanged.
+
+Encode (host, NumPy) lives here too so ``source.EncodedSource`` and the
+benchmarks share one implementation.  ``encode_array`` → physical array,
+``decode_block`` → logical array; round-trip is asserted exact in
+tests/test_encodings.py (hypothesis, both encodings).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class DictEncoding(NamedTuple):
+    """Dictionary code column: physical small-int codes, logical = values[code].
+
+    ``values`` is the sorted tuple of distinct logical values (Python
+    floats/ints — hashable, so the encoding is a valid jit static).
+    ``code_dtype`` is the physical dtype name; ``logical_dtype`` the
+    decoded dtype name (must match the plain column's dtype).
+    """
+
+    values: Tuple[float, ...]
+    code_dtype: str = "int8"
+    logical_dtype: str = "float32"
+
+    @property
+    def lanes(self) -> int:
+        return 1  # one code per logical element
+
+    def physical_dtype(self) -> str:
+        return self.code_dtype
+
+    def table(self):
+        return jnp.asarray(np.asarray(self.values, dtype=self.logical_dtype))
+
+
+class BitPackedEncoding(NamedTuple):
+    """``bits``-wide non-negative ints packed into int32 words (little-endian
+    within the word) along the trailing axis.  lanes = 32 // bits values per
+    word; the logical trailing length L must be a multiple of lanes.
+    """
+
+    bits: int
+    logical_dtype: str = "int32"
+
+    @property
+    def lanes(self) -> int:
+        return 32 // self.bits
+
+    def physical_dtype(self) -> str:
+        return "int32"
+
+
+Encoding = DictEncoding | BitPackedEncoding
+
+
+# ---------------------------------------------------------------------------
+# host-side encode (NumPy)
+# ---------------------------------------------------------------------------
+
+def dict_encoding_for(arr) -> DictEncoding:
+    """Build a DictEncoding from the distinct values of ``arr`` (host)."""
+    a = np.asarray(arr)
+    values = np.unique(a)
+    if values.size > np.iinfo(np.int16).max:
+        raise ValueError(f"dictionary too large: {values.size} distinct values")
+    code_dtype = "int8" if values.size <= np.iinfo(np.int8).max + 1 else "int16"
+    return DictEncoding(values=tuple(values.tolist()), code_dtype=code_dtype,
+                        logical_dtype=a.dtype.name)
+
+
+def encode_array(arr, enc: Encoding):
+    """Host encode: logical array -> physical array (last axis packed for
+    bit-packing).  Raises if the data does not fit the encoding exactly."""
+    a = np.asarray(arr)
+    if isinstance(enc, DictEncoding):
+        table = np.asarray(enc.values, dtype=enc.logical_dtype)
+        codes = np.searchsorted(table, a)
+        codes = np.clip(codes, 0, table.size - 1)
+        if not np.array_equal(table[codes], a):
+            raise ValueError("dict encoding: values outside the dictionary")
+        return codes.astype(enc.code_dtype)
+    bits, lanes = enc.bits, enc.lanes
+    if a.dtype.kind not in "iu":
+        raise ValueError(f"bit-packing needs an integer column, got {a.dtype}")
+    if a.min() < 0 or a.max() >= (1 << bits):
+        raise ValueError(f"bit-packing {bits} bits: values outside [0, 2^{bits})")
+    if a.shape[-1] % lanes:
+        raise ValueError(
+            f"bit-packing {bits} bits: trailing length {a.shape[-1]} not a "
+            f"multiple of {lanes} lanes")
+    words = a.astype(np.int64).reshape(*a.shape[:-1], a.shape[-1] // lanes, lanes)
+    shifts = (bits * np.arange(lanes)).astype(np.int64)
+    return (words << shifts).sum(axis=-1).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# device-side decode (pure jnp: valid in jit, eval_shape, and Pallas bodies)
+# ---------------------------------------------------------------------------
+
+def decode_block(x, enc: Encoding | None):
+    """Decode one physical block back to logical values on the trailing axis.
+
+    Exactness contract: for DictEncoding the gather returns the original
+    bit patterns; for BitPackedEncoding shift-and-mask recovers the exact
+    ints.  Works on any leading shape; pure jnp so it traces identically
+    inside Pallas kernel bodies and plain jitted programs.
+    """
+    if enc is None:
+        return x
+    if isinstance(enc, DictEncoding):
+        return jnp.take(enc.table(), x.astype(jnp.int32), axis=0)
+    bits, lanes = enc.bits, enc.lanes
+    shifts = bits * jnp.arange(lanes, dtype=jnp.int32)
+    vals = (x[..., None] >> shifts) & ((1 << bits) - 1)
+    return vals.reshape(*x.shape[:-1], x.shape[-1] * lanes).astype(
+        enc.logical_dtype)
+
+
+def decode_cols(cols: dict, encodings) -> dict:
+    """Decode every encoded column of a slice dict; plain columns pass
+    through untouched.  ``encodings`` is a tuple of (name, Encoding)."""
+    enc_map = dict(encodings)
+    return {k: decode_block(v, enc_map.get(k)) for k, v in cols.items()}
+
+
+def normalize_encodings(encodings) -> tuple:
+    """Canonical hashable form: name-sorted tuple of (name, Encoding)."""
+    return tuple(sorted(dict(encodings).items()))

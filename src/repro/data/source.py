@@ -88,6 +88,10 @@ class ColumnSpec(NamedTuple):
     # registered — i.e. whenever jax is importable)
     dtype: str
     trailing: Tuple[int, ...] = ()  # dims after [P, C, L] (usually none)
+    # logical elements per stored element: 1 for plain columns; the
+    # per-word lane count for bit-packed physical columns, so a stored
+    # chunk is [L // lanes] elements wide (DESIGN.md §12)
+    lanes: int = 1
 
 
 class ChunkSpec(NamedTuple):
@@ -106,7 +110,8 @@ class ChunkSpec(NamedTuple):
 
         return {
             c.name: jax.ShapeDtypeStruct(
-                (self.P, width, self.L, *c.trailing), np.dtype(c.dtype))
+                (self.P, width, self.L // c.lanes, *c.trailing),
+                np.dtype(c.dtype))
             for c in self.columns
         }
 
@@ -124,15 +129,53 @@ class ChunkSource:
     is True when the whole dataset already lives on device (the in-memory
     compatibility path) — the engine then keeps its classic fused
     whole-scan programs; streaming sources run the incremental discipline.
+
+    ``spec`` is always the *logical* shape contract — what the query
+    closures see after any decode.  ``encodings`` (name-sorted tuple of
+    ``(column, repro.data.encodings.Encoding)``) declares which columns
+    :meth:`slice_cols` returns in *physical* (encoded) form; consumers
+    decode via ``encodings.decode_cols`` or inside the fused kernel
+    (DESIGN.md §12).  ``_mask`` is never encoded.
     """
 
     spec: ChunkSpec
     resident: bool = False
+    encodings: tuple = ()
 
     def slice_cols(self, lo: int, hi: int) -> Dict[str, np.ndarray]:
         """Columns of chunk range [lo, hi): dict of [P, hi-lo, L] arrays
-        (host ndarrays for streaming sources), including ``_mask``."""
+        (host ndarrays for streaming sources), including ``_mask``.
+        Columns named in ``encodings`` come back physical (encoded)."""
         raise NotImplementedError
+
+    # -- physical layout (what actually crosses host -> device) -------------
+
+    def physical_columns(self) -> Tuple[ColumnSpec, ...]:
+        """Column table of the bytes :meth:`slice_cols` actually returns:
+        the logical table with encoded columns swapped to their stored
+        dtype and per-element lane count.  Plain sources return
+        ``spec.columns`` unchanged."""
+        if not self.encodings:
+            return self.spec.columns
+        enc = dict(self.encodings)
+        out = []
+        for c in self.spec.columns:
+            e = enc.get(c.name)
+            if e is None:
+                out.append(c)
+            else:
+                out.append(ColumnSpec(c.name, e.physical_dtype(), c.trailing,
+                                      e.lanes))
+        return tuple(out)
+
+    def step_slice_like(self, width: int):
+        """ShapeDtypeStruct skeleton of one *physical* [P, width, ·] slice —
+        the operand shapes of the incremental step program (and of
+        ``Session._payload_like``'s eval_shape), honoring per-column
+        encodings.  Equal to ``spec.slice_like(width)`` for plain sources."""
+        phys = ChunkSpec(self.spec.P, self.spec.C, self.spec.L,
+                         self.physical_columns())
+        return phys.slice_like(width)
 
     # -- tuple-count accounting (progress / d_local without residency) ------
 
@@ -174,13 +217,26 @@ class ChunkSource:
                 {int(i) for i in np.linspace(0, spec.C - 1, n_samp)})
             stride = max(1, spec.L // _SAMPLE_ELEMS)
             for c in sample_chunks:
-                sl = self.slice_cols(c, c + 1)
+                sl = self._fingerprint_slice(c, c + 1)
                 for name in sorted(sl):
                     v = np.asarray(sl[name])[:, 0, ::stride]
                     h.update(name.encode())
                     h.update(np.ascontiguousarray(v).tobytes())
             self._fingerprint = h.hexdigest()
         return self._fingerprint
+
+    def _fingerprint_slice(self, lo: int, hi: int):
+        """Fingerprint sampling reads *logical* values: encoded columns are
+        decoded first, so an encoded copy of a dataset fingerprints equal
+        to the plain original (checkpoints cross the encoding boundary,
+        DESIGN.md §12)."""
+        sl = self.slice_cols(lo, hi)
+        if self.encodings:
+            from repro.data import encodings as _enc
+
+            sl = {k: np.asarray(v)
+                  for k, v in _enc.decode_cols(sl, self.encodings).items()}
+        return sl
 
 
 def _spec_from_arrays(arrays: Dict[str, np.ndarray]) -> ChunkSpec:
@@ -271,6 +327,137 @@ class NpyMmapSource(ChunkSource):
                 hi = min(C, lo + step)
                 out[:, lo:hi] = mask[:, lo:hi].sum(axis=2,
                                                    dtype=np.float64)
+            self._mask_sums = out
+        return self._mask_sums
+
+
+class EncodedSource(ChunkSource):
+    """Columnar source storing dictionary-coded / bit-packed *physical*
+    columns (repro/data/encodings.py) while presenting the plain *logical*
+    ``spec`` — streamed bytes shrink with the data, results do not change
+    (the decode is exact, so finals are bitwise-equal to the plain source;
+    DESIGN.md §12).
+
+    Two constructions: :meth:`from_shards` encodes a resident [P, C, L]
+    dict on the host (in-memory physical arrays), or :meth:`save` +
+    ``EncodedSource(directory)`` for the mmap-backed on-disk layout
+    (``<dir>/<column>.npy`` physical arrays + ``encodings.json``).
+
+    ``slice_cols`` returns encoded columns *physical* — the incremental
+    session threads ``self.encodings`` into the step program, where the
+    fused kernel (or the generic ``decode_cols`` fallback) decodes them
+    in-register.  The fingerprint decodes before sampling, so it equals
+    the plain dataset's fingerprint: a session paused over plain data
+    resumes over an encoded copy of it and vice versa.  Always
+    ``resident=False``: encoded data runs the incremental discipline.
+    """
+
+    def __init__(self, directory):
+        import json
+
+        from repro.data import encodings as _enc
+
+        self.directory = Path(directory)
+        meta = json.loads((self.directory / "encodings.json").read_text())
+        encs = {}
+        for name, d in meta.items():
+            if d["kind"] == "dict":
+                encs[name] = _enc.DictEncoding(
+                    values=tuple(d["values"]), code_dtype=d["code_dtype"],
+                    logical_dtype=d["logical_dtype"])
+            else:
+                encs[name] = _enc.BitPackedEncoding(
+                    bits=int(d["bits"]), logical_dtype=d["logical_dtype"])
+        phys = {p.stem: np.load(p, mmap_mode="r")
+                for p in sorted(self.directory.glob("*.npy"))}
+        self._init_from(phys, _enc.normalize_encodings(encs))
+
+    def _init_from(self, phys, encodings):
+        if "_mask" not in phys:
+            raise ValueError("EncodedSource needs a plain '_mask' column")
+        self._phys = phys
+        self.encodings = encodings
+        enc = dict(encodings)
+        if "_mask" in enc:
+            raise ValueError("'_mask' must never be encoded")
+        P, C, L = phys["_mask"].shape[:3]
+        cols = []
+        for name in sorted(phys):
+            e = enc.get(name)
+            v = phys[name]
+            if e is None:
+                cols.append(ColumnSpec(name, np.dtype(v.dtype).name,
+                                       tuple(v.shape[3:])))
+            else:
+                if v.shape[2] * e.lanes != L:
+                    raise ValueError(
+                        f"column {name!r}: physical chunk length "
+                        f"{v.shape[2]} x {e.lanes} lanes != L={L}")
+                cols.append(ColumnSpec(name, e.logical_dtype,
+                                       tuple(v.shape[3:])))
+        self.spec = ChunkSpec(int(P), int(C), int(L), tuple(cols))
+
+    @classmethod
+    def from_shards(cls, shards: Dict[str, "np.ndarray"], encodings):
+        """Encode a resident [P, C, L] shards dict on the host."""
+        from repro.data import encodings as _enc
+
+        encodings = _enc.normalize_encodings(encodings)
+        enc = dict(encodings)
+        phys = {}
+        for name, v in shards.items():
+            a = np.asarray(v)
+            e = enc.get(name)
+            phys[name] = a if e is None else _enc.encode_array(a, e)
+        self = cls.__new__(cls)
+        self.directory = None
+        self._init_from(phys, encodings)
+        return self
+
+    @staticmethod
+    def save(shards: Dict[str, "np.ndarray"], directory, encodings) -> Path:
+        """Write the physical column layout + ``encodings.json``."""
+        import json
+
+        from repro.data import encodings as _enc
+
+        encodings = _enc.normalize_encodings(encodings)
+        enc = dict(encodings)
+        directory = Path(directory)
+        directory.mkdir(parents=True, exist_ok=True)
+        meta = {}
+        for name, v in shards.items():
+            a = np.asarray(v)
+            e = enc.get(name)
+            np.save(directory / f"{name}.npy",
+                    a if e is None else _enc.encode_array(a, e))
+            if isinstance(e, _enc.DictEncoding):
+                meta[name] = {"kind": "dict", "values": list(e.values),
+                              "code_dtype": e.code_dtype,
+                              "logical_dtype": e.logical_dtype}
+            elif e is not None:
+                meta[name] = {"kind": "bitpack", "bits": e.bits,
+                              "logical_dtype": e.logical_dtype}
+        (directory / "encodings.json").write_text(json.dumps(meta, indent=1))
+        return directory
+
+    def slice_cols(self, lo: int, hi: int):
+        # physical bytes only: encoded columns ship as codes/words and are
+        # decoded on device (in the fused kernel when published)
+        return {k: np.ascontiguousarray(v[:, lo:hi])
+                for k, v in self._phys.items()}
+
+    def mask_chunk_sums(self) -> np.ndarray:
+        # mask is stored plain; sum it alone (same streaming discipline as
+        # NpyMmapSource — never materialize every column for _mask)
+        if getattr(self, "_mask_sums", None) is None:
+            mask = self._phys["_mask"]
+            C = self.spec.C
+            out = np.zeros((self.spec.P, C), np.float64)
+            step = max(1, _SAMPLE_CHUNKS * 64)
+            for lo in range(0, C, step):
+                hi = min(C, lo + step)
+                out[:, lo:hi] = mask[:, lo:hi].sum(axis=2, dtype=np.float64)
             self._mask_sums = out
         return self._mask_sums
 
@@ -481,6 +668,9 @@ class RepartitionedSource(ChunkSource):
         self._factor = k
         self._is_merge = P_new <= P
         self.spec = ChunkSpec(P_new, C_new, L, inner.spec.columns)
+        # physical layout is a property of the data, not the partitioning:
+        # the view serves the inner source's encoded bytes unchanged
+        self.encodings = inner.encodings
 
     def _index_maps(self, lo: int, hi: int):
         """Old (partition, chunk-within-block) index grids for new chunks

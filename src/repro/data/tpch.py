@@ -142,10 +142,14 @@ def _exact_batches(cols, batch_rows: int):
     from repro.data import source as _source  # local: optional coupling
 
     if isinstance(cols, _source.ChunkSource):
+        from repro.data import encodings as _encodings
+
         P, C, L = cols.spec.P, cols.spec.C, cols.spec.L
         step = max(1, batch_rows // max(1, P * L))
         for lo in range(0, C, step):
             sl = cols.slice_cols(lo, min(C, lo + step))
+            if cols.encodings:  # physical codes/words -> logical values
+                sl = _encodings.decode_cols(sl, cols.encodings)
             chunk = {}
             for k, v in sl.items():
                 a = np.asarray(v)  # one host materialization per column

@@ -94,6 +94,10 @@ def _run_sharded_jit(gla: GLA, shards: dict, sched: jnp.ndarray,
                      sync_cost_model: bool):
     P = shards["_mask"].shape[0]
     R = sched.shape[1] - 1
+    # fused dispatch blocks one [1, L] row per column — trailing dims fall
+    # back to the legacy kernels (resident shards are always plain/decoded)
+    fused_ok = SC.fused_available(gla) and all(
+        v.ndim == 3 for v in shards.values())
 
     def worker(cols, sched_p, alive_p):
         cols = jax.tree.map(lambda x: x[0], cols)      # [1, C, L] -> [C, L]
@@ -122,7 +126,18 @@ def _run_sharded_jit(gla: GLA, shards: dict, sched: jnp.ndarray,
             final_view = last
         elif emit == "kernel":
             assert lanes == 1, "emit='kernel' runs single-lane"
-            if gla.members:
+            if fused_ok and (gla.members or gla.kernel_num_groups is not None):
+                # ONE fused selection→bucket→aggregate dispatch per
+                # round-slice covers every member, bitwise-identical to the
+                # scan path (DESIGN.md §12).
+                final_view, round_states = SC.fused_rounds_states(
+                    gla, cols, R if snapshots else 1)
+                prefixes = None
+            elif fused_ok:
+                # fused per-shard dispatch with in-kernel running prefixes —
+                # bitwise-identical to the scan path, scalar contract too.
+                final_view, prefixes = SC.fused_prefix_states(gla, cols)
+            elif gla.members:
                 # bundled kernel dispatch: ONE group_agg launch per
                 # round-slice covers every member (DESIGN.md §6).
                 final_view, round_states = SC.bundle_kernel_rounds_states(
@@ -189,27 +204,37 @@ def _run_sharded_jit(gla: GLA, shards: dict, sched: jnp.ndarray,
 
 @functools.partial(
     jax.jit, static_argnames=("gla", "mesh", "axis_name", "path", "lanes",
-                              "confidence", "first"),
+                              "confidence", "first", "encodings"),
 )
 def session_step_sharded(gla: GLA, states, slice_shards: dict,
                          w_r: jnp.ndarray, d_local: jnp.ndarray,
                          d_total: jnp.ndarray, *, mesh, axis_name: str,
                          path: str, lanes: int, confidence: float,
-                         first: bool):
+                         first: bool, encodings: tuple = ()):
     """Advance one round-slice with partitions on ``axis_name``.
 
     Same contract as ``session._step_vmapped``: returns (new per-partition
     states, per-partition round views, merged round state, round
-    Estimate-or-None).  ``first`` starts the kernel-path running sum from
-    the first delta, matching ``scan._fold_running_sum`` bit-for-bit.
+    Estimate-or-None).  ``first`` starts the legacy kernel paths' running
+    sum from the first delta, matching ``scan._fold_running_sum``
+    bit-for-bit; the carry-style ``"kernel_fused"`` path needs no first
+    split (zero-init carries are exact).  ``encodings`` is the source's
+    static (name, Encoding) tuple: the fused path decodes in-kernel, every
+    other path decodes generically before accumulating.
     """
     def worker(st, cols, w_p, dl):
         st = jax.tree.map(lambda x: x[0], st)
         cols = jax.tree.map(lambda x: x[0], cols)
         w = w_p[0]
         dl = dl[0]
+        if encodings and path != "kernel_fused":
+            from repro.data import encodings as ENC  # local: core stays data-free
+            cols = ENC.decode_cols(cols, encodings)
         if path == "scan":
             new_st, view = SC.scan_round_step(gla, st, cols, lanes)
+        elif path == "kernel_fused":
+            new_st = SC.fused_round_step(gla, st, cols, encodings)
+            view = new_st
         else:
             delta = SC.ROUND_DELTA_FNS[path](gla, cols)
             new_st = delta if first else jax.tree.map(jnp.add, st, delta)

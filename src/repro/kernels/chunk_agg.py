@@ -26,6 +26,12 @@ Accumulator layout: [8, 128] f32 (one aligned VREG tile); rows 0..3 hold
 lane-partials of (sum, sumsq, scanned, matched); the host wrapper reduces
 over lanes.  Output block index is constant over the grid so the tile stays
 in VMEM; it is zero-initialized at step 0 with ``pl.when``.
+
+These are the legacy ``kernel_cols`` scalar kernels: the lane-partial
+layout makes their states interchangeable — not bitwise — with the scan
+path.  GLAs that publish a ``FusedSpec`` dispatch
+:mod:`repro.kernels.fused_agg` instead, whose scalar accumulation replays
+the scan's exact expression tree (DESIGN.md §12, docs/KERNELS.md).
 """
 from __future__ import annotations
 

@@ -1,0 +1,415 @@
+"""Fused selection→bucket→aggregate Pallas kernel (DESIGN.md §12).
+
+One VMEM-resident dispatch per round-slice that fuses everything between
+the streamed bytes and the GLA state update:
+
+    decode (dict / bit-packed columns)          repro/data/encodings.py
+    → predicate evaluation  (FusedSpec.cond × _mask)
+    → group-id computation  (FusedSpec.group, already hash-bucketed)
+    → f32 accumulation      (mul-reduce scalar / one-hot MXU group)
+
+into the ``estimators.SumState`` layout, *carrying the state in*: the
+previous round's (sum, sumsq, matched) enter as constant-index-map input
+refs, are copied to the output refs at ``program_id == 0``, and each grid
+step (one chunk of length L) accumulates on top.  Because the kernel adds
+per-chunk contributions to a running carry in chunk order — the exact
+association ``scan.scan_round_step`` uses — finals and snapshots are
+**bitwise-identical** to the segment-sum scan path, for the scalar
+contract too (the legacy scalar kernel was only statistically
+interchangeable; see docs/KERNELS.md for the accumulation-order rules
+that make this hold).
+
+Bundles fuse further: all members' accumulations run in the SAME
+``pallas_call`` (separate out-ref triples per member), so N concurrent
+queries still cost one dispatch and one VMEM residency per round-slice —
+the audit catalog's ``fused_single_dispatch`` check pins this down via
+:func:`count_dispatches`.
+
+Padding follows the repo's MXU discipline (docs/KERNELS.md): A → multiple
+of 8, G → multiple of 128; padded value columns are zero (they reduce to
+zero independently per column), padded group rows receive no one-hot hits,
+and the unpadded slices are returned — padding never leaks.
+
+Kernels run with ``interpret=True`` off-TPU (ops._interpret_default), and
+every result is asserted bitwise against the scan reference in
+tests/test_fused_kernel.py across {scalar, group, bundle} × {plain, dict,
+bit-packed} × both engines.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.data import encodings as ENC
+from repro.kernels.ops import _interpret_default
+
+
+def _pad8(a: int) -> int:
+    return -(-a // 8) * 8
+
+
+def _pad128(g: int) -> int:
+    return -(-g // 128) * 128
+
+
+# ---------------------------------------------------------------------------
+# dispatch accounting (analysis/audit.py: fused_single_dispatch)
+# ---------------------------------------------------------------------------
+
+_DISPATCHES = [0]  # pallas_call constructions since import (monotonic)
+
+
+@contextlib.contextmanager
+def count_dispatches():
+    """Count fused ``pallas_call`` constructions traced inside the block.
+
+    Yields a one-element list; after the block it holds the count.  Works
+    under ``jax.eval_shape``/lowering (no execution needed), which is how
+    the audit catalog proves one-dispatch-per-round-slice statically.
+    """
+    start = _DISPATCHES[0]
+    box = [0]
+    try:
+        yield box
+    finally:
+        box[0] = _DISPATCHES[0] - start
+
+
+# ---------------------------------------------------------------------------
+# contract helpers
+# ---------------------------------------------------------------------------
+
+def fused_members(gla):
+    """The per-member ``FusedSpec`` tuple of ``gla`` (itself, or its bundle
+    members), or None when any member lacks a fused contract."""
+    members = gla.members or (gla,)
+    specs = tuple(m.fused for m in members)
+    return None if any(s is None for s in specs) else specs
+
+
+def fused_available(gla, columns=None) -> bool:
+    """True when every member publishes a fused contract AND the source's
+    column table is fusable (no trailing dims — the kernel blocks one
+    [1, L] row per column)."""
+    if fused_members(gla) is None:
+        return False
+    if columns is not None and any(c.trailing for c in columns):
+        return False
+    return True
+
+
+def _member_meta(specs):
+    """Static (kind, A, A_pad, G, G_pad) per member."""
+    meta = []
+    for fs in specs:
+        a_pad = _pad8(fs.num_aggs)
+        if fs.group is None:
+            meta.append(("scalar", fs.num_aggs, a_pad, None, None))
+        else:
+            meta.append(("group", fs.num_aggs, a_pad, fs.num_groups,
+                         _pad128(fs.num_groups)))
+    return meta
+
+
+def _pad_cols(d, a_pad):
+    """Zero-pad a [rows, A] contribution to [rows, A_pad] columns."""
+    if d.shape[1] == a_pad:
+        return d
+    return jnp.concatenate(
+        [d, jnp.zeros((d.shape[0], a_pad - d.shape[1]), jnp.float32)], axis=1)
+
+
+def _pad_rows(d, g_pad):
+    """Zero-pad a [G, cols] contribution to [G_pad, cols] rows."""
+    if d.shape[0] == g_pad:
+        return d
+    return jnp.concatenate(
+        [d, jnp.zeros((g_pad - d.shape[0], d.shape[1]), jnp.float32)], axis=0)
+
+
+def _chunk_contrib(fs, meta_row, chunk, msk, L, use_mxu=False):
+    """One chunk's (sum, sumsq, matched) contribution, padded.
+
+    The bitwise guarantee rests on IDENTICAL EXPRESSION TREES, not on
+    numerically-equivalent ones: the scalar member repeats ``gla.acc_sum``
+    verbatim (multiply-then-reduce — context-stable on XLA:CPU, unlike a
+    matvec, which fuses into surrounding scan carries), and the group
+    member repeats the scan path's ``jax.ops.segment_sum`` scatter —
+    a one-hot contraction reduces over L in a different association and
+    its low bits drift from the scatter's once L outgrows the CPU
+    reduce's vectorization block (~256 at f32).  ``use_mxu`` switches the
+    group member to the one-hot MXU contraction for compiled TPU kernels,
+    where a scatter does not lower; re-validate bitwise-vs-scan on-device
+    before relying on it there (docs/KERNELS.md).
+
+    Reductions run over the UNPADDED [L, A] values / [G, A] segments —
+    padding A (or G) first changes the reduce's vectorization, hence its
+    association, hence the low bits; only the already-reduced result is
+    padded to the accumulator-ref layout.  Returns 2-D arrays shaped like
+    the member's accumulator refs.
+    """
+    kind, A, A_pad, G, G_pad = meta_row
+    vals = fs.func(chunk)
+    vals = (vals[:, None] if vals.ndim == 1 else vals).astype(jnp.float32)
+    w = (fs.cond(chunk) * msk).astype(jnp.float32)
+    if kind == "scalar":
+        d_s = ((vals * w[:, None]).sum(axis=0))[None]            # [1, A]
+        d_q = (((vals * vals) * w[:, None]).sum(axis=0))[None]
+        d_m = jnp.sum(w).reshape(1, 1)
+        return _pad_cols(d_s, A_pad), _pad_cols(d_q, A_pad), d_m
+    gids = fs.group(chunk).astype(jnp.int32)
+    vw = vals * w[:, None]
+    if use_mxu:
+        onehot = (jax.lax.broadcasted_iota(jnp.int32, (L, G_pad), 1)
+                  == gids[:, None]).astype(jnp.float32)          # [L, G_pad]
+        d_s = jnp.dot(onehot.T, vw, preferred_element_type=jnp.float32)
+        d_q = jnp.dot(onehot.T, vals * vw,
+                      preferred_element_type=jnp.float32)
+        d_m = jnp.dot(onehot.T, w[:, None],
+                      preferred_element_type=jnp.float32)
+        return _pad_cols(d_s, A_pad), _pad_cols(d_q, A_pad), d_m
+    d_s = jax.ops.segment_sum(vw, gids, num_segments=G)
+    d_q = jax.ops.segment_sum(vals * vw, gids, num_segments=G)
+    d_m = jax.ops.segment_sum(w, gids, num_segments=G)[:, None]
+    return (_pad_rows(_pad_cols(d_s, A_pad), G_pad),
+            _pad_rows(_pad_cols(d_q, A_pad), G_pad),
+            _pad_rows(d_m, G_pad))
+
+
+def _table_inputs(names, enc_map):
+    """Dictionary value tables as extra kernel inputs (Pallas forbids
+    captured constants in the body): (table names, arrays, BlockSpecs)."""
+    tbl_names = [n for n in names
+                 if isinstance(enc_map.get(n), ENC.DictEncoding)]
+    args = [enc_map[n].table() for n in tbl_names]
+    specs = [pl.BlockSpec(t.shape, lambda i: (0,)) for t in args]
+    return tbl_names, args, specs
+
+
+def _decode_chunk(names, col_refs, enc_map, tables):
+    """Rebuild the logical chunk dict from one grid step's column refs,
+    decoding encoded columns in-register (exact).  ``tables`` maps dict-
+    encoded column names to their value-table values (read off the extra
+    table input refs); bit-packed columns shift-and-mask via
+    ``encodings.decode_block``."""
+    chunk = {}
+    for n, r in zip(names, col_refs):
+        enc = enc_map.get(n)
+        if isinstance(enc, ENC.DictEncoding):
+            chunk[n] = jnp.take(tables[n], r[0].astype(jnp.int32), axis=0)
+        else:
+            chunk[n] = ENC.decode_block(r[0], enc)
+    return chunk
+
+
+def _carry_arrays(specs, meta, states):
+    """Pack member SumStates into the padded f32 carry layout."""
+    carries = []
+    for fs, mrow, st in zip(specs, meta, states):
+        kind, A, A_pad, G, G_pad = mrow
+        if kind == "scalar":
+            s = jnp.zeros((1, A_pad), jnp.float32).at[0, :A].set(st.sum)
+            q = jnp.zeros((1, A_pad), jnp.float32).at[0, :A].set(st.sumsq)
+            m = jnp.asarray(st.matched, jnp.float32).reshape(1, 1)
+        else:
+            s = jnp.zeros((G_pad, A_pad), jnp.float32).at[:G, :A].set(st.sum)
+            q = jnp.zeros((G_pad, A_pad), jnp.float32).at[:G, :A].set(st.sumsq)
+            m = jnp.zeros((G_pad, 1), jnp.float32).at[:G, 0].set(st.matched)
+        carries += [s, q, m]
+    return carries
+
+
+def _unpack_states(outs, specs, meta, states, scanned_delta):
+    """Slice padding off the kernel outputs back into member SumStates."""
+    new_states = []
+    for i, (mrow, st) in enumerate(zip(meta, states)):
+        kind, A, A_pad, G, G_pad = mrow
+        s, q, m = outs[3 * i:3 * i + 3]
+        if kind == "scalar":
+            new_states.append(st._replace(
+                sum=s[0, :A], sumsq=q[0, :A], matched=m[0, 0],
+                scanned=st.scanned + scanned_delta))
+        else:
+            new_states.append(st._replace(
+                sum=s[:G, :A], sumsq=q[:G, :A], matched=m[:G, 0],
+                scanned=st.scanned + scanned_delta))
+    return new_states
+
+
+# ---------------------------------------------------------------------------
+# the fused round-step kernel (carry-in; scalar, group, and bundles)
+# ---------------------------------------------------------------------------
+
+def fused_round_step(gla, state, cols, encodings=(), *, interpret=None):
+    """Advance ``state`` over one round-slice in ONE fused dispatch.
+
+    Contract (docs/KERNELS.md):
+      cols:       {name: [C, L]} logical — or [C, L/lanes] physical for
+                  columns named in ``encodings`` (decoded in-kernel);
+                  must include a plain ``_mask``.
+      state:      member SumState (bundle: tuple thereof), any f32 shapes
+                  matching the GLA's init().
+      returns:    same pytree, advanced over the C chunks in chunk order.
+
+    Bitwise guarantee: identical to folding ``gla.accumulate`` over the C
+    chunks (``scan.scan_round_step``), including from a checkpointed
+    mid-scan carry.  ``scanned`` (and nothing else) is accumulated outside
+    the kernel — live counts are integer-valued f32, exact under any
+    association, and need only ``_mask``.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    specs = fused_members(gla)
+    if specs is None:
+        raise ValueError(
+            f"GLA {gla.name!r} does not publish a fused kernel contract")
+    is_bundle = bool(gla.members)
+    states = tuple(state) if is_bundle else (state,)
+    meta = _member_meta(specs)
+    enc_map = dict(encodings)
+    names = sorted(cols)
+    mask = cols["_mask"]
+    C, L = int(mask.shape[0]), int(mask.shape[1])
+
+    carries = _carry_arrays(specs, meta, states)
+    col_args = [cols[n] for n in names]
+    col_specs = [pl.BlockSpec((1, int(cols[n].shape[1])), lambda i: (i, 0))
+                 for n in names]
+    tbl_names, tbl_args, tbl_specs = _table_inputs(names, enc_map)
+    carry_specs = [pl.BlockSpec(c.shape, lambda i: (0, 0)) for c in carries]
+    out_shape = [jax.ShapeDtypeStruct(c.shape, c.dtype) for c in carries]
+    n_cols, n_tbl, n_carry = len(names), len(tbl_names), len(carries)
+
+    def body(*refs):
+        col_refs = refs[:n_cols]
+        tbl_refs = refs[n_cols:n_cols + n_tbl]
+        in_refs = refs[n_cols + n_tbl:n_cols + n_tbl + n_carry]
+        out_refs = refs[n_cols + n_tbl + n_carry:]
+
+        @pl.when(pl.program_id(0) == 0)
+        def _seed():
+            for o, c in zip(out_refs, in_refs):
+                o[...] = c[...]
+
+        tables = {n: t[...] for n, t in zip(tbl_names, tbl_refs)}
+        chunk = _decode_chunk(names, col_refs, enc_map, tables)
+        msk = chunk["_mask"].astype(jnp.float32)
+        for k, (fs, mrow) in enumerate(zip(specs, meta)):
+            d_s, d_q, d_m = _chunk_contrib(fs, mrow, chunk, msk, L)
+            out_refs[3 * k][...] = out_refs[3 * k][...] + d_s
+            out_refs[3 * k + 1][...] = out_refs[3 * k + 1][...] + d_q
+            out_refs[3 * k + 2][...] = out_refs[3 * k + 2][...] + d_m
+
+    _DISPATCHES[0] += 1
+    outs = pl.pallas_call(
+        body, grid=(C,),
+        in_specs=[*col_specs, *tbl_specs, *carry_specs],
+        out_specs=[pl.BlockSpec(c.shape, lambda i: (0, 0)) for c in carries],
+        out_shape=out_shape, interpret=interpret,
+    )(*col_args, *tbl_args, *carries)
+
+    scanned_delta = jnp.sum(mask.astype(jnp.float32))
+    new_states = _unpack_states(outs, specs, meta, states, scanned_delta)
+    return tuple(new_states) if is_bundle else new_states[0]
+
+
+# ---------------------------------------------------------------------------
+# prefix-states kernel (scalar contract; per-chunk running states)
+# ---------------------------------------------------------------------------
+
+def fused_prefix_states(gla, cols, encodings=(), *, interpret=None):
+    """Whole-shard scalar scan in ONE dispatch, emitting per-chunk prefixes.
+
+    Contract: scalar (non-group, non-bundle) fused GLAs only.  Returns
+    ``(final_state, prefix_states)`` where ``prefix_states`` leaves have a
+    leading [C + 1] axis — row 0 is init(), row c+1 the state after chunk
+    c — exactly the ``scan.scan_prefix`` layout the engines index round
+    boundaries (and the sharded sync barrier's pmin truncation) from.
+
+    The kernel keeps the running (sum, sumsq, matched) in revisited
+    constant-index-map refs — sequential chunk-order adds, same
+    association as the carry-in round step — and snapshots them into a
+    per-chunk output row after each grid step, so the whole prefix family
+    costs one dispatch (audit: single_kernel_dispatch counts 1 grid loop).
+    Bitwise-identical to folding ``gla.accumulate`` chunk by chunk.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    specs = fused_members(gla)
+    if specs is None or len(specs) != 1 or specs[0].group is not None:
+        raise ValueError(
+            f"fused_prefix_states needs a solo scalar fused GLA, got "
+            f"{gla.name!r}")
+    fs = specs[0]
+    (meta_row,) = _member_meta((fs,))
+    _, A, A_pad, _, _ = meta_row
+    enc_map = dict(encodings)
+    names = sorted(cols)
+    mask = cols["_mask"]
+    C, L = int(mask.shape[0]), int(mask.shape[1])
+
+    col_args = [cols[n] for n in names]
+    col_specs = [pl.BlockSpec((1, int(cols[n].shape[1])), lambda i: (i, 0))
+                 for n in names]
+    tbl_names, tbl_args, tbl_specs = _table_inputs(names, enc_map)
+    acc_shapes = [jax.ShapeDtypeStruct((1, A_pad), jnp.float32),
+                  jax.ShapeDtypeStruct((1, A_pad), jnp.float32),
+                  jax.ShapeDtypeStruct((1, 1), jnp.float32)]
+    row_shapes = [jax.ShapeDtypeStruct((C, A_pad), jnp.float32),
+                  jax.ShapeDtypeStruct((C, A_pad), jnp.float32),
+                  jax.ShapeDtypeStruct((C, 1), jnp.float32)]
+    acc_specs = [pl.BlockSpec(s.shape, lambda i: (0, 0)) for s in acc_shapes]
+    row_specs = [pl.BlockSpec((1, s.shape[1]), lambda i: (i, 0))
+                 for s in row_shapes]
+    n_cols, n_tbl = len(names), len(tbl_names)
+
+    def body(*refs):
+        col_refs = refs[:n_cols]
+        tbl_refs = refs[n_cols:n_cols + n_tbl]
+        a_s, a_q, a_m, p_s, p_q, p_m = refs[n_cols + n_tbl:]
+
+        @pl.when(pl.program_id(0) == 0)
+        def _seed():
+            a_s[...] = jnp.zeros_like(a_s)
+            a_q[...] = jnp.zeros_like(a_q)
+            a_m[...] = jnp.zeros_like(a_m)
+
+        tables = {n: t[...] for n, t in zip(tbl_names, tbl_refs)}
+        chunk = _decode_chunk(names, col_refs, enc_map, tables)
+        msk = chunk["_mask"].astype(jnp.float32)
+        d_s, d_q, d_m = _chunk_contrib(fs, meta_row, chunk, msk, L)
+        a_s[...] = a_s[...] + d_s
+        a_q[...] = a_q[...] + d_q
+        a_m[...] = a_m[...] + d_m
+        p_s[...] = a_s[...]
+        p_q[...] = a_q[...]
+        p_m[...] = a_m[...]
+
+    _DISPATCHES[0] += 1
+    outs = pl.pallas_call(
+        body, grid=(C,),
+        in_specs=[*col_specs, *tbl_specs],
+        out_specs=[*acc_specs, *row_specs],
+        out_shape=[*acc_shapes, *row_shapes], interpret=interpret,
+    )(*col_args, *tbl_args)
+    a_s, a_q, a_m, p_s, p_q, p_m = outs
+
+    # scanned prefixes: integer-valued live counts — cumsum is exact, so
+    # it matches the scan fold bit-for-bit (DESIGN.md §12)
+    m32 = mask.astype(jnp.float32)
+    scanned_chunks = jnp.sum(m32, axis=tuple(range(1, m32.ndim)))     # [C]
+    zero = jnp.zeros((1,), jnp.float32)
+    scanned_pref = jnp.concatenate([zero, jnp.cumsum(scanned_chunks)])
+
+    init = gla.init()
+    final = init._replace(
+        sum=a_s[0, :A], sumsq=a_q[0, :A], matched=a_m[0, 0],
+        scanned=init.scanned + scanned_pref[-1])
+    pad_row = jnp.zeros((1, A_pad), jnp.float32)
+    prefixes = init._replace(
+        sum=jnp.concatenate([pad_row, p_s])[:, :A],
+        sumsq=jnp.concatenate([pad_row, p_q])[:, :A],
+        matched=jnp.concatenate([jnp.zeros((1, 1), jnp.float32), p_m])[:, 0],
+        scanned=scanned_pref)
+    return final, prefixes

@@ -18,6 +18,14 @@ wrapper pads G to a multiple of 128 (the one-hot's lane dim) and A to a
 multiple of 8 (the [G, A] output sublane pairing), so both matmul operand
 shapes are MXU-aligned; ``matched`` keeps its [G, 1] layout (a single
 lane-dim column — tolerated, and sliced off by the wrapper anyway).
+
+Bitwise guarantee: driven with ``block_rows`` == chunk length (as
+``core/scan.py::kernel_round_delta`` does), accumulation runs chunk by
+chunk in the scan's association order and states equal the segment_sum
+scan bit-for-bit.  The fused round-slice kernel
+(:mod:`repro.kernels.fused_agg`, DESIGN.md §12) extends the same
+guarantee to scalars and in-kernel decode; authoring rules in
+docs/KERNELS.md.
 """
 from __future__ import annotations
 

@@ -3,6 +3,12 @@
 Handle layout (flat -> [R, 128] lane tiles), padding, backend dispatch
 (interpret=True on CPU — the kernels target TPU), and reduction of
 lane-partial accumulators.  Semantics == repro.kernels.ref oracles.
+
+Padding here follows the MXU discipline of docs/KERNELS.md §3: lane dims
+pad to 128, sublane dims to 8, padded rows are value-inert (weight 0,
+in-range gid), and outputs are sliced back so padding never escapes this
+package.  These wrappers serve the legacy ``kernel_cols`` contract; the
+fused ``FusedSpec`` dispatch lives in :mod:`repro.kernels.fused_agg`.
 """
 from __future__ import annotations
 
@@ -39,7 +45,13 @@ def _to_tiles(x, block_rows):
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def chunk_agg(vals, weight, mask, *, block_rows: int = 256, interpret=None):
-    """Fused aggregate over a flat chunk -> [4] f32 (sum, sumsq, scanned, matched)."""
+    """Fused aggregate over a flat chunk -> [4] f32 (sum, sumsq, scanned, matched).
+
+    vals/weight/mask: [N] any numeric dtype (cast to f32; zero-padded to
+    [R, 128] lane tiles, R a multiple of ``block_rows``).  Lane partials
+    are reduced here, so the result is interchangeable — not bitwise —
+    with the flat mul-reduce (docs/KERNELS.md §2).
+    """
     interpret = _interpret_default() if interpret is None else interpret
     v = _to_tiles(vals.astype(jnp.float32), block_rows)
     w = _to_tiles(weight.astype(jnp.float32), block_rows)
@@ -57,6 +69,11 @@ def shard_chunk_partials(vals, weight, mask, *, block_rows: int = 256,
     vals/weight/mask: [C, L] -> [C, 4] f32 (sum, sumsq, scanned, matched)
     per chunk.  Used by the engine's ``emit="kernel"`` path (the snapshot
     prefix states are the cumsum of these rows for additive GLAs).
+
+    Legacy scalar dispatch: per-chunk lane partials make the states
+    interchangeable-not-bitwise with the scan path.  GLAs publishing a
+    ``FusedSpec`` route through ``fused_agg.fused_prefix_states`` instead,
+    which is bitwise (DESIGN.md §12).
     """
     interpret = _interpret_default() if interpret is None else interpret
     C, L = vals.shape
@@ -108,6 +125,11 @@ def group_agg(vals, weight, gids, *, num_groups: int, block_rows: int = 512,
     to the unpadded shapes.  Padded group columns receive no items (gids are
     in-range) and padded agg columns are zero-filled, so the padding is
     value-inert.
+
+    Bitwise guarantee: with ``block_rows`` pinned to the chunk length the
+    kernel adds per-chunk contributions in the scan's association order,
+    so round states and finals equal the segment_sum scan bit-for-bit
+    (tests/test_groupby_kernel.py, docs/KERNELS.md §2/§6).
     """
     interpret = _interpret_default() if interpret is None else interpret
     if vals.ndim == 1:

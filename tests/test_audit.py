@@ -200,7 +200,10 @@ def test_audit_plan_certifies_kernel_bundle(shards, plans):
     bundle, emit = plans["bundle"]
     rep = engine.audit_plan(bundle, shards, rounds=ROUNDS, emit=emit)
     assert rep.ok, rep.summary()
-    assert rep.result("single_kernel_dispatch").passed
+    # every member publishes FusedSpec, so the plan takes the fused path:
+    # fused_single_dispatch certifies it and the legacy while-census skips
+    assert rep.result("fused_single_dispatch").passed
+    assert rep.result("single_kernel_dispatch").skipped
     assert rep.result("one_chunk_pass").skipped  # kernel plans do not scan
 
 

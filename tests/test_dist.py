@@ -41,12 +41,24 @@ def test_kernel_emit_matches_scan(shards, q6):
                                np.asarray(b.estimates.estimate), rtol=1e-4)
 
 
-def test_kernel_emit_requires_kernel_cols(shards):
+def test_kernel_emit_requires_kernel_contract(shards):
+    """emit='kernel' needs kernel_cols OR a FusedSpec.  A>1 scalar sums
+    publish no legacy kernel projection but DO fuse (DESIGN.md §12), so
+    they now run; only GLAs with neither contract are rejected."""
     g = gla.make_sum_gla(tpch.q1_func, tpch.q1_cond, d_total=float(ROWS),
-                         num_aggs=4)  # A>1: no kernel projection
-    assert g.kernel_cols is None
+                         num_aggs=4)  # A>1: fused-only
+    assert g.kernel_cols is None and g.fused is not None
+    a = engine.run_query(g, shards, rounds=4, emit="chunk")
+    b = engine.run_query(g, shards, rounds=4, emit="kernel")
+    np.testing.assert_allclose(np.asarray(a.final), np.asarray(b.final),
+                               rtol=1e-5)
+    # "multiple"-estimator states are not plain running sums: no kernel
+    # projection and no fused contract — emit='kernel' must still raise
+    m = gla.make_sum_gla(tpch.q1_func, tpch.q1_cond, d_total=float(ROWS),
+                         num_aggs=4, estimator="multiple")
+    assert m.kernel_cols is None and m.fused is None
     with pytest.raises(ValueError, match="kernel_cols"):
-        engine.run_query(g, shards, rounds=4, emit="kernel")
+        engine.run_query(m, shards, rounds=4, emit="kernel")
 
 
 def test_failure_schedule_layout():

@@ -185,13 +185,33 @@ def test_run_queries_kernel_batched_bitwise(shards, workload):
 
 
 def test_kernel_bundle_one_dispatch_per_round_slice(shards, workload):
-    """HLO-verified: the bundled kernel program contains exactly P×R while
-    ops — every one a Pallas grid loop, one dispatch per (partition,
-    round-slice) for the WHOLE bundle — vs one per member solo."""
+    """One dispatch per (partition, round-slice) for the WHOLE bundle.
+
+    The all-FusedSpec workload takes the fused path — its in-kernel
+    segment_sum lowers to scatter loops under interpret mode, so the
+    dispatch count comes from trace-time ``pallas_call`` accounting, not
+    a while-op census.  A join member (kernel_cols-only — its probe
+    tables cannot enter a kernel body) forces the legacy one-hot
+    batcher, where the HLO invariant still holds: exactly P×R while ops,
+    every one a Pallas grid loop."""
     if jax.default_backend() != "cpu":
         pytest.skip("interpret-mode lowering check is CPU-specific")
+    from repro.kernels import fused_agg as FK
+    jax.clear_caches()  # earlier tests traced this program; a jit cache
+    # hit would skip pallas_call construction and the count would read 0
+    with FK.count_dispatches() as box:
+        jax.eval_shape(lambda sh: engine.run_queries(
+            workload, sh, rounds=ROUNDS, emit="kernel"), shards)
+    assert box[0] == PARTS * ROUNDS, box[0]
+
+    supp = jnp.arange(SUPPLIERS, dtype=jnp.int32) % tpch.NUM_NATIONS
+    valid = jnp.ones((SUPPLIERS,), jnp.float32)
+    legacy = [*workload, gla.make_join_groupby_gla(
+        tpch.q1_func, tpch.q6_cond(tpch.Q6_LOW_WINDOW),
+        lambda c: c["suppkey"], supp, valid,
+        num_groups=tpch.NUM_NATIONS, d_total=float(ROWS), num_aggs=4)]
     fn = jax.jit(lambda sh: engine.run_queries(
-        workload, sh, rounds=ROUNDS, emit="kernel")).lower(shards).compile()
+        legacy, sh, rounds=ROUNDS, emit="kernel")).lower(shards).compile()
     n_while = HC.count_ops(fn.as_text(), "while", trip_scaled=False)
     assert n_while == PARTS * ROUNDS, n_while
 

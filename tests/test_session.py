@@ -88,20 +88,19 @@ def test_incremental_matches_fused_kernel_group(shards):
     assert _tobytes(inc.snapshots) == _tobytes(fused.snapshots)
 
 
-def test_incremental_kernel_scalar_interchangeable(shards):
-    """Scalar-kernel path: incremental deltas re-associate the whole-shard
-    cumsum, so interchangeable (allclose), not bitwise — same contract the
-    scalar kernel already has vs the scan path."""
+def test_incremental_kernel_scalar_bitwise(shards):
+    """Scalar-kernel path: the fused carry-in kernel (DESIGN.md §12) made
+    this bitwise — incremental steps accumulate per-chunk contributions in
+    the exact association the whole-shard prefix kernel uses, so the old
+    interchangeable-not-bitwise carve-out is gone."""
     q = _wide_q6()
     fused = engine.run_query(q, shards, rounds=ROUNDS, emit="kernel")
     sess = S.Session(q, shards, rounds=ROUNDS, emit="kernel",
                      stop=S.abs_width(-1.0))
+    assert sess._path == "kernel_fused"
     inc = sess.run()
-    np.testing.assert_allclose(float(inc.final), float(fused.final),
-                               rtol=1e-5)
-    np.testing.assert_allclose(np.asarray(inc.estimates.estimate),
-                               np.asarray(fused.estimates.estimate),
-                               rtol=1e-4)
+    assert _tobytes(inc.final) == _tobytes(fused.final)
+    assert _tobytes(inc.estimates) == _tobytes(fused.estimates)
 
 
 # ---------------------------------------------------------------------------
