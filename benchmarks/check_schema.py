@@ -31,7 +31,7 @@ from pathlib import Path
 # CSV only; roofline depends on optional dry-run artifacts)
 EXPECTED_BENCHES = frozenset({
     "overhead", "groupby", "multiquery", "early_stop", "fault",
-    "streaming", "fused", "convergence", "serve",
+    "streaming", "fused", "deepola", "convergence", "serve",
 })
 
 

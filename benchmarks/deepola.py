@@ -1,0 +1,165 @@
+"""Deep OLA benchmarks (DESIGN.md §13): fused joins + nested aggregates.
+
+Two claims get numbers here:
+
+  * **fused join wall** — a Q3-class two-table join (lineitem ⋈ orders,
+    grouped by the probed market segment) on the fused single-dispatch
+    kernel (probe tables as Pallas operands) vs the legacy per-member
+    kernel batcher (``fused=None`` — the oversized-probe fallback) vs the
+    segment-sum scan path.  The ``fused_single_dispatch`` audit check is
+    run with ``raise_on_failure=True`` before timing; the fused result is
+    asserted bitwise-identical to the scan path (the legacy batcher
+    re-associates its per-round-slice sums, so it is held to allclose) —
+    same answer, fewer dispatches.
+  * **nested time-to-ε** — GROUP BY + HAVING over *estimated* aggregates
+    (the Deep OLA query shape): wall time for the full refinement plus
+    how many rounds the monotone envelope needs to tighten under a 10%
+    relative width, reported alongside the flat join's convergence so
+    the cost of nesting is visible.
+
+Output: CSV to stdout + benchmarks/out/BENCH_deepola.json (schema rows
+in benchmarks/README.md; seeded baseline in benchmarks/baselines/).
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from benchmarks import bench_io
+except ImportError:  # direct script invocation: benchmarks/ is sys.path[0]
+    import bench_io
+
+from repro.analysis import audit as AU
+from repro.core import engine, randomize
+from repro.core import estimators as E
+from repro.core import gla as G
+from repro.core.spec import QuerySpec
+from repro.data import tpch
+from repro.kernels import fused_agg as FK
+
+ROWS = 2_000_000
+SMOKE_ROWS = 400_000
+PARTS = 4
+CHUNK = 1024
+ROUNDS = 16
+EPS = 0.10
+
+
+def _shards(cols, rows):
+    parts = randomize.randomize_global(
+        {k: jnp.asarray(v) for k, v in cols.items()}, jax.random.key(31),
+        PARTS)
+    n_chunks = -(-rows // PARTS // CHUNK)
+    return randomize.pack_partitions(
+        parts, chunk_len=CHUNK,
+        min_chunks=-(-n_chunks // ROUNDS) * ROUNDS)
+
+
+def _rounds_to_eps(lower, upper, estimate):
+    """First round whose monotone-envelope relative width is under EPS
+    (-1 when the run never got there)."""
+    lo, hi = map(np.asarray, E.monotone_envelope(
+        jnp.asarray(lower), jnp.asarray(upper)))
+    mid = np.abs(np.asarray(estimate, np.float64))
+    w = (hi.astype(np.float64) - lo.astype(np.float64)) \
+        / np.maximum(mid, 1e-12)
+    ok = np.flatnonzero(w <= EPS)
+    return int(ok[0]) + 1 if ok.size else -1
+
+
+def run(rows=ROWS, repeats=3, out=sys.stdout):
+    cols, q3, _ = tpch.q3_scenario(rows)
+    shards = _shards(cols, rows)
+    legacy = q3.with_(fused=None)
+
+    # pre-timing certificates: the fused join really is one dispatch per
+    # round-slice with the probe tables riding in-kernel
+    report = AU.audit_plan(q3, shards, rounds=ROUNDS, emit="kernel",
+                           checks=("fused_single_dispatch",),
+                           raise_on_failure=True)
+    probe_bytes = report.result("fused_single_dispatch").data["probe_bytes"]
+    assert probe_bytes > 0, "join probes must ride as kernel operands"
+
+    def run_scan():
+        res = engine.run_query(QuerySpec(q3, rounds=ROUNDS, emit="chunk"),
+                               shards)
+        jax.block_until_ready(res.final)
+        return res
+
+    def run_legacy():
+        res = engine.run_query(QuerySpec(legacy, rounds=ROUNDS,
+                                         emit="kernel"), shards)
+        jax.block_until_ready(res.final)
+        return res
+
+    def run_fused():
+        res = engine.run_query(QuerySpec(q3, rounds=ROUNDS, emit="kernel"),
+                               shards)
+        jax.block_until_ready(res.final)
+        return res
+
+    scan_us, legacy_us, fused_us = bench_io.time_interleaved(
+        [run_scan, run_legacy, run_fused], repeats)
+
+    ref = run_scan()
+    for a, b in zip(jax.tree.leaves(run_fused().final),
+                    jax.tree.leaves(ref.final)):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes(), (
+            "fused join final differs from the scan path")
+    np.testing.assert_allclose(             # legacy batcher re-associates
+        np.asarray(run_legacy().final), np.asarray(ref.final), rtol=1e-5)
+
+    flat_eps = _rounds_to_eps(
+        ref.estimates.lower[..., 0], ref.estimates.upper[..., 0],
+        ref.estimates.estimate[..., 0])
+
+    # nested GROUP BY + HAVING over the same join: full-refinement wall +
+    # envelope rounds-to-ε for the Deep OLA shape
+    hv = G.make_having_gla(q3, 1.0)
+
+    def run_nested():
+        res = engine.run_query(QuerySpec(hv, rounds=ROUNDS), shards)
+        jax.block_until_ready(res.estimates.estimate)
+        return res
+
+    nested_us, = bench_io.time_interleaved([run_nested], repeats)
+    nres = run_nested()
+    nested_eps = _rounds_to_eps(nres.estimates.lower, nres.estimates.upper,
+                                nres.estimates.estimate)
+    assert np.isfinite(np.asarray(nres.estimates.estimate)).all()
+
+    bench_rows = [
+        ("scan_join_q3", scan_us, {
+            "rows": rows, "rounds": ROUNDS,
+            "rounds_to_eps10": flat_eps}),
+        ("legacy_kernel_join_q3", legacy_us, {
+            "rows": rows, "rounds": ROUNDS,
+            "allclose_vs_scan": True}),
+        ("fused_join_q3", fused_us, {
+            "rows": rows, "rounds": ROUNDS,
+            "speedup_vs_scan": scan_us / fused_us,
+            "speedup_vs_legacy": legacy_us / fused_us,
+            "probe_bytes": int(probe_bytes),
+            "bitwise_vs_scan": True}),
+        ("nested_having_q3", nested_us, {
+            "rows": rows, "rounds": ROUNDS,
+            "overhead_vs_flat_scan": nested_us / scan_us,
+            "rounds_to_eps10": nested_eps}),
+    ]
+    print("name,us_per_call,derived", file=out)
+    rows_out = []
+    for name, us, derived in bench_rows:
+        print(f"{name},{us:.0f},"
+              + ";".join(f"{k}={v}" for k, v in derived.items()), file=out)
+        rows_out.append({"name": name, "us_per_call": us, "derived": derived})
+
+    path = bench_io.emit("deepola", rows_out)
+    print(f"# wrote {path}", file=out)
+
+
+if __name__ == "__main__":
+    run(rows=int(sys.argv[1]) if len(sys.argv) > 1 else ROWS)

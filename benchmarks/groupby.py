@@ -9,17 +9,21 @@ implementations:
   * ``emit="round"``  — the scan path: one ``jax.ops.segment_sum`` per
     state field per chunk (XLA's CPU scatter expander turns each into a
     per-item update loop; on TPU it is a sorted-segment / one-hot lowering).
-  * ``emit="kernel"`` — the Pallas path: ONE ``ops.group_agg`` one-hot MXU
-    dispatch per round-slice of each shard
-    (``repro/core/scan.py::kernel_rounds_states``, DESIGN.md §3).
+  * ``emit="kernel"`` — the Pallas path: ONE fused
+    selection→bucket→aggregate dispatch per round-slice of each shard
+    (``repro/kernels/fused_agg.py``, DESIGN.md §12; the GLA publishes a
+    ``FusedSpec``, so the engine prefers the fused kernel over the legacy
+    ``ops.group_agg`` one-hot batcher).
 
 Reported per variant: warm wall time (interleaved min-of-repeats, so load
 drift cannot masquerade as speedup) and the dispatch structure extracted
 from the optimized HLO by ``repro/analysis/hlo_cost.py::count_ops``:
 
-  * ``hlo_while_loops``          — on the kernel path every remaining while
-    op is an interpret-mode Pallas grid loop; asserted == partitions ×
-    rounds: one dispatch per round-slice (``kernel_dispatches``).
+  * ``hlo_while_loops``          — on the kernel path: interpret-mode
+    Pallas grid loops plus the in-kernel segment_sums' scatter expansions
+    (reported, not asserted — the one-dispatch-per-round-slice claim is
+    certified at trace time by the ``fused_single_dispatch`` catalog
+    check instead, DESIGN.md §12).
   * ``scatter_item_updates``     — trip-scaled ``dynamic-update-slice``
     count: the per-item scatter traffic of the expanded segment_sums.
   * ``hlo_flops``                — loop-aware HLO flops (the kernel path's
@@ -125,20 +129,18 @@ def run(out=sys.stdout, rows=ROWS):
     # (Pallas grid -> while loop, segment_sum -> scatter-expanded updates);
     # TPU and GPU lower both differently (custom-calls / native scatter),
     # so report without asserting there.
-    # catalog check single_kernel_dispatch: on the kernel path no scan
-    # loops remain — every while op in the optimized HLO is a Pallas grid
-    # loop, exactly one dispatch per (partition, round-slice).  Skips
-    # (reports unverified) off CPU, where the lowering differs.
-    disp = audit.check_kernel_dispatch(
-        compiled["kernel"].as_text(), dispatches=P * ROUNDS,
-        where="fused kernel program")
-    if disp.failed:
-        raise AssertionError(str(disp))
-    if disp.passed:
-        # benchmark-specific structure claim, not a catalog invariant:
-        # the kernel path must beat segment_sum's scatter expansion
-        assert counts["kernel"]["scatter_item_updates"] < \
-            counts["round"]["scatter_item_updates"], counts
+    # catalog check fused_single_dispatch: the kernel path is the FUSED
+    # program (DESIGN.md §12), whose in-kernel segment_sums scatter-expand
+    # into extra while loops under interpret mode — an optimized-HLO while
+    # census cannot isolate the Pallas grid loops (the same gap that makes
+    # the legacy single_kernel_dispatch check skip on fused plans).
+    # Certify the dispatch structure the way the catalog does instead:
+    # trace-time pallas_call accounting, exactly ONE fused dispatch per
+    # (partition, round-slice); the HLO while/scatter counts above are
+    # reported as backend-lowering diagnostics, not asserted.
+    audit.audit_plan(g, shards, rounds=ROUNDS, emit="kernel",
+                     checks=("fused_single_dispatch",),
+                     raise_on_failure=True)
 
     scen = {"rows": rows, "partitions": P, "chunks": C, "chunk_len": L,
             "rounds": ROUNDS, "raw_groups": tpch.Q1_LARGE_SUPPLIERS,
@@ -151,7 +153,8 @@ def run(out=sys.stdout, rows=ROWS):
            {**scen, **counts["kernel"],
             "kernel_dispatches": P * ROUNDS,
             "dispatches_per_round_slice": 1,
-            "dispatch_counts_hlo_verified": disp.passed,
+            "dispatch_counts_hlo_verified": False,
+            "dispatch_counts_trace_verified": True,
             "kernel_vs_segment_sum_wall":
                 f"{best['round'] / best['kernel']:.2f}x",
             "finals_bitwise_identical": bool(bitwise)})

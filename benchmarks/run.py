@@ -19,6 +19,9 @@ Sections:
   * streaming    — out-of-core chunk sources vs in-memory: steady-state
                    throughput + the O(slice) transfer certificate
                    (DESIGN.md §8)
+  * deepola      — fused two-table joins (probe tables in-kernel) vs the
+                   legacy kernel batcher vs the scan path, plus nested
+                   GROUP BY + HAVING time-to-ε (DESIGN.md §13)
   * convergence  — paper Figs. 1–3 (relative CI width curves)
   * roofline     — §Roofline table from the dry-run artifacts (if present)
 
@@ -125,6 +128,13 @@ def main(argv=None):
         fused.run(rows=fused.SMOKE_ROWS, repeats=2)
     else:
         fused.run()
+
+    print("# === deepola (fused joins + nested aggregates, DESIGN.md §13) ===")
+    from benchmarks import deepola
+    if smoke:
+        deepola.run(rows=deepola.SMOKE_ROWS, repeats=2)
+    else:
+        deepola.run()
 
     print("# === serve (shared-scan OLA service, DESIGN.md §11) ===")
     from benchmarks import serve

@@ -29,6 +29,7 @@ BUCKET_BITS = tpch.Q1_LARGE_BUCKET_BITS  # folded into 2**13 hash buckets
 
 def main():
     cols = tpch.generate_lineitem(ROWS, seed=5, num_suppliers=SUPPLIERS)
+    cols["orderkey"] = tpch.generate_orders_fk(ROWS, seed=5)
     parts = randomize.randomize_global(
         {k: jnp.asarray(v) for k, v in cols.items()}, jax.random.key(3),
         PARTS)
@@ -178,6 +179,77 @@ def main():
     nz = int(np.count_nonzero(deb[:, 0] != 0.0))
     print(f"  de-bucketed table: {nz}/{SUPPLIERS} suppliers in non-empty "
           f"buckets, top bucket sum_qty={float(deb[:, 0].max()):.1f}")
+
+    # Deep OLA (DESIGN.md §13): the composable plan-tree face of the same
+    # engine.  A Q3-class two-table join (lineitem ⋈ orders, grouped by
+    # the probed market segment) built as Scan→Filter→Join→GroupAgg runs
+    # on the fused single-dispatch kernel — the probe tables ride into the
+    # Pallas kernel as operands — bitwise-identical to the scan path.
+    print("\n=== Deep OLA: Q3-class fused join (plan tree, emit='kernel') ===")
+    segment, o_valid = tpch.orders_table(max(1, ROWS // 4), seed=12)
+    join_tree = repro.GroupAgg(
+        repro.Join(repro.Filter(repro.Scan(float(ROWS)), tpch.q1_cond),
+                   lambda c: c["orderkey"], segment, o_valid),
+        tpch.q6_func, num_groups=tpch.NUM_SEGMENTS)
+    jspec = repro.QuerySpec(join_tree, rounds=rounds)
+    a = repro.run_query(jspec.with_(emit="chunk"), shards)
+    t0 = time.perf_counter()
+    b = repro.run_query(jspec.with_(emit="kernel"), shards)
+    jax.block_until_ready(b.final)
+    dt = time.perf_counter() - t0
+    identical = (np.asarray(a.final).tobytes() == np.asarray(b.final).tobytes()
+                 and all(np.asarray(x).tobytes() == np.asarray(y).tobytes()
+                         for x, y in zip(jax.tree.leaves(a.snapshots),
+                                         jax.tree.leaves(b.snapshots))))
+    seg_sums = np.asarray(b.final).squeeze()
+    print(f"  fused join {dt:6.2f}s  per-segment revenue: "
+          + " ".join(f"{x:.0f}" for x in seg_sums))
+    print(f"  kernel path bitwise identical to scan path: {identical}")
+    assert identical, "fused join diverged from the scan path"
+
+    # Nested aggregate: SUM over the segments whose *estimated* revenue
+    # passes a HAVING threshold — the bounds can widen transiently when
+    # the predicate flips a segment, so the UI-facing envelope is the
+    # running intersection (repro.monotone_envelope): finite and
+    # monotonically tightening by construction.
+    print("\n=== Deep OLA: nested GROUP BY + HAVING, monotone envelope ===")
+    having_tree = repro.Having(join_tree, threshold=float(seg_sums.mean()))
+    res = repro.run_query(repro.QuerySpec(having_tree, rounds=rounds), shards)
+    lo = np.asarray(res.estimates.lower, np.float64)
+    hi = np.asarray(res.estimates.upper, np.float64)
+    elo, ehi = map(np.asarray, repro.monotone_envelope(lo, hi))
+    widths = ehi - elo
+    print("  raw width by round:      "
+          + " ".join(f"{x:.0f}" for x in (hi - lo)))
+    print("  envelope width by round: "
+          + " ".join(f"{x:.0f}" for x in widths))
+    assert np.isfinite(widths).all(), "nested bounds must stay finite"
+    assert (np.diff(widths) <= 1e-6).all(), "envelope must only tighten"
+
+    # Sketch GLAs behind the same interface: COUNT DISTINCT (HLL-style
+    # max monoid) and a median (additive DKW histogram), as plan trees.
+    print("\n=== sketch GLAs: COUNT DISTINCT + median, same scan core ===")
+    distinct_tree = repro.CountDistinct(repro.Scan(float(ROWS)),
+                                        lambda c: c["suppkey"])
+    res_d = repro.run_query(repro.QuerySpec(distinct_tree, rounds=rounds),
+                            shards)
+    exact_d = int(np.unique(np.asarray(cols["suppkey"])).size)
+    est_d = float(res_d.final)
+    print(f"  COUNT(DISTINCT suppkey): est {est_d:.0f} vs exact {exact_d} "
+          f"({abs(est_d - exact_d) / exact_d:.2%} error)")
+    assert abs(est_d - exact_d) / exact_d < 0.1
+    qmax = float(np.asarray(cols["quantity"]).max())
+    median_tree = repro.Quantile(repro.Scan(float(ROWS)),
+                                 lambda c: c["quantity"], lo=0.0,
+                                 hi=qmax + 1.0)
+    res_q = repro.run_query(repro.QuerySpec(median_tree, rounds=rounds),
+                            shards)
+    exact_q = float(np.median(np.asarray(cols["quantity"])))
+    q_lo = float(np.asarray(res_q.estimates.lower)[-1])
+    q_hi = float(np.asarray(res_q.estimates.upper)[-1])
+    print(f"  median(quantity): est {float(res_q.final):.2f} in DKW band "
+          f"[{q_lo:.2f}, {q_hi:.2f}], exact {exact_q:.2f}")
+    assert q_lo <= exact_q <= q_hi, "DKW band must contain the exact median"
 
     # Early termination (DESIGN.md §7): the incremental session driver
     # advances one round-slice at a time and stops the moment the CI meets

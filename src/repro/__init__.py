@@ -29,6 +29,28 @@ _EXPORTS = {
     "make_sum_gla": ("repro.core.gla", "make_sum_gla"),
     "make_groupby_gla": ("repro.core.gla", "make_groupby_gla"),
     "make_join_groupby_gla": ("repro.core.gla", "make_join_groupby_gla"),
+    # Deep OLA composition (DESIGN.md §13)
+    "compose": ("repro.core.gla", "compose"),
+    "make_having_gla": ("repro.core.gla", "make_having_gla"),
+    "monotone_envelope": ("repro.core.estimators", "monotone_envelope"),
+    # sketch GLAs
+    "make_count_distinct_gla": ("repro.core.sketch",
+                                "make_count_distinct_gla"),
+    "make_quantile_gla": ("repro.core.sketch", "make_quantile_gla"),
+    "make_heavy_hitters_gla": ("repro.core.sketch",
+                               "make_heavy_hitters_gla"),
+    # plan trees (lowered by QuerySpec; DESIGN.md §13)
+    "PlanNode": ("repro.core.spec", "PlanNode"),
+    "Scan": ("repro.core.spec", "Scan"),
+    "Filter": ("repro.core.spec", "Filter"),
+    "Join": ("repro.core.spec", "Join"),
+    "SumAgg": ("repro.core.spec", "SumAgg"),
+    "GroupAgg": ("repro.core.spec", "GroupAgg"),
+    "Having": ("repro.core.spec", "Having"),
+    "CountDistinct": ("repro.core.spec", "CountDistinct"),
+    "Quantile": ("repro.core.spec", "Quantile"),
+    "HeavyHitters": ("repro.core.spec", "HeavyHitters"),
+    "lower_plan": ("repro.core.spec", "lower_plan"),
     # plans and execution
     "QuerySpec": ("repro.core.spec", "QuerySpec"),
     "run_query": ("repro.core.engine", "run_query"),
@@ -76,13 +98,19 @@ def __dir__():
 
 if TYPE_CHECKING:  # static-analysis view of the lazy table
     from repro.core.engine import QueryResult, run_queries, run_query
-    from repro.core.gla import (GLABundle, SlotFamily, SlotQuery,
-                                make_groupby_gla, make_join_groupby_gla,
-                                make_sum_gla)
+    from repro.core.estimators import monotone_envelope
+    from repro.core.gla import (GLABundle, SlotFamily, SlotQuery, compose,
+                                make_groupby_gla, make_having_gla,
+                                make_join_groupby_gla, make_sum_gla)
     from repro.core.session import (FaultPolicy, RoundProgress, Session,
                                     abs_width, all_of, any_of, budget,
                                     rel_width, resume)
-    from repro.core.spec import QuerySpec
+    from repro.core.sketch import (make_count_distinct_gla,
+                                   make_heavy_hitters_gla,
+                                   make_quantile_gla)
+    from repro.core.spec import (CountDistinct, Filter, GroupAgg, Having,
+                                 HeavyHitters, Join, PlanNode, Quantile,
+                                 QuerySpec, Scan, SumAgg, lower_plan)
     from repro.core.uda import GLA, Estimate
     from repro.data.source import ChunkSource, as_source
     from repro.serving.service import OLAService, SharedScan

@@ -601,15 +601,22 @@ def _audit_fused_dispatch(p: _Plan) -> CheckResult:
             lambda s, sl: SC.fused_round_step(p.gla, s, sl, p.encodings),
             st, one)
     n = box[0]
+    # join plans ship replicated probe tables as extra kernel operands —
+    # report their VMEM residency against the kernel's budget
+    pbytes = FK.probe_bytes(p.gla)
     data = {"dispatches": n, "expected": 1, "encoded_cols":
-            [name for name, _ in p.encodings]}
+            [name for name, _ in p.encodings],
+            "probe_bytes": pbytes,
+            "probe_budget_bytes": FK.PROBE_VMEM_BUDGET_BYTES}
     if n == 1:
         k = len(getattr(p.gla, "members", ()) or ()) or 1
+        probe = (f", {pbytes}B of join probe tables in-kernel"
+                 if pbytes else "")
         return CheckResult(
             "fused_single_dispatch", "pass",
             f"one pallas_call per (partition, round-slice) covers "
             f"{k} member(s), predicate, bucketing and "
-            f"{len(p.encodings)} in-kernel decode(s)", data)
+            f"{len(p.encodings)} in-kernel decode(s){probe}", data)
     return CheckResult(
         "fused_single_dispatch", "fail",
         f"fused round-slice step issued {n} Pallas dispatches, expected "
@@ -876,6 +883,7 @@ def _smoke_data(rows: int, parts: int, chunk: int, rounds: int):
     from repro.data import tpch
 
     cols = tpch.generate_lineitem(rows, seed=7)
+    cols["orderkey"] = tpch.generate_orders_fk(rows, seed=7)
     shards = randomize.randomize_global(
         {k: jnp.asarray(v) for k, v in cols.items()}, jax.random.key(7),
         parts)
@@ -901,8 +909,14 @@ def _smoke_plans(rows: int):
                               num_aggs=4)
     from repro.core.gla import GLABundle
     bundle = GLABundle([q1, q6])
+    # two-table Q3-class join: the fused kernel must still be ONE dispatch
+    # with the probe tables riding as kernel operands (DESIGN.md §13)
+    segment, valid = tpch.orders_table(max(1, rows // 4), seed=14)
+    q3 = gla.make_join_groupby_gla(
+        tpch.q6_func, tpch.q1_cond, lambda c: c["orderkey"], segment, valid,
+        num_groups=tpch.NUM_SEGMENTS, d_total=d)
     return [("q6", q6, "chunk"), ("q1", q1, "kernel"),
-            ("bundle", bundle, "kernel")]
+            ("bundle", bundle, "kernel"), ("q3-join", q3, "kernel")]
 
 
 def main(argv=None) -> int:
@@ -943,7 +957,7 @@ def main(argv=None) -> int:
             "discount": ENCS.dict_encoding_for(np_shards["discount"]),
             "shipdate": ENCS.BitPackedEncoding(bits=16),
             "rfls": ENCS.BitPackedEncoding(bits=2)})
-        bundle = plans[-1][1]
+        bundle = dict((n, g) for n, g, _ in plans)["bundle"]
         report = audit_plan(bundle, esrc, rounds=args.rounds, emit="kernel",
                             mesh=mesh, checks=ALL_CHECKS)
         print(report.summary())

@@ -45,6 +45,11 @@ Rules (DESIGN.md §10 documents each with rationale):
         plans are spelled as ``QuerySpec`` (repro/core/spec.py).  Applies
         to ``src``, ``benchmarks`` and ``examples``; ``tests`` are exempt
         — the compat shim itself is under test there.
+  C010  Every ``PlanNode`` subclass (repro/core/spec.py plan trees) must
+        declare its ``monoid`` and ``estimator`` class attributes — the
+        merge-monoid / estimator pairing is the lowering contract
+        (DESIGN.md §13): a node without them would lower to a GLA whose
+        merge algebra is undocumented and unauditable.
 
 Exit status: 0 when clean, 1 with one ``path:line: CODE message`` line per
 violation on stdout.
@@ -414,6 +419,52 @@ def _check_envelope(tree: ast.Module, path: str,
 
 
 # ---------------------------------------------------------------------------
+# C010 — PlanNode monoid/estimator declarations
+# ---------------------------------------------------------------------------
+
+def _check_plan_nodes(tree: ast.Module, path: str,
+                      out: List[Violation]) -> None:
+    """Every class deriving (transitively, within the file) from PlanNode
+    must declare ``monoid`` and ``estimator`` class attributes.  The base
+    class itself is exempt — it defines the defaults the rule demands
+    subclasses override deliberately."""
+    classes: Dict[str, ast.ClassDef] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            classes[node.name] = node
+
+    def derives(node: ast.ClassDef, seen: frozenset = frozenset()) -> bool:
+        for b in node.bases:
+            leaf = _dotted(b).split(".")[-1]
+            if leaf == "PlanNode":
+                return True
+            if leaf in classes and leaf not in seen and derives(
+                    classes[leaf], seen | {leaf}):
+                return True
+        return False
+
+    for name, node in classes.items():
+        if name == "PlanNode" or not derives(node):
+            continue
+        defined: Set[str] = set()
+        for item in node.body:
+            if isinstance(item, ast.Assign):
+                for t in item.targets:
+                    if isinstance(t, ast.Name):
+                        defined.add(t.id)
+            elif isinstance(item, ast.AnnAssign) and isinstance(
+                    item.target, ast.Name):
+                defined.add(item.target.id)
+        missing = [a for a in ("monoid", "estimator") if a not in defined]
+        if missing:
+            out.append(Violation(
+                path, node.lineno, "C010",
+                f"PlanNode subclass {name} does not declare "
+                f"{' or '.join(missing)} — every plan node states its "
+                "merge monoid and estimator pairing (DESIGN.md §13)"))
+
+
+# ---------------------------------------------------------------------------
 # C009 — deprecated loose plan kwargs in framework code
 # ---------------------------------------------------------------------------
 
@@ -485,6 +536,7 @@ def lint_file(path: Path, root: Path) -> List[Violation]:
                           f"syntax error: {e.msg}")]
     out: List[Violation] = []
     _check_gla(tree, rel, out)
+    _check_plan_nodes(tree, rel, out)
     for suffix, policy in JIT_REGION_FILES.items():
         if rel.replace("\\", "/").endswith(suffix):
             for fn in _jit_functions(tree, policy):
@@ -535,7 +587,7 @@ def iter_py_files(targets: Sequence[str], root: Path) -> Iterable[Path]:
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
-        description="PF-OLA framework-contract linter (rules C001-C009; "
+        description="PF-OLA framework-contract linter (rules C001-C010; "
                     "see DESIGN.md §10)")
     ap.add_argument("targets", nargs="*",
                     default=["src", "tests", "benchmarks", "examples"],

@@ -31,6 +31,12 @@ Execution model (DESIGN.md §2):
     partition dead throughout, [R, P] for a failure-injection schedule; see
     repro/dist/fault.py for the estimator-level consequences (paper §4.6,
     DESIGN.md §4).
+  * *plan trees* (DESIGN.md §13): ``QuerySpec`` lowers ``PlanNode`` trees
+    (scan → filter/join → aggregate/sketch → having) to GLAs before they
+    reach this engine, so every path here — including the fused kernel,
+    whose join probe tables ride as extra Pallas operands — executes
+    composed Deep OLA plans with the same machinery as flat ones.  Classic
+    flat plans lower to one-node trees with bitwise-identical programs.
 """
 from __future__ import annotations
 

@@ -182,3 +182,85 @@ def synchronized_estimate(state: SumState, confidence, *, d_total) -> Estimate:
     the global minimum progress (the barrier) before merging into ``state``.
     """
     return single_estimate(state, confidence, d_total=d_total)
+
+
+# --------------------------------------------------------------------------
+# Deep OLA: nested estimators, join scaling, monotone envelopes
+# (DESIGN.md §13; PAPERS.md 2303.04103 + paper §3.3)
+# --------------------------------------------------------------------------
+
+def join_scale(d_fact, s_fact, d_dim, s_dim):
+    """§3.3 multiplicative join estimator scale: (|R|/|S_R|)·(|T|/|S_T|).
+
+    With the dimension side fully resident (s_dim == d_dim, our probe-table
+    joins) the second factor is exactly 1.0 and the scale degrades to the
+    plain Horvitz–Thompson |R|/|S_R| — which is why resident-dim joins keep
+    bitwise-identical estimates through the single-table formulas.
+    """
+    fact = d_fact / jnp.maximum(s_fact, 1.0)
+    dim = d_dim / jnp.maximum(s_dim, 1.0)
+    return fact * dim
+
+
+def nested_group_estimate(inner: Estimate, having, confidence) -> Estimate:
+    """Deep OLA nested aggregate: SUM over groups whose *estimated* inner
+    aggregate passes a HAVING predicate.
+
+    ``inner`` holds per-group arrays (estimate/lower/upper [G] with
+    info["var"] [G]); ``having`` maps the inner point estimates [G] to a
+    0/1 keep mask [G].  The outer point estimate sums the passing groups'
+    inner estimates; its variance is the sum of the passing groups' inner
+    variances (independent-strata composition — each group's state is
+    accumulated from disjoint sample rows).
+
+    Variance discipline: a group with |S| <= 1 carries +inf inner variance
+    (``variance_estimate``).  If such a group passes HAVING, the outer
+    variance must go to +inf — *poisoning* the bound, never NaN.  The mask
+    is applied with ``jnp.where`` (0 * inf == NaN under IEEE multiply);
+    the outer point estimate stays finite, so est ∓ inf·zq yields ±inf
+    bounds.
+    """
+    keep = having(inner.estimate).astype(inner.estimate.dtype)
+    var_g = inner.info["var"] if isinstance(inner.info, dict) else inner.info
+    if keep.ndim < inner.estimate.ndim:  # [G] mask over [G, A] estimates
+        keep = keep[..., None]
+    est = jnp.sum(jnp.where(keep > 0, inner.estimate, 0.0), axis=0)
+    var = jnp.sum(jnp.where(keep > 0, var_g, 0.0), axis=0)
+    if est.ndim and est.shape[-1] == 1:
+        est, var = est[..., 0], var[..., 0]
+    lo, hi = normal_bounds(est, var, confidence)
+    return Estimate(est, lo, hi,
+                    info={"var": var, "keep": keep, "inner_var": var_g})
+
+
+def monotone_envelope(lower, upper):
+    """Running intersection of per-round confidence intervals.
+
+    OLA UIs want bounds that only tighten; raw per-round CIs can widen
+    transiently when a HAVING predicate flips a group in or out of the
+    outer sum.  Each round's CI holds at the stated confidence, so their
+    running intersection [cummax(lo), cummin(hi)] is a valid (conservative)
+    envelope that is monotonically non-widening by construction.  A round
+    whose CI is disjoint from the intersection so far crosses the running
+    bounds (cummax(lo) > cummin(hi)) — and since the running bounds only
+    drift further apart from there, the envelope FREEZES at the last
+    consistent round: lower stays non-decreasing and upper non-increasing
+    through the contradiction instead of chasing a drifting midpoint
+    (tests/test_deepola.py holds this as a hypothesis property).  Applied
+    post-hoc by examples/tests — never inside the shared runtime, where it
+    would perturb classic plans' published bounds.
+    """
+    lo = jax.lax.cummax(jnp.asarray(lower), axis=0)
+    hi = jax.lax.cummin(jnp.asarray(upper), axis=0)
+    crossed = lo > hi                    # monotone along rounds: a suffix
+    idx = jnp.argmax(crossed, axis=0)    # first contradicting round
+    prev = jnp.maximum(idx - 1, 0)
+    frozen_lo = jnp.take_along_axis(lo, prev[None], axis=0)[0]
+    frozen_hi = jnp.take_along_axis(hi, prev[None], axis=0)[0]
+    # a round-0 contradiction (lower[0] > upper[0]) has nothing to freeze
+    # to — collapse to an empty-width interval at that round's midpoint
+    mid0 = 0.5 * (lo[0] + hi[0])
+    frozen_lo = jnp.where(idx > 0, frozen_lo, mid0)
+    frozen_hi = jnp.where(idx > 0, frozen_hi, mid0)
+    return (jnp.where(crossed, frozen_lo, lo),
+            jnp.where(crossed, frozen_hi, hi))

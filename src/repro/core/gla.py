@@ -31,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import estimators as E
-from repro.core.uda import GLA, Chunk, Estimate, FusedSpec
+from repro.core.uda import GLA, Chunk, Estimate, FusedSpec, ProbeTable
 
 
 def _as_2d(vals: jnp.ndarray) -> jnp.ndarray:
@@ -437,6 +437,9 @@ def make_join_groupby_gla(
     estimator: str = "single",
     dtype=jnp.float32,
     num_aggs: int = 1,
+    bucket_bits: Optional[int] = None,
+    d_dim: Optional[float] = None,
+    s_dim: Optional[float] = None,
 ) -> GLA:
     """Join group-by — paper query (6), M replicated and hashed in memory.
 
@@ -445,6 +448,23 @@ def make_join_groupby_gla(
     Per the paper, H is built by the user application during Init (query
     setup) and shipped with the query — here it is a replicated closure
     constant.  Accumulate = hash-probe (gather) + GLAGroupBy accumulate.
+
+    Fused path: the probe arrays additionally ride as
+    ``FusedSpec.probe_tables`` (:class:`repro.core.uda.ProbeTable`) — extra
+    ``pallas_call`` operands the kernel injects into the in-kernel chunk
+    dict — so Q3/Q10-class two-table queries run the one-dispatch fused
+    kernel with the gather *inside* the VMEM residency, bitwise-identical
+    to this scan path (the kernel closures repeat the gather expression
+    trees below verbatim against the same arrays).  Oversized dimension
+    tables fail the kernel's VMEM probe budget and fall back to the legacy
+    ``kernel_cols`` path automatically (``fused_agg.fused_available``).
+
+    §3.3 multiplicative join estimator: pass ``d_dim`` (dimension-table
+    cardinality) and ``s_dim`` (rows of it sampled so far) to scale the
+    estimate by the dimension-side inverse sampling fraction
+    (``estimators.join_scale``).  With the replicated table fully resident
+    — the default, ``d_dim=None`` — the factor is exactly 1 and the
+    estimate is the unchanged single-table Horvitz–Thompson formula.
     """
     dim_group = jnp.asarray(dim_group, jnp.int32)
     dim_valid = jnp.asarray(dim_valid)
@@ -460,13 +480,117 @@ def make_join_groupby_gla(
     inner = make_groupby_gla(
         func, joined_cond, joined_group,
         num_groups=num_groups, d_total=d_total, estimator=estimator,
-        dtype=dtype, num_aggs=num_aggs,
+        dtype=dtype, num_aggs=num_aggs, bucket_bits=bucket_bits,
     )
-    # no FusedSpec: the probe closures capture the replicated dimension
-    # tables, and Pallas kernel bodies reject captured array constants —
-    # joins stay on the legacy kernel_cols path, whose projection (and
-    # hence the gather) runs outside the kernel (docs/KERNELS.md).
-    return inner.with_(name=f"join-{estimator}", fused=None)
+
+    fused = None
+    if inner.fused is not None:
+        pt_group = ProbeTable("dim_group", dim_group)
+        pt_valid = ProbeTable("dim_valid", dim_valid)
+
+        def fused_group(chunk: Chunk) -> jnp.ndarray:
+            keys = join_key(chunk).astype(jnp.int32)
+            gids = chunk[pt_group.key][keys]
+            if bucket_bits is not None:
+                gids = hash_bucket(gids, bucket_bits)
+            return gids
+
+        def fused_cond(chunk: Chunk) -> jnp.ndarray:
+            keys = join_key(chunk).astype(jnp.int32)
+            return cond(chunk) * chunk[pt_valid.key][keys].astype(
+                cond(chunk).dtype)
+
+        fused = inner.fused._replace(
+            cond=fused_cond, group=fused_group,
+            probe_tables=(pt_group, pt_valid))
+
+    est_fn = inner.estimate
+    if est_fn is not None and d_dim is not None:
+        sd = float(d_dim if s_dim is None else s_dim)
+        scale = jnp.asarray(
+            float(d_dim), dtype) / jnp.maximum(jnp.asarray(sd, dtype), 1.0)
+        inner_estimate = est_fn
+
+        def est_fn(state, confidence, ctx=None):  # noqa: F811
+            e = inner_estimate(state, confidence, ctx)
+            var = e.info["var"] * (scale * scale)
+            est = e.estimate * scale
+            lo, hi = E.normal_bounds(est, var, confidence)
+            return Estimate(est, lo, hi,
+                            info={**e.info, "var": var, "dim_scale": scale})
+
+    return inner.with_(name=f"join-{estimator}", fused=fused,
+                       estimate=est_fn)
+
+
+# ---------------------------------------------------------------------------
+# Deep OLA composition — an outer estimator consuming inner OLA estimates
+# (PAPERS.md 2303.04103; DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def compose(inner: GLA, outer_estimate: Callable[[Estimate, float], Estimate],
+            *, name: Optional[str] = None) -> GLA:
+    """Nest an outer estimator over the inner GLA's *estimate*.
+
+    Execution scaffolding — init/accumulate/merge/terminate, the estimator
+    extensions, kernel contracts, additivity — is the inner GLA's
+    **verbatim**: a composed plan rides every engine path, fused kernel,
+    session, checkpoint envelope, and fault policy exactly as the inner
+    plan does, with bitwise-identical states.  Only ``estimate`` differs:
+    the inner estimate is computed first, then
+    ``outer_estimate(inner_est, confidence)`` maps it to the outer
+    :class:`Estimate` — the Deep OLA pattern where each refinement round
+    re-derives the whole nested answer from the current inner bounds,
+    variance propagated through the nesting
+    (``estimators.nested_group_estimate``).
+    """
+    if inner.estimate is None:
+        raise ValueError(
+            f"compose() needs an inner GLA with an estimation model, "
+            f"got {inner.name!r}")
+    if inner.members:
+        raise ValueError("compose() nests a single GLA, not a bundle — "
+                         "bundle the composed GLAs instead")
+    inner_estimate = inner.estimate
+
+    def estimate(state, confidence, ctx=None) -> Estimate:
+        return outer_estimate(inner_estimate(state, confidence, ctx),
+                              confidence)
+
+    return inner.with_(estimate=estimate,
+                       name=name or f"compose[{inner.name}]")
+
+
+def make_having_gla(inner: GLA, threshold, *, mode: str = ">=",
+                    agg: int = 0, name: Optional[str] = None) -> GLA:
+    """GROUP BY + HAVING over *estimated* aggregates (Deep OLA query shape).
+
+    Sums the inner group-by's per-group estimates over the groups whose
+    inner point estimate (aggregate column ``agg``) passes
+    ``estimate <mode> threshold``, with the outer variance propagated as
+    the sum of passing groups' inner variances — a group at |S| <= 1
+    (+inf inner variance) that passes HAVING poisons the outer bound to
+    ±inf, never NaN (estimators.nested_group_estimate).  ``threshold``
+    may be a traced value (the serving layer passes per-slot thresholds
+    as dynamic jit inputs).  Per-round bounds can widen transiently when
+    the predicate flips a group; apply ``estimators.monotone_envelope``
+    post-hoc for a monotone UI envelope.
+    """
+    cmps = {">=": lambda v, t: v >= t, ">": lambda v, t: v > t,
+            "<=": lambda v, t: v <= t, "<": lambda v, t: v < t}
+    if mode not in cmps:
+        raise ValueError(f"unknown HAVING mode {mode!r}")
+    cmp = cmps[mode]
+
+    def having(est_g):
+        v = est_g[:, agg] if est_g.ndim == 2 else est_g
+        return cmp(v, threshold)
+
+    def outer(inner_est: Estimate, confidence) -> Estimate:
+        return E.nested_group_estimate(inner_est, having, confidence)
+
+    return compose(inner, outer,
+                   name=name or f"having[{inner.name}{mode}{threshold!r}]")
 
 
 # ---------------------------------------------------------------------------
@@ -506,26 +630,37 @@ class SlotQuery(NamedTuple):
     """One query expressible in a :class:`SlotFamily`.
 
     ``SUM(exprs[expr](d)) WHERE AND_j lo_j <= pred_col_j(d) < hi_j
-    [GROUP BY group]`` — ``ranges`` maps predicate column -> (lo, hi)
-    half-open; columns not named are unconstrained.  ``group`` names one
-    of the family's group keys (None = scalar aggregate).
+    [GROUP BY group [HAVING est >= having]]`` — ``ranges`` maps predicate
+    column -> (lo, hi) half-open; columns not named are unconstrained.
+    ``group`` names one of the family's group keys (None = scalar
+    aggregate).  ``having`` (requires ``group``) nests the Deep OLA
+    HAVING estimator over the group estimates: the slot reports the SUM
+    over groups whose estimated aggregate is >= the threshold
+    (``gla.make_having_gla``); the threshold is a *dynamic* slot
+    parameter, so arrivals with different thresholds share one compiled
+    step.
     """
 
     expr: str
     ranges: Mapping[str, Tuple[float, float]] = {}
     group: Optional[str] = None
+    having: Optional[float] = None
 
 
 class SlotParams(NamedTuple):
     """Dynamic per-slot parameters of one bank — jit INPUTS, never
     statics.  Leaves are [K] / [K, n_pred] with K the bank's power-of-two
     slot capacity; inactive slots carry the empty range (lo=+inf,
-    hi=-inf), so their predicate weight is exactly 0 on every tuple."""
+    hi=-inf), so their predicate weight is exactly 0 on every tuple.
+    ``hv`` is the per-slot HAVING threshold (having banks only; +inf on
+    inactive slots, so no group passes and the nested estimate is an
+    exact 0 ± 0)."""
 
     expr: jnp.ndarray   # int32 [K] — row into the family's expression basis
     lo: jnp.ndarray     # float32 [K, n_pred]
     hi: jnp.ndarray     # float32 [K, n_pred]
     fresh: jnp.ndarray  # bool [K] — reclaim: reset the slot's carry first
+    hv: Optional[jnp.ndarray] = None  # float32 [K] — HAVING thresholds
 
 
 def _range_cond(pred_cols: Tuple[str, ...], lo, hi):
@@ -575,10 +710,18 @@ class SlotFamily:
     # -- host-side parameter rows -------------------------------------------
 
     def bank_of(self, q: SlotQuery) -> str:
-        """The bank a query lands in: its group key, or "scalar"."""
+        """The bank a query lands in: its group key, "scalar", or — for
+        nested HAVING queries — ``"<group>:having"`` (tree-shaped members
+        need their own compiled step: same states, different estimate)."""
         if q.group is not None and q.group not in self.groups:
             raise KeyError(f"unknown group key {q.group!r}; family has "
                            f"{sorted(self.groups)}")
+        if q.having is not None:
+            if q.group is None:
+                raise ValueError(
+                    "SlotQuery.having needs a group key — HAVING nests "
+                    "over per-group estimates")
+            return f"{q.group}:having"
         return q.group if q.group is not None else "scalar"
 
     def slot_row(self, q: SlotQuery):
@@ -620,12 +763,20 @@ class SlotFamily:
 
         return func
 
-    def _member_gla(self, bank: str, func, cond, d_total) -> GLA:
+    def _member_gla(self, bank: str, func, cond, d_total, hv=None) -> GLA:
         if bank == "scalar":
             return make_sum_gla(func, cond, d_total=d_total)
-        gfn, G = self.groups[bank]
-        return make_groupby_gla(func, cond, gfn, num_groups=G,
-                                d_total=d_total)
+        base, _, nested = bank.partition(":")
+        gfn, G = self.groups[base]
+        inner = make_groupby_gla(func, cond, gfn, num_groups=G,
+                                 d_total=d_total)
+        if nested != "having":
+            return inner
+        # tree-shaped member: the slot's state IS the group-by state; only
+        # the estimate nests (gla.compose), so carries, reclaim, and the
+        # psum merge are the group bank's unchanged.  The (possibly
+        # traced) threshold stays out of the static name.
+        return make_having_gla(inner, hv, name=f"having[{base}]")
 
     def solo_gla(self, q: SlotQuery, *, d_total: float) -> GLA:
         """The stand-alone GLA of one slot query — what a fresh Session
@@ -634,8 +785,9 @@ class SlotFamily:
         is the bitwise reference for late-join tests."""
         expr_idx, lo, hi = self.slot_row(q)
         cond = _range_cond(self.pred_cols, lo, hi)
+        hv = None if q.having is None else jnp.float32(q.having)
         return self._member_gla(self.bank_of(q), self._expr_fns[expr_idx],
-                                cond, d_total)
+                                cond, d_total, hv)
 
     def bind(self, bank: str, params: SlotParams, d_total) -> GLA:
         """The K-slot bundle GLA of one bank, closed over (traced) params.
@@ -651,7 +803,8 @@ class SlotFamily:
         for k in range(K):
             func = self._select_func(params.expr[k])
             cond = _range_cond(self.pred_cols, params.lo[k], params.hi[k])
-            members.append(self._member_gla(bank, func, cond, d_total))
+            hv = None if params.hv is None else params.hv[k]
+            members.append(self._member_gla(bank, func, cond, d_total, hv))
         return _combine_members(tuple(members), f"slots-{bank}x{K}")
 
     def zero_slot_state(self, bank: str):
@@ -660,7 +813,7 @@ class SlotFamily:
             z = jnp.zeros((1,), jnp.float32)
             s = jnp.zeros((), jnp.float32)
             return E.SumState(sum=z, sumsq=z, scanned=s, matched=s)
-        _, G = self.groups[bank]
+        _, G = self.groups[bank.partition(":")[0]]
         return E.SumState(
             sum=jnp.zeros((G, 1), jnp.float32),
             sumsq=jnp.zeros((G, 1), jnp.float32),

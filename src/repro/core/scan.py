@@ -488,7 +488,8 @@ def fused_available(gla: GLA, columns=None) -> bool:
     return fused_agg.fused_available(gla, columns)
 
 
-def fused_round_step(gla: GLA, state, slice_cols: dict, encodings=()):
+def fused_round_step(gla: GLA, state, slice_cols: dict, encodings=(), *,
+                     use_mxu: bool = False):
     """Carry-in fused step for ONE round-slice: (state, slice) -> state.
 
     The per-round-slice primitive behind the ``kernel_fused`` session path.
@@ -497,12 +498,15 @@ def fused_round_step(gla: GLA, state, slice_cols: dict, encodings=()):
     on top, so starting from ``gla.init()`` reproduces the scan-carry
     association exactly from round 0.  ``encodings`` is the source's static
     (name, Encoding) tuple; encoded columns arrive physical and are decoded
-    inside the kernel body.
+    inside the kernel body.  Join GLAs additionally ship their replicated
+    probe tables as extra kernel operands (``FusedSpec.probe_tables``);
+    ``use_mxu`` selects the one-hot matmul group scatter (TPU MXU lowering
+    — re-associates, so allclose rather than bitwise vs the default).
     """
     from repro.kernels import fused_agg
 
     return fused_agg.fused_round_step(
-        gla, state, slice_cols, encodings=encodings)
+        gla, state, slice_cols, encodings=encodings, use_mxu=use_mxu)
 
 
 def fused_rounds_states(gla: GLA, cols: dict, rounds: int, encodings=()):

@@ -34,6 +34,16 @@ the ``shard_map`` path (``repro.dist.shard_engine.session_step_sharded``)
 default): the synchronized barrier and per-partition straggler schedules
 are whole-scan semantics and stay on the fused discipline.
 
+Composed Deep OLA plans (DESIGN.md §13) need nothing special here: a
+``QuerySpec`` built from a ``PlanNode`` tree arrives already lowered to a
+GLA, join GLAs carry their probe tables inside their fused contract (the
+``kernel_fused`` path ships them as extra Pallas operands), and nested
+estimators (GROUP BY + HAVING, ``gla.compose``) only wrap ``estimate`` —
+states, checkpoints and stop rules are the inner plan's verbatim.  Stop
+rules over nested plans see the *outer* bounds, which can widen
+transiently when the HAVING predicate flips a group; pair them with
+``estimators.monotone_envelope`` post-hoc for monotone UI bounds.
+
 Sessions pause and resume across processes: :meth:`Session.pause`
 serializes the per-partition round states plus the scan cursor through
 ``repro.checkpoint.ckpt`` and :meth:`Session.resume` continues from the

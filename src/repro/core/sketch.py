@@ -1,0 +1,305 @@
+"""Sketch-backed GLAs — COUNT DISTINCT, quantiles, heavy hitters.
+
+The PF-OLA thesis is that the GLA interface abstracts *any*
+associative-decomposable aggregate; sketches make that concrete: each
+sketch is "just" a new merge monoid behind the same
+Init/Accumulate/Merge/Estimate surface, so it composes for free with
+bundles, sessions, streaming sources, checkpoints, and (when the monoid
+is additive) the sharded mesh engine.
+
+Three monoids (DESIGN.md §13):
+
+  * :func:`make_count_distinct_gla` — HLL-style leading-zero registers.
+    Merge is elementwise **max** — associative/commutative/idempotent but
+    NOT additive, so this GLA runs on the vmapped engine only
+    (``dist.run_sharded`` lowers merges to a single psum and asserts
+    ``merge_is_additive``; a max-monoid mesh reduction is future work).
+  * :func:`make_quantile_gla` — fixed-bin histogram CDF with
+    Dvoretzky–Kiefer–Wolfowitz bands.  Additive: runs everywhere.
+  * :func:`make_heavy_hitters_gla` — count-min sketch over a candidate id
+    set, Horvitz–Thompson-scaled with the CM overcount bound.  Additive.
+
+Estimation semantics under OLA: each sketch summarizes the rows *scanned
+so far*; estimates converge to the exact full-data answer as the scan
+completes.  COUNT DISTINCT is a lower-bound-style estimator mid-scan
+(distinct values not yet scanned cannot be extrapolated without species
+assumptions); its interval covers sketch error, not sampling error — the
+info dict says how much of the data backs it.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import estimators as E
+from repro.core.gla import _BUCKET_MULT
+from repro.core.uda import GLA, Chunk, Estimate
+
+
+def _mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """32-bit finalizer (xorshift-multiply) over uint32 keys."""
+    h = x.astype(jnp.uint32) * jnp.uint32(_BUCKET_MULT)
+    h = h ^ (h >> 15)
+    h = h * jnp.uint32(0x2C1B3C6D)
+    h = h ^ (h >> 12)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# COUNT DISTINCT — HLL-style max-merge registers
+# ---------------------------------------------------------------------------
+
+class HLLState(NamedTuple):
+    registers: jnp.ndarray  # [m] f32 max leading-zero ranks
+    scanned: jnp.ndarray    # |S| live rows folded in
+
+
+def make_count_distinct_gla(
+    key: Callable[[Chunk], jnp.ndarray],
+    *,
+    d_total: float,
+    log2m: int = 12,
+    cond: Optional[Callable[[Chunk], jnp.ndarray]] = None,
+) -> GLA:
+    """COUNT(DISTINCT key(d)) [WHERE cond(d)] via 2**log2m HLL registers.
+
+    Registers hold the max rank (leading-zero run + 1) of hashed keys per
+    bucket; merge is elementwise max, so duplicate keys — within a chunk,
+    across chunks, across partitions — collapse idempotently.  Standard
+    error is ~1.04/sqrt(m) relative (Flajolet et al.), reported as a
+    normal interval around the bias-corrected estimate with the
+    linear-counting small-range correction.
+    """
+    m = 1 << log2m
+    alpha = 0.7213 / (1.0 + 1.079 / m)  # bias correction, m >= 128
+
+    def init():
+        return HLLState(registers=jnp.zeros((m,), jnp.float32),
+                        scanned=jnp.zeros((), jnp.float32))
+
+    def accumulate(state: HLLState, chunk: Chunk) -> HLLState:
+        w = chunk["_mask"]
+        if cond is not None:
+            w = cond(chunk) * w
+        h = _mix32(key(chunk))
+        bucket = (h & jnp.uint32(m - 1)).astype(jnp.int32)
+        rest = h >> jnp.uint32(log2m)
+        rank = jnp.where(
+            rest == 0,
+            jnp.float32(32 - log2m + 1),
+            jax.lax.clz(rest.astype(jnp.int32)).astype(jnp.float32)
+            - jnp.float32(log2m) + 1.0)
+        rank = rank * w.astype(jnp.float32)  # dead rows rank 0 = no-op
+        regs = jnp.maximum(
+            state.registers,
+            jax.ops.segment_max(rank, bucket, num_segments=m))
+        return HLLState(
+            registers=regs,
+            scanned=state.scanned + jnp.sum(chunk["_mask"].astype(jnp.float32)))
+
+    def merge(a: HLLState, b: HLLState) -> HLLState:
+        return HLLState(registers=jnp.maximum(a.registers, b.registers),
+                        scanned=a.scanned + b.scanned)
+
+    def terminate(state: HLLState):
+        return _hll_point(state.registers)
+
+    def _hll_point(regs):
+        raw = alpha * m * m / jnp.sum(jnp.exp2(-regs))
+        zeros = jnp.sum((regs == 0).astype(jnp.float32))
+        linear = m * jnp.log(m / jnp.maximum(zeros, 1.0))
+        return jnp.where((raw <= 2.5 * m) & (zeros > 0), linear, raw)
+
+    def estimate(state: HLLState, confidence, ctx=None) -> Estimate:
+        est = _hll_point(state.registers)
+        rel = 1.04 / jnp.sqrt(jnp.float32(m))
+        half = E.zq(confidence) * rel * est
+        frac = state.scanned / jnp.maximum(jnp.float32(d_total), 1.0)
+        return Estimate(est, est - half, est + half,
+                        info={"rel_err": rel, "frac": frac})
+
+    return GLA(init=init, accumulate=accumulate, merge=merge,
+               terminate=terminate, estimate=estimate,
+               merge_is_additive=False,  # max monoid: vmapped engine only
+               name=f"hll-distinct-m{m}")
+
+
+# ---------------------------------------------------------------------------
+# Quantiles — fixed-bin histogram CDF with DKW bands (additive)
+# ---------------------------------------------------------------------------
+
+class HistState(NamedTuple):
+    counts: jnp.ndarray   # [bins] f32 in-range predicate-matching rows
+    scanned: jnp.ndarray
+    matched: jnp.ndarray
+
+
+def make_quantile_gla(
+    value: Callable[[Chunk], jnp.ndarray],
+    *,
+    lo: float,
+    hi: float,
+    d_total: float,
+    bins: int = 256,
+    q: float = 0.5,
+    cond: Optional[Callable[[Chunk], jnp.ndarray]] = None,
+) -> GLA:
+    """q-quantile of value(d) [WHERE cond(d)] over a known range [lo, hi).
+
+    The histogram CDF is an empirical distribution over the sample scanned
+    so far; the DKW inequality bounds sup|F_n - F| by
+    sqrt(ln(2/(1-conf)) / (2 n)), so the interval is the value-space span
+    of the (q ± eps)-quantiles plus one bin of discretization.  Counts are
+    additive — this monoid runs on both engines and under psum merges.
+    """
+    B = int(bins)
+    width = (float(hi) - float(lo)) / B
+    edges = jnp.float32(lo) + width * jnp.arange(B + 1, dtype=jnp.float32)
+
+    def init():
+        z = jnp.zeros((), jnp.float32)
+        return HistState(counts=jnp.zeros((B,), jnp.float32),
+                         scanned=z, matched=z)
+
+    def accumulate(state: HistState, chunk: Chunk) -> HistState:
+        v = value(chunk).astype(jnp.float32)
+        w = chunk["_mask"].astype(jnp.float32)
+        if cond is not None:
+            w = cond(chunk).astype(jnp.float32) * w
+        b = jnp.clip(jnp.floor((v - lo) / width), 0, B - 1).astype(jnp.int32)
+        return HistState(
+            counts=state.counts + jax.ops.segment_sum(w, b, num_segments=B),
+            scanned=state.scanned
+            + jnp.sum(chunk["_mask"].astype(jnp.float32)),
+            matched=state.matched + jnp.sum(w))
+
+    def merge(a, b):
+        return jax.tree.map(jnp.add, a, b)
+
+    def _quantile_value(cdf, p):
+        # first bin upper edge where the CDF reaches p (conservative)
+        idx = jnp.sum((cdf < p).astype(jnp.int32))
+        return edges[jnp.clip(idx, 0, B)]
+
+    def terminate(state: HistState):
+        cdf = jnp.cumsum(state.counts) / jnp.maximum(state.matched, 1.0)
+        return _quantile_value(cdf, q)
+
+    def estimate(state: HistState, confidence, ctx=None) -> Estimate:
+        n = state.matched
+        cdf = jnp.cumsum(state.counts) / jnp.maximum(n, 1.0)
+        conf = jnp.asarray(confidence, jnp.float32)
+        eps = jnp.sqrt(
+            jnp.log(2.0 / jnp.maximum(1.0 - conf, 1e-9))
+            / (2.0 * jnp.maximum(n, 1.0)))
+        est = _quantile_value(cdf, q)
+        # _quantile_value returns the crossing bin's LOWER edge; the true
+        # quantile sits anywhere inside that bin, so both band edges get
+        # the one-bin discretization margin (a point mass exactly on a
+        # bin boundary otherwise escapes the upper bound)
+        lo_v = _quantile_value(cdf, q - eps) - width
+        hi_v = _quantile_value(cdf, q + eps) + width
+        # n == 0: no order statistics at all — poison to the full range
+        lo_v = jnp.where(n > 0, lo_v, -jnp.inf)
+        hi_v = jnp.where(n > 0, hi_v, jnp.inf)
+        frac = state.scanned / jnp.maximum(jnp.float32(d_total), 1.0)
+        return Estimate(est, lo_v, hi_v, info={"eps": eps, "frac": frac})
+
+    return GLA(init=init, accumulate=accumulate, merge=merge,
+               terminate=terminate, estimate=estimate,
+               merge_is_additive=True, name=f"quantile-q{q}-b{B}")
+
+
+# ---------------------------------------------------------------------------
+# Heavy hitters — count-min sketch over candidate ids (additive)
+# ---------------------------------------------------------------------------
+
+class CMSState(NamedTuple):
+    table: jnp.ndarray    # [depth, width] f32 hashed counts
+    scanned: jnp.ndarray
+    matched: jnp.ndarray
+
+
+# distinct odd multipliers per CMS row (pairwise-independent enough for the
+# standard CM overcount guarantee at small depth)
+_CMS_MULTS = (2654435761, 2246822519, 3266489917, 668265263, 374761393)
+
+
+def make_heavy_hitters_gla(
+    key: Callable[[Chunk], jnp.ndarray],
+    candidates,
+    *,
+    d_total: float,
+    width: int = 1024,
+    depth: int = 4,
+    cond: Optional[Callable[[Chunk], jnp.ndarray]] = None,
+) -> GLA:
+    """Per-candidate frequency estimates via a count-min sketch.
+
+    ``candidates`` is the static id array to report (the heavy-hitter
+    shortlist).  Each CMS cell overcounts by at most e/width of the total
+    mass w.h.p.; the reported interval is the HT-scaled min-row count
+    minus that overcount (lower) to the HT-scaled min-row count plus the
+    sampling half-width (upper).  Counts are additive — both engines.
+    """
+    W, D = int(width), int(depth)
+    if D > len(_CMS_MULTS):
+        raise ValueError(f"depth <= {len(_CMS_MULTS)} supported")
+    cand = jnp.asarray(candidates).astype(jnp.uint32)
+
+    def _buckets(k):
+        return tuple(
+            ((k.astype(jnp.uint32) * jnp.uint32(_CMS_MULTS[d])
+              ^ (k.astype(jnp.uint32) >> 16)) & jnp.uint32(W - 1))
+            .astype(jnp.int32) for d in range(D))
+
+    def init():
+        z = jnp.zeros((), jnp.float32)
+        return CMSState(table=jnp.zeros((D, W), jnp.float32),
+                        scanned=z, matched=z)
+
+    def accumulate(state: CMSState, chunk: Chunk) -> CMSState:
+        w = chunk["_mask"].astype(jnp.float32)
+        if cond is not None:
+            w = cond(chunk).astype(jnp.float32) * w
+        ks = key(chunk)
+        rows = [jax.ops.segment_sum(w, b, num_segments=W)
+                for b in _buckets(ks)]
+        return CMSState(
+            table=state.table + jnp.stack(rows),
+            scanned=state.scanned
+            + jnp.sum(chunk["_mask"].astype(jnp.float32)),
+            matched=state.matched + jnp.sum(w))
+
+    def merge(a, b):
+        return jax.tree.map(jnp.add, a, b)
+
+    def _counts(table):
+        per_row = jnp.stack(
+            [table[d][b] for d, b in enumerate(_buckets(cand))])  # [D, C]
+        return jnp.min(per_row, axis=0)                           # [C]
+
+    def terminate(state: CMSState):
+        return _counts(state.table)
+
+    def estimate(state: CMSState, confidence, ctx=None) -> Estimate:
+        sample_counts = _counts(state.table)                      # [C]
+        scale = jnp.float32(d_total) / jnp.maximum(state.scanned, 1.0)
+        est = sample_counts * scale
+        overcount = (jnp.e / W) * state.matched * scale
+        # sampling error on a {0,1}-valued count: binomial half-width
+        p = sample_counts / jnp.maximum(state.scanned, 1.0)
+        var = (jnp.float32(d_total)
+               * jnp.maximum(jnp.float32(d_total) - state.scanned, 0.0)
+               * p * jnp.maximum(1.0 - p, 0.0)
+               / jnp.maximum(state.scanned, 1.0))
+        half = E.zq(confidence) * jnp.sqrt(var)
+        frac = state.scanned / jnp.maximum(jnp.float32(d_total), 1.0)
+        return Estimate(est, est - half - overcount, est + half,
+                        info={"overcount": overcount, "frac": frac})
+
+    return GLA(init=init, accumulate=accumulate, merge=merge,
+               terminate=terminate, estimate=estimate,
+               merge_is_additive=True, name=f"cms-hh-w{W}d{D}")

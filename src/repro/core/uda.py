@@ -47,6 +47,40 @@ class Estimate(NamedTuple):
     info: Any = None
 
 
+class ProbeTable:
+    """A small device-resident side table threaded into the fused kernel.
+
+    Join probe arrays (dimension-table group ids, validity masks) cannot be
+    captured by a Pallas kernel body as closure constants — they must enter
+    ``pallas_call`` as explicit operands.  A ProbeTable wraps the array with
+    a process-unique ``key``; the fused kernel injects the array into the
+    in-kernel column dict under that key (docs/KERNELS.md rule 9), so FusedSpec
+    closures gather from ``chunk[pt.key]`` exactly as the scan path gathers
+    from the closed-over array — identical expression trees, bitwise results.
+
+    Identity semantics on purpose: the GLA holding this spec is a *static*
+    jit argument, so ProbeTable keeps ``object.__hash__`` / ``__eq__``
+    (arrays are unhashable; value-hashing would defeat jit caching anyway).
+    """
+
+    _ids = 0
+
+    def __init__(self, name: str, values):
+        ProbeTable._ids += 1
+        self.name = name
+        self.values = values
+        self.key = f"__probe{ProbeTable._ids}_{name}"
+
+    @property
+    def nbytes(self) -> int:
+        v = self.values
+        return int(v.size) * int(v.dtype.itemsize)
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        v = self.values
+        return f"ProbeTable({self.name}, shape={tuple(v.shape)}, {v.dtype})"
+
+
 class FusedSpec(NamedTuple):
     """Contract for the fused selection→bucket→aggregate Pallas kernel
     (``repro.kernels.fused_agg``, DESIGN.md §12, docs/KERNELS.md).
@@ -65,6 +99,11 @@ class FusedSpec(NamedTuple):
              SumState contract
       num_aggs:   A (padded to a multiple of 8 inside the kernel)
       num_groups: G (padded to a multiple of 128), or None for scalar
+      probe_tables: ProbeTables threaded into the kernel as extra operands;
+             closures read them via ``chunk[pt.key]``.  Their combined bytes
+             are checked against the kernel's VMEM probe budget by
+             ``fused_agg.fused_available`` (oversized joins fall back to the
+             legacy ``kernel_cols`` path).
     """
 
     func: Callable[[Chunk], Any]
@@ -72,6 +111,7 @@ class FusedSpec(NamedTuple):
     group: Optional[Callable[[Chunk], Any]]
     num_aggs: int
     num_groups: Optional[int] = None
+    probe_tables: tuple = ()
 
 
 def _identity(state: State, ctx: Optional[dict] = None) -> State:

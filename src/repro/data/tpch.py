@@ -130,6 +130,87 @@ def q1_large_scenario(rows: int, *, num_suppliers: int = Q1_LARGE_SUPPLIERS,
     return cols, g
 
 
+# --- two-table Q3/Q10-class join scenarios ---------------------------------
+#
+# lineitem ⋈ orders on orderkey, group by an orders-side attribute with an
+# orders-side date predicate — the TPC-H Q3/Q10 family shape.  The orders
+# dimension is replicated + pre-joined in memory (paper §5.4), so it rides
+# the fused kernel as ProbeTable operands (DESIGN.md §13).
+
+NUM_SEGMENTS = 5        # dbgen c_mktsegment / o_orderpriority-scale domain
+Q3_DATE_CUTOFFS = (430, 2100)   # orders-side o_orderdate window
+
+def generate_orders_fk(rows: int, *, num_orders: int | None = None,
+                       seed: int = 7) -> np.ndarray:
+    """The lineitem-side foreign key l_orderkey, int32 [rows].
+
+    Generated separately so :func:`generate_lineitem` stays byte-stable
+    for every existing scenario; callers add it as ``cols["orderkey"]``.
+    """
+    num_orders = num_orders or max(1, rows // 4)
+    rng = np.random.default_rng(seed + 101)
+    return rng.integers(0, num_orders, rows, dtype=np.int32)
+
+
+def orders_table(num_orders: int, seed: int = 13, *,
+                 date_window=Q3_DATE_CUTOFFS):
+    """Replicated orders dimension: orderkey -> (segment group, validity).
+
+    ``segment`` plays c_mktsegment (Q3) / n_name (Q10); ``valid`` is the
+    orders-side date predicate cond_M(M.sAtts), evaluated once at build
+    time exactly like supplier ⋈ nation pre-joining (paper §5.4).
+    """
+    rng = np.random.default_rng(seed)
+    segment = rng.integers(0, NUM_SEGMENTS, num_orders).astype(np.int32)
+    orderdate = rng.integers(0, DAYS, num_orders).astype(np.int32)
+    lo, hi = date_window
+    valid = ((orderdate >= lo) & (orderdate < hi)).astype(np.float32)
+    return segment, valid
+
+
+def q3_scenario(rows: int, *, num_orders: int | None = None, seed: int = 7,
+                estimator: str = "single"):
+    """Q3-class join: SUM(revenue) per order segment, orders date-windowed.
+
+    Returns ``(cols, gla, dim)`` with ``dim = (segment, valid)``; the GLA
+    publishes a fused projection whose probe tables are the dim arrays, so
+    it runs the one-dispatch fused kernel on both engines.
+    """
+    from repro.core import gla as _gla  # local: data must not require core
+
+    cols = generate_lineitem(rows, seed=seed)
+    cols["orderkey"] = generate_orders_fk(rows, num_orders=num_orders,
+                                          seed=seed)
+    n_orders = num_orders or max(1, rows // 4)
+    segment, valid = orders_table(n_orders, seed=seed + 7)
+    g = _gla.make_join_groupby_gla(
+        q6_func, q1_cond, lambda c: c["orderkey"], segment, valid,
+        num_groups=NUM_SEGMENTS, d_total=float(rows), estimator=estimator)
+    return cols, g, (segment, valid)
+
+
+def q10_scenario(rows: int, *, num_orders: int | None = None, seed: int = 7,
+                 estimator: str = "single"):
+    """Q10-class join: the four Q1 SUM aggregates per order segment.
+
+    Same two-table shape as Q3 with a wider aggregate block ([G, 4]
+    states) — exercises the fused kernel's A-axis padding under join
+    probes.  Returns ``(cols, gla, dim)``.
+    """
+    from repro.core import gla as _gla
+
+    cols = generate_lineitem(rows, seed=seed)
+    cols["orderkey"] = generate_orders_fk(rows, num_orders=num_orders,
+                                          seed=seed)
+    n_orders = num_orders or max(1, rows // 4)
+    segment, valid = orders_table(n_orders, seed=seed + 7)
+    g = _gla.make_join_groupby_gla(
+        q1_func, q1_cond, lambda c: c["orderkey"], segment, valid,
+        num_groups=NUM_SEGMENTS, d_total=float(rows), estimator=estimator,
+        num_aggs=4)
+    return cols, g, (segment, valid)
+
+
 def _exact_batches(cols, batch_rows: int):
     """Yield bounded row-batch chunk dicts (with ``_mask``) from either a
     flat columnar dict or a ``repro.data.source.ChunkSource``.
@@ -167,7 +248,8 @@ def _exact_batches(cols, batch_rows: int):
 
 def exact_answer(cols, func, cond, group=None,
                  num_groups: int | None = None, *,
-                 batch_rows: int = 1 << 18):
+                 batch_rows: int = 1 << 18,
+                 join_key=None, dim_group=None, dim_valid=None):
     """Ground truth in float64 (the oracle for all correctness tests).
 
     ``cols`` is a flat columnar dict (host rows) OR any
@@ -176,21 +258,40 @@ def exact_answer(cols, func, cond, group=None,
     dataset as one device chunk — which OOMed exactly at the out-of-core
     scales the source layer unlocks.  Padded rows contribute nothing: the
     batch's ``_mask`` folds into the predicate weight.
+
+    Two-table joins (Q3/Q10 class): pass ``join_key`` (chunk -> fact-side
+    foreign keys) with the replicated ``dim_group``/``dim_valid`` arrays.
+    Each bounded batch gathers its own keys' dimension rows on host —
+    only O(batch + |dim|) resident, never the whole fact table — with the
+    dimension predicate folded into the weight and the group read through
+    the join, mirroring ``gla.make_join_groupby_gla``.
     """
+    if join_key is not None and (dim_group is None or dim_valid is None):
+        raise ValueError("join oracle needs dim_group and dim_valid")
+    dim_group = None if dim_group is None else np.asarray(dim_group)
+    dim_valid = None if dim_valid is None else np.asarray(dim_valid, np.float64)
     acc = None
     out = None
+    grouped = group is not None or (join_key is not None
+                                    and dim_group is not None)
     for chunk in _exact_batches(cols, batch_rows):
         vals = np.asarray(func(chunk), np.float64)
         w = (np.asarray(cond(chunk), np.float64)
              * np.asarray(chunk["_mask"], np.float64))
+        if join_key is not None:
+            keys = np.asarray(join_key(chunk), np.int64)
+            w = w * dim_valid[keys]
+            gid = dim_group[keys]
+        elif group is not None:
+            gid = np.asarray(group(chunk))
         if vals.ndim == 1:
             vals = vals[:, None]
         contrib = vals * w[:, None]
-        if group is None:
+        if not grouped:
             s = contrib.sum(axis=0)
             acc = s if acc is None else acc + s
         else:
             if out is None:
                 out = np.zeros((num_groups, vals.shape[1]))
-            np.add.at(out, np.asarray(group(chunk)), contrib)
-    return out if group is not None else acc
+            np.add.at(out, gid, contrib)
+    return out if grouped else acc

@@ -20,6 +20,14 @@ repro/launch/mesh.py.  Both paths call the *same* per-partition scan core
     (benchmarks/overhead.py).
   * node failure.  ``alive`` weights ([P] or [R, P], repro/dist/fault.py)
     zero dead partitions out of every psum.
+  * replicated join sides.  Two-table plans (DESIGN.md §13) close their
+    probe tables over the worker function — under ``shard_map`` the
+    dimension arrays are trace-time constants replicated to every device
+    (the paper §5.4 strategy), so the fused kernel's probe operands need
+    no mesh annotations and the psum'd states stay bitwise-identical to
+    the vmapped engine's.  Non-additive sketch GLAs (HLL max-merge,
+    ``merge_is_additive=False``) are rejected by the additivity gate
+    below: they run vmapped only.
 
 Equivalence with the vmapped path is asserted in
 tests/test_sharding.py::test_sharded_engine_matches_vmapped_subprocess.

@@ -55,6 +55,14 @@ def _pad128(g: int) -> int:
     return -(-g // 128) * 128
 
 
+# Join probe tables ride inside the kernel's VMEM residency for the whole
+# grid (constant index map — fetched once, revisited every step), so their
+# combined footprint is budgeted against the ~16 MiB/core VMEM the column
+# blocks and accumulators also live in.  Oversized joins fall back to the
+# legacy kernel_cols path (fused_available returns False).
+PROBE_VMEM_BUDGET_BYTES = 4 * 1024 * 1024
+
+
 # ---------------------------------------------------------------------------
 # dispatch accounting (analysis/audit.py: fused_single_dispatch)
 # ---------------------------------------------------------------------------
@@ -90,13 +98,37 @@ def fused_members(gla):
     return None if any(s is None for s in specs) else specs
 
 
+def unique_probes(specs):
+    """Unique ProbeTables across member specs, first-seen order (members
+    built from one ``with_probe_tables`` join share table objects — shared
+    tables enter the kernel once)."""
+    seen = {}
+    for fs in specs:
+        for pt in fs.probe_tables:
+            seen.setdefault(pt.key, pt)
+    return tuple(seen.values())
+
+
+def probe_bytes(gla) -> int:
+    """Combined unique probe-table bytes of ``gla``'s fused contract (0 when
+    none) — the number ``fused_available`` holds under the VMEM budget."""
+    specs = fused_members(gla)
+    return 0 if specs is None else sum(
+        pt.nbytes for pt in unique_probes(specs))
+
+
 def fused_available(gla, columns=None) -> bool:
     """True when every member publishes a fused contract AND the source's
     column table is fusable (no trailing dims — the kernel blocks one
-    [1, L] row per column)."""
-    if fused_members(gla) is None:
+    [1, L] row per column) AND any join probe tables fit the kernel's VMEM
+    probe budget."""
+    specs = fused_members(gla)
+    if specs is None:
         return False
     if columns is not None and any(c.trailing for c in columns):
+        return False
+    probes = unique_probes(specs)
+    if sum(pt.nbytes for pt in probes) > PROBE_VMEM_BUDGET_BYTES:
         return False
     return True
 
@@ -243,7 +275,8 @@ def _unpack_states(outs, specs, meta, states, scanned_delta):
 # the fused round-step kernel (carry-in; scalar, group, and bundles)
 # ---------------------------------------------------------------------------
 
-def fused_round_step(gla, state, cols, encodings=(), *, interpret=None):
+def fused_round_step(gla, state, cols, encodings=(), *, interpret=None,
+                     use_mxu=False):
     """Advance ``state`` over one round-slice in ONE fused dispatch.
 
     Contract (docs/KERNELS.md):
@@ -253,6 +286,14 @@ def fused_round_step(gla, state, cols, encodings=(), *, interpret=None):
       state:      member SumState (bundle: tuple thereof), any f32 shapes
                   matching the GLA's init().
       returns:    same pytree, advanced over the C chunks in chunk order.
+
+    Join members' ``FusedSpec.probe_tables`` enter as extra whole-array
+    operands (constant index map — one VMEM residency for the grid) and are
+    injected into the in-kernel chunk dict under their keys before the
+    member closures run, so the in-kernel gather repeats the scan path's
+    expression tree verbatim.  ``use_mxu=True`` lowers group members via
+    the one-hot MXU contraction instead of segment_sum (compiled TPU; only
+    statistically interchangeable — see ``_chunk_contrib``).
 
     Bitwise guarantee: identical to folding ``gla.accumulate`` over the C
     chunks (``scan.scan_round_step``), including from a checkpointed
@@ -265,6 +306,13 @@ def fused_round_step(gla, state, cols, encodings=(), *, interpret=None):
     if specs is None:
         raise ValueError(
             f"GLA {gla.name!r} does not publish a fused kernel contract")
+    probes = unique_probes(specs)
+    pbytes = sum(pt.nbytes for pt in probes)
+    if pbytes > PROBE_VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"GLA {gla.name!r}: probe tables need {pbytes} bytes, over the "
+            f"{PROBE_VMEM_BUDGET_BYTES}-byte kernel VMEM budget — route "
+            f"this plan through the legacy kernel_cols path")
     is_bundle = bool(gla.members)
     states = tuple(state) if is_bundle else (state,)
     meta = _member_meta(specs)
@@ -278,15 +326,22 @@ def fused_round_step(gla, state, cols, encodings=(), *, interpret=None):
     col_specs = [pl.BlockSpec((1, int(cols[n].shape[1])), lambda i: (i, 0))
                  for n in names]
     tbl_names, tbl_args, tbl_specs = _table_inputs(names, enc_map)
+    probe_args = [jnp.asarray(pt.values) for pt in probes]
+    probe_specs = [pl.BlockSpec(a.shape, lambda i, _nd=a.ndim: (0,) * _nd)
+                   for a in probe_args]
     carry_specs = [pl.BlockSpec(c.shape, lambda i: (0, 0)) for c in carries]
     out_shape = [jax.ShapeDtypeStruct(c.shape, c.dtype) for c in carries]
-    n_cols, n_tbl, n_carry = len(names), len(tbl_names), len(carries)
+    n_cols, n_tbl, n_probe, n_carry = (
+        len(names), len(tbl_names), len(probes), len(carries))
+    kw = {"use_mxu": True} if use_mxu else {}
 
     def body(*refs):
         col_refs = refs[:n_cols]
         tbl_refs = refs[n_cols:n_cols + n_tbl]
-        in_refs = refs[n_cols + n_tbl:n_cols + n_tbl + n_carry]
-        out_refs = refs[n_cols + n_tbl + n_carry:]
+        probe_refs = refs[n_cols + n_tbl:n_cols + n_tbl + n_probe]
+        rest = refs[n_cols + n_tbl + n_probe:]
+        in_refs = rest[:n_carry]
+        out_refs = rest[n_carry:]
 
         @pl.when(pl.program_id(0) == 0)
         def _seed():
@@ -295,9 +350,11 @@ def fused_round_step(gla, state, cols, encodings=(), *, interpret=None):
 
         tables = {n: t[...] for n, t in zip(tbl_names, tbl_refs)}
         chunk = _decode_chunk(names, col_refs, enc_map, tables)
+        for pt, r in zip(probes, probe_refs):
+            chunk[pt.key] = r[...]
         msk = chunk["_mask"].astype(jnp.float32)
         for k, (fs, mrow) in enumerate(zip(specs, meta)):
-            d_s, d_q, d_m = _chunk_contrib(fs, mrow, chunk, msk, L)
+            d_s, d_q, d_m = _chunk_contrib(fs, mrow, chunk, msk, L, **kw)
             out_refs[3 * k][...] = out_refs[3 * k][...] + d_s
             out_refs[3 * k + 1][...] = out_refs[3 * k + 1][...] + d_q
             out_refs[3 * k + 2][...] = out_refs[3 * k + 2][...] + d_m
@@ -305,10 +362,10 @@ def fused_round_step(gla, state, cols, encodings=(), *, interpret=None):
     _DISPATCHES[0] += 1
     outs = pl.pallas_call(
         body, grid=(C,),
-        in_specs=[*col_specs, *tbl_specs, *carry_specs],
+        in_specs=[*col_specs, *tbl_specs, *probe_specs, *carry_specs],
         out_specs=[pl.BlockSpec(c.shape, lambda i: (0, 0)) for c in carries],
         out_shape=out_shape, interpret=interpret,
-    )(*col_args, *tbl_args, *carries)
+    )(*col_args, *tbl_args, *probe_args, *carries)
 
     scanned_delta = jnp.sum(mask.astype(jnp.float32))
     new_states = _unpack_states(outs, specs, meta, states, scanned_delta)
@@ -349,10 +406,14 @@ def fused_prefix_states(gla, cols, encodings=(), *, interpret=None):
     mask = cols["_mask"]
     C, L = int(mask.shape[0]), int(mask.shape[1])
 
+    probes = unique_probes((fs,))
     col_args = [cols[n] for n in names]
     col_specs = [pl.BlockSpec((1, int(cols[n].shape[1])), lambda i: (i, 0))
                  for n in names]
     tbl_names, tbl_args, tbl_specs = _table_inputs(names, enc_map)
+    probe_args = [jnp.asarray(pt.values) for pt in probes]
+    probe_specs = [pl.BlockSpec(a.shape, lambda i, _nd=a.ndim: (0,) * _nd)
+                   for a in probe_args]
     acc_shapes = [jax.ShapeDtypeStruct((1, A_pad), jnp.float32),
                   jax.ShapeDtypeStruct((1, A_pad), jnp.float32),
                   jax.ShapeDtypeStruct((1, 1), jnp.float32)]
@@ -362,12 +423,13 @@ def fused_prefix_states(gla, cols, encodings=(), *, interpret=None):
     acc_specs = [pl.BlockSpec(s.shape, lambda i: (0, 0)) for s in acc_shapes]
     row_specs = [pl.BlockSpec((1, s.shape[1]), lambda i: (i, 0))
                  for s in row_shapes]
-    n_cols, n_tbl = len(names), len(tbl_names)
+    n_cols, n_tbl, n_probe = len(names), len(tbl_names), len(probes)
 
     def body(*refs):
         col_refs = refs[:n_cols]
         tbl_refs = refs[n_cols:n_cols + n_tbl]
-        a_s, a_q, a_m, p_s, p_q, p_m = refs[n_cols + n_tbl:]
+        probe_refs = refs[n_cols + n_tbl:n_cols + n_tbl + n_probe]
+        a_s, a_q, a_m, p_s, p_q, p_m = refs[n_cols + n_tbl + n_probe:]
 
         @pl.when(pl.program_id(0) == 0)
         def _seed():
@@ -377,6 +439,8 @@ def fused_prefix_states(gla, cols, encodings=(), *, interpret=None):
 
         tables = {n: t[...] for n, t in zip(tbl_names, tbl_refs)}
         chunk = _decode_chunk(names, col_refs, enc_map, tables)
+        for pt, r in zip(probes, probe_refs):
+            chunk[pt.key] = r[...]
         msk = chunk["_mask"].astype(jnp.float32)
         d_s, d_q, d_m = _chunk_contrib(fs, meta_row, chunk, msk, L)
         a_s[...] = a_s[...] + d_s
@@ -389,10 +453,10 @@ def fused_prefix_states(gla, cols, encodings=(), *, interpret=None):
     _DISPATCHES[0] += 1
     outs = pl.pallas_call(
         body, grid=(C,),
-        in_specs=[*col_specs, *tbl_specs],
+        in_specs=[*col_specs, *tbl_specs, *probe_specs],
         out_specs=[*acc_specs, *row_specs],
         out_shape=[*acc_shapes, *row_shapes], interpret=interpret,
-    )(*col_args, *tbl_args)
+    )(*col_args, *tbl_args, *probe_args)
     a_s, a_q, a_m, p_s, p_q, p_m = outs
 
     # scanned prefixes: integer-valued live counts — cumsum is exact, so

@@ -10,33 +10,14 @@ prints each query's anytime outcome as it converges or completes a full
 pass.  All queries ride ONE cyclic scan (DESIGN.md §11); arrivals and
 departures reuse the warm jitted step via the padded-slot bundle.
 
-The LLM prefill/decode demo that used to live here moved to
-``examples/llm_serve_demo.py`` (run it directly, or via the deprecated
-``--llm-demo`` flag kept for one release).
+The LLM prefill/decode demo that used to live here is
+``examples/llm_serve_demo.py`` — run it directly.
 """
 from __future__ import annotations
 
 import argparse
 import asyncio
 import time
-import warnings
-
-
-def _llm_demo(argv):
-    """Deprecated shim for the relocated serving demo."""
-    warnings.warn(
-        "`python -m repro.launch.serve --llm-demo` is deprecated: the LLM "
-        "prefill/decode demo moved to examples/llm_serve_demo.py; "
-        "repro.launch.serve now serves OLA queries",
-        DeprecationWarning, stacklevel=2)
-    import pathlib
-    import runpy
-    import sys
-
-    demo = (pathlib.Path(__file__).resolve().parents[3]
-            / "examples" / "llm_serve_demo.py")
-    sys.argv = [str(demo)] + list(argv)
-    runpy.run_path(str(demo), run_name="__main__")
 
 
 async def _run(args):
@@ -95,13 +76,6 @@ async def _run(args):
 
 
 def main(argv=None):
-    import sys
-
-    argv = list(sys.argv[1:] if argv is None else argv)
-    if "--llm-demo" in argv:
-        argv.remove("--llm-demo")
-        return _llm_demo(argv)
-
     ap = argparse.ArgumentParser(
         description="Serve concurrent OLA queries over one shared scan")
     ap.add_argument("--rows", type=int, default=200_000)

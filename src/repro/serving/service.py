@@ -210,6 +210,7 @@ class _Bank:
         self.lo = np.full((1, n_pred), np.inf, np.float32)
         self.hi = np.full((1, n_pred), -np.inf, np.float32)
         self.fresh = np.zeros(1, bool)
+        self.hv = np.full(1, np.inf, np.float32)
         self.generation = np.zeros(1, np.int64)
         self.slots: List[Optional[SlotRecord]] = [None]
         self.states = (self._zero_state(),)
@@ -247,6 +248,7 @@ class _Bank:
         self.hi = np.concatenate(
             [self.hi, np.full((K, n_pred), -np.inf, np.float32)])
         self.fresh = np.concatenate([self.fresh, np.zeros(K, bool)])
+        self.hv = np.concatenate([self.hv, np.full(K, np.inf, np.float32)])
         self.generation = np.concatenate(
             [self.generation, np.zeros(K, np.int64)])
         self.slots.extend([None] * K)
@@ -263,6 +265,7 @@ class _Bank:
         expr_idx, lo, hi = self.family.slot_row(q)
         self.expr[k] = expr_idx
         self.lo[k], self.hi[k] = lo, hi
+        self.hv[k] = np.inf if q.having is None else q.having
         self.fresh[k] = True
         self.generation[k] += 1
         rec = SlotRecord(query=q, bank=self.name, slot=k,
@@ -279,13 +282,18 @@ class _Bank:
         e, lo, hi = self.family.inactive_row()
         self.expr[k] = e
         self.lo[k], self.hi[k] = lo, hi
+        self.hv[k] = np.inf
         # state is NOT cleared here — the next attach marks the slot
         # fresh and the jitted step reclaims the carry in-region
 
     def params(self) -> SlotParams:
+        # hv rides along only for having banks — classic banks keep the
+        # 4-field params their jitted steps were traced with
+        hv = (jnp.asarray(self.hv) if self.name.endswith(":having")
+              else None)
         return SlotParams(expr=jnp.asarray(self.expr),
                           lo=jnp.asarray(self.lo), hi=jnp.asarray(self.hi),
-                          fresh=jnp.asarray(self.fresh))
+                          fresh=jnp.asarray(self.fresh), hv=hv)
 
 
 class SharedScan:

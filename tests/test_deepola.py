@@ -1,0 +1,432 @@
+"""Deep OLA (DESIGN.md §13): the fused join path, nested-estimator
+variance discipline, sketch monoids, and serving HAVING slots.
+
+The claims under test:
+
+  * a two-table Q3-class join runs on the fused single-dispatch kernel
+    (probe tables as kernel operands, inside the VMEM budget) and is
+    bitwise-identical to the scan path — the PR-10 acceptance criterion;
+  * the bounded host-batch float64 oracle extends to join queries and is
+    invariant to its batch size;
+  * nested estimates poison (±inf), never NaN, when a group with |S| <= 1
+    passes HAVING; and the post-hoc monotone envelope never widens even
+    when the predicate flips groups across rounds (hypothesis property);
+  * sketch GLAs (HLL / DKW quantile / count-min) estimate within their
+    stated error model and declare the right merge-additivity;
+  * a HAVING slot in the serving layer stays bitwise-identical to a
+    fresh solo Session over the rounds it witnessed.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.analysis import audit
+from repro.core import engine
+from repro.core import estimators as E
+from repro.core import gla as G
+from repro.core import randomize
+from repro.core import session as SN
+from repro.core import sketch as SK
+from repro.core.spec import QuerySpec
+from repro.core.uda import Estimate
+from repro.data import tpch
+from repro.kernels import fused_agg as FK
+from repro.serving import service as SV
+
+ROWS = 12_000
+PARTS = 4
+D = float(ROWS)
+
+
+def _pack(cols, *, key=5, chunk=256):
+    parts = randomize.randomize_global(
+        {k: jnp.asarray(v) for k, v in cols.items()}, jax.random.key(key),
+        PARTS)
+    return randomize.pack_partitions(parts, chunk_len=chunk)
+
+
+@functools.lru_cache(maxsize=None)
+def _q3():
+    cols, q3, (segment, valid) = tpch.q3_scenario(ROWS)
+    return _pack(cols), q3, (segment, valid), cols
+
+
+def _bits(a, b):
+    return np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+
+def leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(_bits(x, y) for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# fused join path: single dispatch, bitwise vs scan, both engines
+# ---------------------------------------------------------------------------
+
+def test_fused_join_bitwise_vs_scan():
+    shards, q3, _, _ = _q3()
+    assert FK.fused_available(q3)
+    a = engine.run_query(QuerySpec(q3, rounds=4, emit="chunk"), shards)
+    b = engine.run_query(QuerySpec(q3, rounds=4, emit="kernel"), shards)
+    assert leaves_equal(a.final, b.final)
+    assert leaves_equal(a.snapshots, b.snapshots)
+    assert leaves_equal(
+        (a.estimates.estimate, a.estimates.lower, a.estimates.upper),
+        (b.estimates.estimate, b.estimates.lower, b.estimates.upper))
+
+
+def test_fused_join_is_single_dispatch_with_probe_operands():
+    shards, q3, _, _ = _q3()
+    report = audit.audit_plan(q3, shards, rounds=4, emit="kernel",
+                              checks=("fused_single_dispatch",))
+    res = report.result("fused_single_dispatch")
+    assert not res.failed, str(res)
+    assert 0 < res.data["probe_bytes"] <= res.data["probe_budget_bytes"]
+
+
+def test_q10_four_agg_join_bitwise_vs_scan():
+    cols, q10, _ = tpch.q10_scenario(ROWS)
+    shards = _pack(cols)
+    assert FK.fused_available(q10)
+    a = engine.run_query(QuerySpec(q10, rounds=4, emit="chunk"), shards)
+    b = engine.run_query(QuerySpec(q10, rounds=4, emit="kernel"), shards)
+    assert np.asarray(a.final).shape == (tpch.NUM_SEGMENTS, 4)
+    assert leaves_equal(a.final, b.final)
+    assert leaves_equal(a.snapshots, b.snapshots)
+
+
+def test_oversized_probe_tables_fall_back_to_legacy():
+    """A probe set past the VMEM budget keeps the contract but fails
+    fused_available — the engine degrades, it must not try to fuse."""
+    _, q3, _, _ = _q3()
+    rows = FK.PROBE_VMEM_BUDGET_BYTES // 4 + 1
+    big = G.make_join_groupby_gla(
+        tpch.q6_func, tpch.q1_cond, lambda c: c["orderkey"],
+        np.zeros(rows, np.int32), np.ones(rows, np.float32),
+        num_groups=tpch.NUM_SEGMENTS, d_total=D)
+    assert FK.probe_bytes(big) > FK.PROBE_VMEM_BUDGET_BYTES
+    assert not FK.fused_available(big)
+    assert FK.fused_available(q3)
+
+
+def test_session_selects_fused_kernel_path_for_join():
+    shards, q3, _, _ = _q3()
+    sess = SN.Session(QuerySpec(q3, rounds=4, emit="kernel"), shards)
+    assert sess._path == "kernel_fused"
+
+
+needs4 = pytest.mark.skipif(jax.device_count() < 4,
+                            reason="needs 4 devices (fake-device lane)")
+
+
+@needs4
+def test_fused_join_bitwise_sharded():
+    """The sharded engine replicates the probe tables per device and
+    takes the same fused path — bitwise with its own scan path AND the
+    vmapped run."""
+    shards, q3, _, _ = _q3()
+    mesh = jax.make_mesh((4,), ("data",))
+    a = engine.run_query(QuerySpec(q3, rounds=4, emit="chunk"), shards,
+                         mesh=mesh)
+    b = engine.run_query(QuerySpec(q3, rounds=4, emit="kernel"), shards,
+                         mesh=mesh)
+    v = engine.run_query(QuerySpec(q3, rounds=4, emit="kernel"), shards)
+    assert leaves_equal(a.final, b.final)
+    assert leaves_equal(a.snapshots, b.snapshots)
+    assert leaves_equal(b.final, v.final)
+    assert leaves_equal(b.snapshots, v.snapshots)
+
+
+# ---------------------------------------------------------------------------
+# join oracle: bounded host batches, float64, batch-size invariant
+# ---------------------------------------------------------------------------
+
+def test_join_oracle_matches_full_scan():
+    shards, q3, (segment, valid), cols = _q3()
+    res = engine.run_query(QuerySpec(q3, rounds=4), shards)
+    exact = tpch.exact_answer(
+        cols, tpch.q6_func, tpch.q1_cond,
+        num_groups=tpch.NUM_SEGMENTS,
+        join_key=lambda c: c["orderkey"],
+        dim_group=segment, dim_valid=valid)
+    np.testing.assert_allclose(np.asarray(res.final).squeeze(),
+                               np.asarray(exact).squeeze(), rtol=1e-3)
+
+
+def test_join_oracle_batch_size_invariant():
+    _, _, (segment, valid), cols = _q3()
+    kw = dict(num_groups=tpch.NUM_SEGMENTS,
+              join_key=lambda c: c["orderkey"],
+              dim_group=segment, dim_valid=valid)
+    a = tpch.exact_answer(cols, tpch.q6_func, tpch.q1_cond, **kw)
+    b = tpch.exact_answer(cols, tpch.q6_func, tpch.q1_cond,
+                          batch_rows=977, **kw)
+    np.testing.assert_allclose(a, b, rtol=1e-12)
+
+
+def test_join_oracle_requires_dim_arrays():
+    _, _, _, cols = _q3()
+    with pytest.raises(ValueError, match="dim_group and dim_valid"):
+        tpch.exact_answer(cols, tpch.q6_func, tpch.q1_cond,
+                          join_key=lambda c: c["orderkey"])
+
+
+# ---------------------------------------------------------------------------
+# nested-estimator variance discipline (satellite: edge cases)
+# ---------------------------------------------------------------------------
+
+def test_inf_inner_variance_poisons_outer_bound_not_nan():
+    """A passing group with |S| <= 1 (+inf inner variance) must drive the
+    outer bound to ±inf — the point estimate stays finite, nothing NaNs."""
+    inner = Estimate(
+        estimate=jnp.asarray([1.0, 2.0]),
+        lower=jnp.asarray([-jnp.inf, 1.5]),
+        upper=jnp.asarray([jnp.inf, 2.5]),
+        info={"var": jnp.asarray([jnp.inf, 0.25])})
+    out = E.nested_group_estimate(inner, lambda v: v >= 0.0, 0.95)
+    assert float(out.estimate) == 3.0
+    assert np.isposinf(float(out.upper))
+    assert np.isneginf(float(out.lower))
+    assert not np.isnan(np.asarray(
+        (out.estimate, out.lower, out.upper))).any()
+
+
+def test_inf_variance_group_filtered_out_keeps_finite_bounds():
+    """The same +inf group EXCLUDED by HAVING must not leak into the
+    outer variance (jnp.where masking, never 0 * inf)."""
+    inner = Estimate(
+        estimate=jnp.asarray([1.0, 2.0]),
+        lower=jnp.asarray([-jnp.inf, 1.5]),
+        upper=jnp.asarray([jnp.inf, 2.5]),
+        info={"var": jnp.asarray([jnp.inf, 0.25])})
+    out = E.nested_group_estimate(inner, lambda v: v >= 1.5, 0.95)
+    assert float(out.estimate) == 2.0
+    assert np.isfinite(np.asarray(
+        (out.estimate, out.lower, out.upper))).all()
+
+
+def test_single_sample_group_poisons_end_to_end():
+    """Through the real constructors: one accumulated row in a passing
+    group ⇒ ±inf outer bounds, no NaN anywhere in the estimate."""
+    g = G.make_groupby_gla(
+        lambda c: c["x"], lambda c: jnp.ones_like(c["_mask"]),
+        lambda c: c["g"], num_groups=4, d_total=100.0)
+    hv = G.make_having_gla(g, 0.0)
+    chunk = {"x": jnp.asarray([3.0, 5.0, 7.0]),
+             "g": jnp.asarray([0, 0, 1], jnp.int32),
+             "_mask": jnp.asarray([1.0, 0.0, 0.0], jnp.float32)}
+    state = hv.accumulate(hv.init(), chunk)   # |S| = 1 live row total
+    est = hv.estimate(state, 0.95)
+    assert np.isfinite(float(est.estimate))
+    assert np.isneginf(float(est.lower)) and np.isposinf(float(est.upper))
+    assert not np.isnan(np.asarray(jax.tree.leaves(
+        (est.estimate, est.lower, est.upper)))).any()
+
+
+def test_empty_state_estimate_has_no_nan():
+    g = G.make_groupby_gla(
+        lambda c: c["x"], lambda c: jnp.ones_like(c["_mask"]),
+        lambda c: c["g"], num_groups=4, d_total=100.0)
+    hv = G.make_having_gla(g, 0.0)
+    est = hv.estimate(hv.init(), 0.95)
+    assert not np.isnan(np.asarray(jax.tree.leaves(
+        (est.estimate, est.lower, est.upper)))).any()
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-1e6, 1e6), min_size=1, max_size=24),
+       st.lists(st.floats(0.0, 1e6), min_size=1, max_size=24))
+def test_monotone_envelope_never_widens(mids, halves):
+    """However HAVING flips bounce the raw per-round CIs around — any
+    sequence of intervals — the envelope only tightens and stays valid
+    (lo <= hi), including across envelope crossings."""
+    n = min(len(mids), len(halves))
+    mid = np.asarray(mids[:n], np.float32)
+    half = np.asarray(halves[:n], np.float32)
+    lo, hi = E.monotone_envelope(mid - half, mid + half)
+    lo, hi = np.asarray(lo), np.asarray(hi)
+    assert (np.diff(lo) >= 0).all()      # lower bound never drops
+    assert (np.diff(hi) <= 0).all()      # upper bound never rises
+    assert (lo <= hi).all()
+
+
+def test_monotone_envelope_with_inf_rounds():
+    """±inf rounds (poisoned early bounds) pass through: the envelope
+    keeps the tightest finite bounds seen so far."""
+    lo = np.asarray([-np.inf, 1.0, -np.inf, 2.0], np.float32)
+    hi = np.asarray([np.inf, 9.0, np.inf, 8.0], np.float32)
+    elo, ehi = map(np.asarray, E.monotone_envelope(lo, hi))
+    np.testing.assert_array_equal(elo, [-np.inf, 1.0, 1.0, 2.0])
+    np.testing.assert_array_equal(ehi, [np.inf, 9.0, 9.0, 8.0])
+
+
+def test_having_flip_rounds_still_give_monotone_envelope():
+    """End to end: a threshold near a group's estimate flips membership
+    across rounds; raw bounds may jump, the envelope must not widen."""
+    shards, q3, _, _ = _q3()
+    hv = G.make_having_gla(q3, 1200.0)
+    res = engine.run_query(QuerySpec(hv, rounds=6), shards)
+    lo = np.asarray(res.estimates.lower)
+    hi = np.asarray(res.estimates.upper)
+    elo, ehi = map(np.asarray, E.monotone_envelope(lo, hi))
+    assert (np.diff(elo) >= -1e-6).all() and (np.diff(ehi) <= 1e-6).all()
+    assert (elo <= ehi + 1e-6).all()
+    assert not np.isnan(np.concatenate([lo, hi])).any()
+
+
+# ---------------------------------------------------------------------------
+# sketch GLAs
+# ---------------------------------------------------------------------------
+
+def _sketch_shards(rows=ROWS):
+    rng = np.random.default_rng(3)
+    cols = {"k": (np.arange(rows, dtype=np.int32) % 3000),
+            "v": rng.random(rows).astype(np.float32),
+            "h": (np.arange(rows, dtype=np.int32) % 100)}
+    return _pack(cols, key=11)
+
+
+def test_sketch_additivity_flags():
+    """HLL is a max monoid — vmapped engine only; the histogram and CMS
+    sketches are additive and may cross the psum merge."""
+    hll = SK.make_count_distinct_gla(lambda c: c["k"], d_total=D)
+    qtl = SK.make_quantile_gla(lambda c: c["v"], lo=0.0, hi=1.0, d_total=D)
+    cms = SK.make_heavy_hitters_gla(lambda c: c["h"], np.arange(3),
+                                    d_total=D)
+    assert not hll.merge_is_additive
+    assert qtl.merge_is_additive and cms.merge_is_additive
+
+
+def test_hll_count_distinct_within_error_model():
+    shards = _sketch_shards()
+    hll = SK.make_count_distinct_gla(lambda c: c["k"], d_total=D)
+    res = engine.run_query(QuerySpec(hll, rounds=4), shards)
+    est = float(res.final)
+    rel = abs(est - 3000.0) / 3000.0
+    assert rel < 0.1, f"HLL off by {rel:.1%}"
+    e = res.estimates
+    assert float(np.asarray(e.lower)[-1]) <= est <= \
+        float(np.asarray(e.upper)[-1])
+
+
+def test_quantile_dkw_band_contains_truth():
+    shards = _sketch_shards()
+    qtl = SK.make_quantile_gla(lambda c: c["v"], lo=0.0, hi=1.0,
+                               d_total=D, q=0.5)
+    res = engine.run_query(QuerySpec(qtl, rounds=4), shards)
+    est = float(res.final)
+    assert abs(est - 0.5) < 0.05
+    lo = float(np.asarray(res.estimates.lower)[-1])
+    hi = float(np.asarray(res.estimates.upper)[-1])
+    assert lo <= 0.5 <= hi
+
+
+def test_heavy_hitters_cms_bounds():
+    shards = _sketch_shards()
+    cms = SK.make_heavy_hitters_gla(lambda c: c["h"], np.arange(3),
+                                    d_total=D)
+    res = engine.run_query(QuerySpec(cms, rounds=4), shards)
+    est = np.asarray(res.final)                       # full-scan counts
+    true = np.asarray([np.sum(np.arange(ROWS) % 100 == c)
+                       for c in range(3)], np.float32)
+    assert (est >= true - 1e-3).all()                 # CMS never undercounts
+    lo = np.asarray(res.estimates.lower)[-1]
+    hi = np.asarray(res.estimates.upper)[-1]
+    assert (lo <= true).all() and (true <= hi).all()
+
+
+# ---------------------------------------------------------------------------
+# serving: HAVING slots bitwise vs solo sessions
+# ---------------------------------------------------------------------------
+
+SROWS = 8192
+SCHUNK = 128
+
+
+@functools.lru_cache(maxsize=None)
+def _spacked(parts=PARTS):
+    cols = tpch.generate_lineitem(SROWS, seed=1)
+    data = {k: jnp.asarray(v) for k, v in cols.items()}
+    shards = randomize.randomize_global(data, jax.random.key(9), parts)
+    return randomize.pack_partitions(shards, chunk_len=SCHUNK)
+
+
+@functools.lru_cache(maxsize=None)
+def _sfamily():
+    return G.SlotFamily(
+        exprs={"q6": tpch.q6_func},
+        pred_cols=("shipdate",),
+        groups={"rfls": (tpch.q1_group_small, 4)})
+
+
+Q_HAVING = G.SlotQuery("q6", {"shipdate": (100.0, 2000.0)}, group="rfls",
+                       having=10.0)
+Q_GROUP = G.SlotQuery("q6", {"shipdate": (100.0, 2000.0)}, group="rfls")
+
+
+def _solo_estimates(fam, packed, rec, d_total, mesh=None):
+    view = SV.witnessed_view(packed, rec.witnessed)
+    solo = SN.Session(
+        QuerySpec(fam.solo_gla(rec.query, d_total=d_total),
+                  rounds=len(rec.witnessed), emit="chunk"),
+        view, mesh=mesh)
+    prog = None
+    for _ in range(len(rec.witnessed)):
+        prog = solo.step()
+    return prog.estimates
+
+
+def test_having_slot_bitwise_vmapped():
+    fam, packed = _sfamily(), _spacked()
+    scan = SV.SharedScan(fam, packed, rounds=8)
+    rh = scan.attach(Q_HAVING)
+    rg = scan.attach(Q_GROUP)
+    for _ in range(4):
+        scan.step()
+    d_total = float(np.asarray(scan._d_total))
+    for rec in (rh, rg):
+        se = _solo_estimates(fam, packed, rec, d_total)
+        assert _bits(rec.estimate.estimate, se.estimate)
+        assert _bits(rec.estimate.lower, se.lower)
+        assert _bits(rec.estimate.upper, se.upper)
+    # having collapses the group bank to a scalar nested estimate
+    assert np.asarray(rh.estimate.estimate).shape == ()
+    assert np.asarray(rg.estimate.estimate).squeeze().shape == (4,)
+
+
+def test_having_slot_detach_reattach_resets_threshold():
+    fam, packed = _sfamily(), _spacked()
+    scan = SV.SharedScan(fam, packed, rounds=8)
+    r1 = scan.attach(Q_HAVING)
+    scan.step()
+    scan.detach(r1)
+    r2 = scan.attach(G.SlotQuery("q6", {"shipdate": (100.0, 2000.0)},
+                                 group="rfls", having=500.0))
+    scan.step()
+    d_total = float(np.asarray(scan._d_total))
+    se = _solo_estimates(fam, packed, r2, d_total)
+    assert _bits(r2.estimate.estimate, se.estimate)
+    assert _bits(r2.estimate.lower, se.lower)
+    assert _bits(r2.estimate.upper, se.upper)
+
+
+@needs4
+def test_having_slot_bitwise_sharded():
+    fam = _sfamily()
+    packed = _spacked(parts=4)
+    mesh = jax.make_mesh((4,), ("data",))
+    scan = SV.SharedScan(fam, packed, rounds=4, mesh=mesh)
+    rec = scan.attach(Q_HAVING)
+    for _ in range(3):
+        scan.step()
+    d_total = float(np.asarray(scan._d_total))
+    se = _solo_estimates(fam, packed, rec, d_total, mesh=mesh)
+    assert _bits(rec.estimate.estimate, se.estimate)
+    assert _bits(rec.estimate.lower, se.lower)
+    assert _bits(rec.estimate.upper, se.upper)

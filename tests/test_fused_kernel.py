@@ -267,6 +267,26 @@ def test_fused_mxu_padding_spy(shards):
     assert _tb(st) == _tb(ref)  # padding leaked nowhere
 
 
+@pytest.mark.parametrize("name", ["group", "bundle"])
+def test_fused_mxu_one_hot_parity(shards, name):
+    """use_mxu=True (one-hot matmul bucket accumulation) vs the default
+    gather lowering, under interpret mode: the matmul re-associates the
+    per-bucket sums, so the contract is allclose — not bitwise — against
+    both the default kernel and the scan fold."""
+    g = _glas()[name]
+    cols = _flat_cols(shards)
+    ref, _ = _fold_scan(g, cols)
+    base = SC.fused_round_step(g, g.init(), cols)
+    try:
+        mxu = SC.fused_round_step(g, g.init(), cols, use_mxu=True)
+    except Exception as e:  # pragma: no cover - backend-dependent pads
+        pytest.skip(f"one-hot pad shapes infeasible in interpret mode: {e}")
+    for got, want in ((mxu, base), (mxu, ref)):
+        for x, y in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=1e-5, atol=1e-3)
+
+
 def test_fused_single_dispatch_accounting(shards, raw):
     """One pallas_call per round-slice for a whole bundle — counted
     structurally under eval_shape, plain and encoded alike."""

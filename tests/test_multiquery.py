@@ -190,10 +190,11 @@ def test_kernel_bundle_one_dispatch_per_round_slice(shards, workload):
     The all-FusedSpec workload takes the fused path — its in-kernel
     segment_sum lowers to scatter loops under interpret mode, so the
     dispatch count comes from trace-time ``pallas_call`` accounting, not
-    a while-op census.  A join member (kernel_cols-only — its probe
-    tables cannot enter a kernel body) forces the legacy one-hot
-    batcher, where the HLO invariant still holds: exactly P×R while ops,
-    every one a Pallas grid loop."""
+    a while-op census.  Join members now fuse too (probe tables ride as
+    kernel operands, DESIGN.md §13), so the legacy one-hot batcher is
+    exercised by stripping the join's fused contract (``fused=None`` —
+    the oversized-probe fallback path), where the HLO invariant still
+    holds: exactly P×R while ops, every one a Pallas grid loop."""
     if jax.default_backend() != "cpu":
         pytest.skip("interpret-mode lowering check is CPU-specific")
     from repro.kernels import fused_agg as FK
@@ -209,7 +210,8 @@ def test_kernel_bundle_one_dispatch_per_round_slice(shards, workload):
     legacy = [*workload, gla.make_join_groupby_gla(
         tpch.q1_func, tpch.q6_cond(tpch.Q6_LOW_WINDOW),
         lambda c: c["suppkey"], supp, valid,
-        num_groups=tpch.NUM_NATIONS, d_total=float(ROWS), num_aggs=4)]
+        num_groups=tpch.NUM_NATIONS, d_total=float(ROWS),
+        num_aggs=4).with_(fused=None)]
     fn = jax.jit(lambda sh: engine.run_queries(
         legacy, sh, rounds=ROUNDS, emit="kernel")).lower(shards).compile()
     n_while = HC.count_ops(fn.as_text(), "while", trip_scaled=False)

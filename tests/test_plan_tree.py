@@ -1,0 +1,322 @@
+"""Composable plan trees (DESIGN.md §13): PlanNode lowering onto the
+flat GLA constructors, the QuerySpec integration, and the C010 contract.
+
+The load-bearing property is *bitwise identity*: a one-node tree over a
+classic flat plan must lower to the byte-identical constructor call, so
+flat-plan finals/snapshots/bounds survive the refactor unchanged on both
+engines.  Lowering-rule violations (two Joins, a SumAgg root over a
+Join, group= conflicts) must fail loudly at plan-build time, not deep in
+a trace."""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.analysis import contracts
+from repro.core import engine, gla, randomize
+from repro.core.spec import (CountDistinct, Filter, GroupAgg, Having,
+                             HeavyHitters, Join, PlanNode, Quantile,
+                             QuerySpec, Scan, SumAgg, lower_plan)
+from repro.data import tpch
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+ROWS = 12_000
+PARTS = 4
+D = float(ROWS)
+
+
+@pytest.fixture(scope="module")
+def shards():
+    cols = tpch.generate_lineitem(ROWS, seed=23)
+    cols["orderkey"] = tpch.generate_orders_fk(ROWS, seed=7)
+    parts = randomize.randomize_global(
+        {k: jnp.asarray(v) for k, v in cols.items()}, jax.random.key(5), PARTS)
+    return randomize.pack_partitions(parts, chunk_len=256)
+
+
+def leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.asarray(x).tobytes() == np.asarray(y).tobytes()
+        for x, y in zip(la, lb))
+
+
+def assert_same_run(flat, tree, shards, emit):
+    """Flat GLA vs lowered tree: finals, snapshots and bounds bitwise."""
+    a = engine.run_query(QuerySpec(flat, rounds=4, emit=emit), shards)
+    b = engine.run_query(QuerySpec(tree, rounds=4, emit=emit), shards)
+    assert leaves_equal(a.final, b.final)
+    assert leaves_equal(a.snapshots, b.snapshots)
+    assert leaves_equal(
+        (a.estimates.estimate, a.estimates.lower, a.estimates.upper),
+        (b.estimates.estimate, b.estimates.lower, b.estimates.upper))
+
+
+# ---------------------------------------------------------------------------
+# flat plans through one-node trees: bitwise-identical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("emit", ["chunk", "kernel"])
+def test_flat_sum_lowers_bitwise(shards, emit):
+    """SumAgg(Filter(Scan)) with the SAME cond closure the flat spelling
+    uses lowers to the byte-identical make_sum_gla call."""
+    cond = tpch.q6_cond(tpch.Q6_LOW_WINDOW)
+    flat = gla.make_sum_gla(tpch.q6_func, cond, d_total=D)
+    tree = SumAgg(Filter(Scan(D), cond), tpch.q6_func)
+    assert_same_run(flat, tree, shards, emit)
+
+
+@pytest.mark.parametrize("emit", ["chunk", "kernel"])
+def test_flat_groupby_lowers_bitwise(shards, emit):
+    flat = gla.make_groupby_gla(
+        tpch.q1_func, tpch.q1_cond, tpch.q1_group_small, num_groups=4,
+        d_total=D, num_aggs=4)
+    tree = GroupAgg(Filter(Scan(D), tpch.q1_cond), tpch.q1_func,
+                    num_groups=4, group=tpch.q1_group_small, num_aggs=4)
+    assert_same_run(flat, tree, shards, emit)
+
+
+@pytest.mark.parametrize("emit", ["chunk", "kernel"])
+def test_join_tree_lowers_bitwise(shards, emit):
+    """GroupAgg over a Join stage lowers to make_join_groupby_gla with
+    the verbatim probe arrays — same closures, bitwise-identical run."""
+    segment, valid = tpch.orders_table(max(1, ROWS // 4), seed=14)
+
+    def okey(c):
+        return c["orderkey"]
+
+    flat = gla.make_join_groupby_gla(
+        tpch.q6_func, tpch.q1_cond, okey, segment, valid,
+        num_groups=tpch.NUM_SEGMENTS, d_total=D)
+    tree = GroupAgg(
+        Join(Filter(Scan(D), tpch.q1_cond), okey, segment, valid),
+        tpch.q6_func, num_groups=tpch.NUM_SEGMENTS)
+    assert_same_run(flat, tree, shards, emit)
+
+
+needs4 = pytest.mark.skipif(jax.device_count() < 4,
+                            reason="needs 4 devices (fake-device lane)")
+
+
+@needs4
+def test_flat_vs_tree_bitwise_sharded(shards):
+    """The sharded engine sees the same lowered GLA: one-node trees stay
+    bitwise-identical to their flat spelling under shard_map + psum."""
+    mesh = jax.make_mesh((4,), ("data",))
+    cond = tpch.q6_cond(tpch.Q6_LOW_WINDOW)
+    flat = gla.make_sum_gla(tpch.q6_func, cond, d_total=D)
+    tree = SumAgg(Filter(Scan(D), cond), tpch.q6_func)
+    a = engine.run_query(QuerySpec(flat, rounds=4), shards, mesh=mesh)
+    b = engine.run_query(QuerySpec(tree, rounds=4), shards, mesh=mesh)
+    assert leaves_equal(a.final, b.final)
+    assert leaves_equal(a.snapshots, b.snapshots)
+    assert leaves_equal(
+        (a.estimates.estimate, a.estimates.lower, a.estimates.upper),
+        (b.estimates.estimate, b.estimates.lower, b.estimates.upper))
+
+
+def test_multi_filter_conjunction(shards):
+    """Stacked Filter stages conjoin multiplicatively — same result as a
+    single combined predicate (allclose: the combined closure differs)."""
+    lo, hi = tpch.Q6_LOW_WINDOW
+
+    def c_lo(c):
+        return (c["shipdate"] >= lo).astype(jnp.float32)
+
+    def c_hi(c):
+        return (c["shipdate"] < hi).astype(jnp.float32)
+
+    def c_both(c):
+        return c_lo(c) * c_hi(c)
+
+    tree = SumAgg(Filter(Filter(Scan(D), c_lo), c_hi), tpch.q6_func)
+    flat = gla.make_sum_gla(tpch.q6_func, c_both, d_total=D)
+    a = engine.run_query(QuerySpec(flat, rounds=4), shards)
+    b = engine.run_query(QuerySpec(tree, rounds=4), shards)
+    np.testing.assert_allclose(np.asarray(a.final), np.asarray(b.final),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# QuerySpec integration
+# ---------------------------------------------------------------------------
+
+def test_queryspec_lowers_tree_and_keeps_provenance():
+    tree = SumAgg(Filter(Scan(D), tpch.q1_cond), tpch.q6_func)
+    qs = QuerySpec(tree, rounds=4)
+    assert qs.plan is tree
+    assert qs.gla.estimate is not None          # a lowered, runnable GLA
+    assert not isinstance(qs.gla, PlanNode)
+
+
+def test_queryspec_lowers_sequences_mixing_trees_and_glas():
+    tree = SumAgg(Filter(Scan(D), tpch.q1_cond), tpch.q6_func)
+    flat = gla.make_sum_gla(tpch.q6_func, tpch.q1_cond, d_total=D)
+    qs = QuerySpec([tree, flat], rounds=4)
+    assert qs.is_multi and len(qs.gla) == 2
+    assert qs.gla[1] is flat                    # GLAs pass through untouched
+    assert qs.plan == [tree, flat]
+
+
+def test_plan_node_lower_method_matches_lower_plan(shards):
+    tree = GroupAgg(Filter(Scan(D), tpch.q1_cond), tpch.q1_func,
+                    num_groups=4, group=tpch.q1_group_small, num_aggs=4)
+    g = tree.lower()
+    a = engine.run_query(QuerySpec(g, rounds=4), shards)
+    b = engine.run_query(QuerySpec(tree, rounds=4), shards)
+    assert leaves_equal(a.final, b.final)
+
+
+def test_having_tree_lowers_to_composed_gla(shards):
+    tree = Having(
+        GroupAgg(Filter(Scan(D), tpch.q1_cond), tpch.q6_func,
+                 num_groups=4, group=tpch.q1_group_small),
+        threshold=10.0)
+    g = lower_plan(tree)
+    assert g.name.startswith("having[")
+    res = engine.run_query(QuerySpec(g, rounds=4), shards)
+    est = res.estimates
+    assert np.isfinite(np.asarray(est.estimate)).all()
+    # the nested estimate is scalar (sum over passing groups)
+    assert np.asarray(est.estimate).shape[-1:] in ((), (4,))
+
+
+# ---------------------------------------------------------------------------
+# lowering-rule violations fail at plan-build time
+# ---------------------------------------------------------------------------
+
+def _ctrue(c):
+    return jnp.ones_like(c["_mask"])
+
+
+def _jtree(child=None):
+    seg = np.zeros(8, np.int32)
+    val = np.ones(8, np.float32)
+    return Join(child or Scan(D), _ctrue, seg, val)
+
+
+def test_two_join_stages_rejected():
+    with pytest.raises(ValueError, match="one Join stage"):
+        lower_plan(GroupAgg(_jtree(_jtree()), tpch.q6_func, num_groups=8))
+
+
+def test_sum_root_over_join_rejected():
+    with pytest.raises(ValueError, match="GroupAgg root"):
+        lower_plan(SumAgg(_jtree(), tpch.q6_func))
+
+
+def test_groupagg_plain_scan_needs_group():
+    with pytest.raises(ValueError, match="needs group="):
+        lower_plan(GroupAgg(Scan(D), tpch.q1_func, num_groups=4))
+
+
+def test_groupagg_over_join_rejects_group_kwarg():
+    with pytest.raises(ValueError, match="drop group="):
+        lower_plan(GroupAgg(_jtree(), tpch.q6_func, num_groups=8,
+                            group=tpch.q1_group_small))
+
+
+def test_sketch_roots_reject_join_stages():
+    for root in (CountDistinct(_jtree(), _ctrue),
+                 Quantile(_jtree(), _ctrue, lo=0.0, hi=1.0),
+                 HeavyHitters(_jtree(), _ctrue, np.arange(4))):
+        with pytest.raises(ValueError, match="plain filtered scans"):
+            lower_plan(root)
+
+
+def test_nested_estimator_roots_rejected():
+    inner = SumAgg(Scan(D), tpch.q6_func)
+    with pytest.raises(ValueError, match="below another root"):
+        lower_plan(SumAgg(inner, tpch.q6_func))
+
+
+def test_non_root_lowering_rejected():
+    with pytest.raises(ValueError, match="not an estimator root"):
+        lower_plan(Filter(Scan(D), _ctrue))
+    with pytest.raises(TypeError, match="PlanNode"):
+        lower_plan("not a plan")
+
+
+# ---------------------------------------------------------------------------
+# C010: every PlanNode subclass declares monoid + estimator
+# ---------------------------------------------------------------------------
+
+def test_c010_requires_monoid_and_estimator(tmp_path):
+    bad = tmp_path / "plan_nodes.py"
+    bad.write_text(textwrap.dedent("""
+        class PlanNode:
+            monoid = "none"
+            estimator = "none"
+
+        class MySketch(PlanNode):
+            monoid = "max"
+            # estimator missing
+
+        class Indirect(MySketch):
+            pass
+    """))
+    viols = contracts.lint_file(bad, tmp_path)
+    codes = sorted({v.code for v in viols})
+    assert codes == ["C010"]
+    names = {v.message.split()[2] for v in viols}
+    assert names == {"MySketch", "Indirect"}
+
+
+def test_c010_accepts_declared_nodes(tmp_path):
+    ok = tmp_path / "plan_nodes.py"
+    ok.write_text(textwrap.dedent("""
+        class PlanNode:
+            monoid = "none"
+            estimator = "none"
+
+        class Good(PlanNode):
+            monoid = "sum"
+            estimator = "horvitz"
+    """))
+    assert not [v for v in contracts.lint_file(ok, tmp_path)
+                if v.code == "C010"]
+
+
+def test_c010_clean_on_real_spec_module():
+    spec_path = Path(SRC) / "repro" / "core" / "spec.py"
+    assert not [v for v in contracts.lint_file(spec_path, Path(SRC).parent)
+                if v.code == "C010"]
+
+
+# ---------------------------------------------------------------------------
+# facade: import repro stays jax-free; the new names resolve
+# ---------------------------------------------------------------------------
+
+def test_import_repro_stays_jax_free():
+    """The lazy-exports facade must not drag in jax (the contracts CI job
+    runs on a bare interpreter); plan-tree exports must still resolve."""
+    code = textwrap.dedent("""
+        import sys
+        sys.path.insert(0, %r)
+        import repro
+        assert "jax" not in sys.modules, "import repro pulled in jax"
+        assert "PlanNode" in repro.__all__ and "compose" in repro.__all__
+        # spec.py is jax-free too: building a tree must not import jax
+        tree = repro.SumAgg(repro.Filter(repro.Scan(8.0), None), None)
+        assert "jax" not in sys.modules, "plan-tree build pulled in jax"
+        print("OK")
+    """ % SRC)
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr
+    assert "OK" in out.stdout
+
+
+def test_facade_exports_resolve():
+    for name in ("PlanNode", "Scan", "Filter", "Join", "SumAgg", "GroupAgg",
+                 "Having", "CountDistinct", "Quantile", "HeavyHitters",
+                 "lower_plan", "compose", "make_having_gla",
+                 "monotone_envelope", "make_count_distinct_gla",
+                 "make_quantile_gla", "make_heavy_hitters_gla"):
+        assert getattr(repro, name) is not None
